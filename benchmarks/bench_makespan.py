@@ -1,0 +1,55 @@
+"""Paper Fig. 4: makespan of 120-config LoRA hyperparameter tuning —
+PLoRA vs Min GPU vs Max GPU, across the paper's §7 model grid, on the
+A100-40G x8 cost model (EXPERIMENTS.md §Calibration for the fit)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.model_zoo import PAPER_MODELS, PAPER_SEQ, PAPER_STEPS
+from repro.configs.base import default_search_space
+from repro.sched.cost_model import A100_40G, CostModel
+from repro.sched.planner import max_gpu_schedule, min_gpu_schedule, plan
+
+
+def run(fast: bool = False) -> List[Dict]:
+    rows = []
+    n_cfg = 24 if fast else 120
+    models = (
+        ["qwen2.5-3b", "qwen2.5-7b"]
+        if fast
+        else list(PAPER_MODELS)
+    )
+    space = default_search_space(n_cfg, PAPER_SEQ)
+    for name in models:
+        cfg = PAPER_MODELS[name]()
+        cm = CostModel(cfg, A100_40G)
+        s_p = plan(cm, space, 8, PAPER_SEQ, PAPER_STEPS)
+        s_min = min_gpu_schedule(cm, space, 8, PAPER_SEQ, PAPER_STEPS)
+        s_max = max_gpu_schedule(cm, space, 8, PAPER_SEQ, PAPER_STEPS)
+        rows.append(
+            {
+                "bench": "makespan",
+                "model": name,
+                "plora_s": s_p.makespan,
+                "min_gpu_s": s_min.makespan,
+                "max_gpu_s": s_max.makespan,
+                "speedup_vs_min": s_min.makespan / s_p.makespan,
+                "speedup_vs_max": s_max.makespan / s_p.makespan,
+                "ar_bound": s_p.ar(),
+                "n_configs": n_cfg,
+            }
+        )
+    return rows
+
+
+def main():
+    for r in run():
+        print(
+            f"makespan,{r['model']},plora={r['plora_s']:.0f}s,"
+            f"vs_min={r['speedup_vs_min']:.2f}x,vs_max={r['speedup_vs_max']:.2f}x,"
+            f"AR={r['ar_bound']:.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Benchmark driver: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # full sweep
+  PYTHONPATH=src python -m benchmarks.run --fast     # CI-sized
+  PYTHONPATH=src python -m benchmarks.run --only kernels,makespan
+
+Prints one CSV block per benchmark and a summary of the paper-claim checks.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def _section(title):
+    print(f"\n==== {title} " + "=" * max(0, 60 - len(title)))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None, help="comma-separated bench names")
+    ap.add_argument("--json", default=None, help="dump all rows to this file")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (
+        bench_breakdown,
+        bench_job_throughput,
+        bench_kernels,
+        bench_makespan,
+        bench_planner,
+        bench_quality,
+        bench_roofline,
+    )
+
+    benches = {
+        "kernels": ("Table 7/8: packed-kernel speedup", bench_kernels.run),
+        "makespan": ("Fig. 4: hyperparameter-tuning makespan", bench_makespan.run),
+        "job_throughput": ("Fig. 5: packed-job throughput", bench_job_throughput.run),
+        "job_throughput_a10": ("Fig. 7 / §7.5: A10 + QLoRA", lambda fast: bench_job_throughput.run_a10(fast)),
+        "breakdown": ("Fig. 6: speedup breakdown", bench_breakdown.run),
+        "planner": ("Thm 6.1: AR bound / planner cost", bench_planner.run),
+        "quality": ("Tables 2/3/6: quality sweep (real training)", bench_quality.run),
+        "roofline": ("Assignment: roofline terms (from dry-run)", bench_roofline.run),
+    }
+    selected = list(benches) if not args.only else args.only.split(",")
+
+    all_rows = []
+    checks = []
+    for name in selected:
+        title, fn = benches[name]
+        _section(title)
+        t0 = time.perf_counter()
+        try:
+            rows = fn(args.fast)
+        except Exception as e:  # keep the driver alive across benches
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+            continue
+        wall = time.perf_counter() - t0
+        all_rows.extend(rows)
+        if rows:
+            last_keys = None
+            for r in rows:
+                keys = list(r.keys())
+                if keys != last_keys:
+                    print(",".join(keys))
+                    last_keys = keys
+                print(",".join(_fmt(r.get(k)) for k in keys))
+        print(f"# {name}: {len(rows)} rows in {wall:.1f}s")
+
+        # paper-claim checks
+        if name == "makespan" and rows:
+            best = max(r["speedup_vs_min"] for r in rows)
+            checks.append(("makespan speedup vs MinGPU (paper <=7.52x)", f"{best:.2f}x"))
+        if name == "job_throughput" and rows:
+            best = max(r["speedup_vs_min"] for r in rows)
+            checks.append(("job throughput vs MinGPU (paper <=12.8x)", f"{best:.2f}x"))
+        if name == "kernels" and rows:
+            n32 = [r for r in rows if r["n_pack"] == 32]
+            if n32:
+                best = max(r["fwd_speedup"] for r in n32)
+                checks.append(("packed-kernel N=32 fwd speedup (paper ~26-31x on GPU; CPU-XLA differs)", f"{best:.2f}x"))
+        if name == "planner" and rows:
+            ar = max(r["ar_bound"] for r in rows)
+            checks.append(("planner AR bound (paper 1.05-1.14)", f"{ar:.3f}"))
+        if name == "quality" and rows:
+            s = rows[0]
+            checks.append(
+                ("best vs default accuracy gain (paper +2.9..23.4pp)",
+                 f"+{100 * s['best_minus_default']:.1f}pp"),
+            )
+
+    _section("paper-claim summary")
+    for k, v in checks:
+        print(f"{k}: {v}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(all_rows, f, indent=1)
+    return 0
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,68 @@
+"""Multi-LoRA serving: load tuned adapters from a checkpoint pool and serve a
+batched request stream where different requests use different adapters — the
+SLoRA/Punica setting the paper's tuning output feeds into.
+
+  PYTHONPATH=src python examples/serve_multilora.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LoraConfig, get_config, reduced
+from repro.core.adapter import pack_meta
+from repro.models.model import init_model
+from repro.serve.decode import generate, make_prefill, make_serve_step, pad_caches
+from repro.train.data import packed_batch_iterator
+from repro.train.trainer import train_loop
+
+
+def main():
+    cfg = reduced(get_config("gemma3-1b"))  # sliding-window family
+    print(f"serving arch: {cfg.name} (window={cfg.attention.sliding_window}, "
+          f"global every {cfg.attention.global_every})")
+
+    # 1. quickly tune two adapters (stand-in for the checkpoint pool)
+    configs = [
+        LoraConfig(rank=8, alpha=16.0, learning_rate=5e-3, batch_size=2),
+        LoraConfig(rank=16, alpha=8.0, learning_rate=2e-3, batch_size=2),
+    ]
+    meta = pack_meta(configs)
+    base, lora = init_model(jax.random.PRNGKey(0), cfg, meta)
+    out = train_loop(
+        base, lora, cfg, meta,
+        packed_batch_iterator(cfg, configs, seq=32), n_steps=10,
+    )
+    lora = out["lora"]
+    print(f"tuned {meta.n} adapters "
+          f"(final losses: {np.round(np.asarray(out['history'][-1]), 3)})")
+
+    # 2. batched multi-adapter serving: requests [n*B, (n+1)*B) ride adapter n
+    b_per_adapter = 2
+    nb = meta.n * b_per_adapter
+    prompts = jax.random.randint(jax.random.PRNGKey(7), (nb, 8), 0, cfg.vocab_size)
+
+    t0 = time.perf_counter()
+    tokens = generate(base, lora, cfg, meta, prompts, n_new=12)
+    wall = time.perf_counter() - t0
+    print(f"\ngenerated {tokens.shape} tokens for {nb} requests "
+          f"({meta.n} adapters x {b_per_adapter} requests) in {wall:.1f}s")
+    for n in range(meta.n):
+        row = tokens[n * b_per_adapter]
+        print(f"  adapter {n} sample: {np.asarray(row)[:8]}")
+
+    # 3. explicit prefill -> step-by-step decode loop (server shape)
+    prefill_fn = make_prefill(cfg, meta)
+    step_fn = make_serve_step(cfg, meta)
+    lg, caches = prefill_fn(base, lora, {"tokens": prompts})
+    caches = pad_caches(caches, prompts.shape[1] + 4)
+    tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)
+    for i in range(3):
+        tok, lg, caches = step_fn(base, lora, caches, tok[:, None],
+                                  jnp.int32(prompts.shape[1] + i))
+    print(f"\nmanual decode loop OK, last tokens: {np.asarray(tok)}")
+
+
+if __name__ == "__main__":
+    main()

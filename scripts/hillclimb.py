@@ -1,0 +1,43 @@
+"""§Perf hillclimb driver: compile one (arch x shape) combo under a named
+variant and print the full roofline row + collective breakdown + memory
+analysis — the measurement half of the hypothesis->change->measure loop.
+
+  PYTHONPATH=src python scripts/hillclimb.py ARCH SHAPE [variant ...]
+
+variants: baseline | seq_parallel | decode_seq_shard  (combinable)
+"""
+import json
+import sys
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    variants = set(sys.argv[3:]) or {"baseline"}
+    from repro.launch.dryrun import lower_combo
+
+    rep, info = lower_combo(
+        arch, shape,
+        seq_parallel="seq_parallel" in variants,
+        decode_seq_shard="decode_seq_shard" in variants,
+        fsdp="fsdp" in variants,
+    )
+    row = rep.row(info["n_devices"])
+    row["variant"] = "+".join(sorted(variants))
+    row["coll_breakdown"] = {
+        k: f"{v:.3g}" for k, v in rep.coll_breakdown.items()
+    }
+    row.update(compile_s=round(info["compile_s"], 1))
+    print("RESULT=" + json.dumps(row, default=str))
+    print(
+        f"\n{arch} x {shape} [{row['variant']}]\n"
+        f"  compute    {rep.t_compute*1e3:10.1f} ms\n"
+        f"  memory     {rep.t_memory*1e3:10.1f} ms\n"
+        f"  collective {rep.t_collective*1e3:10.1f} ms   <- {rep.bottleneck} bound\n"
+        f"  peak mem   {row['peak_memory_gb']:10.2f} GB/dev\n"
+        f"  coll kinds {row['coll_breakdown']}\n"
+        f"  useful-FLOP ratio {row['useful_flop_ratio']}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Optimized-variant sweep: apply the §Perf flags across every combo where
+they are applicable and record the optimized roofline rows next to the
+baselines (EXPERIMENTS.md §Perf sweep-wide table).
+
+  PYTHONPATH=src python scripts/optimized_sweep.py [--out results/optimized]
+
+Variant policy (DESIGN.md §9):
+  - train/prefill, dense or SSM arch < 10B params  -> fsdp
+  - train/prefill, dense arch >= 10B               -> seq_parallel
+  - MoE archs (EP shard_map needs the model axis)  -> seq_parallel
+  - decode/long shapes, attention archs            -> decode_seq_shard
+  - decode, pure-SSM archs                         -> baseline (nothing to fix)
+"""
+import argparse
+import json
+import os
+import sys
+import time
+import traceback
+
+
+def pick_variant(arch_cfg, shape_kind, n_params):
+    moe = arch_cfg.moe.enabled
+    if shape_kind in ("train", "prefill"):
+        if moe:
+            return {"seq_parallel": True}
+        if n_params < 10e9:
+            return {"fsdp": True}
+        return {"seq_parallel": True}
+    # decode shapes
+    if arch_cfg.family == "ssm":
+        return {}
+    return {"decode_seq_shard": True}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/optimized")
+    ap.add_argument("--archs", default=None, help="comma-separated subset")
+    args = ap.parse_args()
+
+    from repro.configs import INPUT_SHAPES, get_config, list_archs
+    from repro.launch.dryrun import applicable, lower_combo
+    from repro.sched.cost_model import model_param_count
+
+    archs = args.archs.split(",") if args.archs else [
+        a for a in list_archs() if a != "qwen25-7b"
+    ]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    out_path = args.out + ".jsonl"
+    n_ok = n_all = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        n_params = model_param_count(cfg)
+        for shape_name, shape in INPUT_SHAPES.items():
+            if not applicable(arch, shape_name):
+                continue
+            kw = pick_variant(cfg, shape.kind, n_params)
+            variant = "+".join(sorted(k for k, v in kw.items() if v)) or "baseline"
+            if variant == "baseline":
+                continue  # baseline already in dryrun2.jsonl
+            n_all += 1
+            tag = f"{arch} x {shape_name} [{variant}]"
+            t0 = time.time()
+            try:
+                rep, info = lower_combo(arch, shape_name, **kw)
+                row = rep.row(info["n_devices"])
+                row.update(status="ok", variant=variant,
+                           compile_s=round(info["compile_s"], 1))
+                n_ok += 1
+                print(f"[ok] {tag}: compute {rep.t_compute*1e3:.1f}ms "
+                      f"memory {rep.t_memory*1e3:.1f}ms "
+                      f"coll {rep.t_collective*1e3:.1f}ms -> {rep.bottleneck} "
+                      f"| peak {row['peak_memory_gb']:.2f} GB "
+                      f"({time.time()-t0:.0f}s)", flush=True)
+            except Exception as e:
+                row = {"arch": arch, "shape": shape_name, "variant": variant,
+                       "status": "fail", "error": str(e)[:300]}
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+            with open(out_path, "a") as f:
+                f.write(json.dumps(row) + "\n")
+    print(f"\n{n_ok}/{n_all} optimized combos ok")
+
+
+if __name__ == "__main__":
+    main()

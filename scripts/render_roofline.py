@@ -1,0 +1,70 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun.jsonl.
+
+  PYTHONPATH=src python scripts/render_roofline.py [results/dryrun.jsonl]
+"""
+import json
+import sys
+
+
+def load(path):
+    latest = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            r = json.loads(line)
+            latest[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+    return sorted(latest.values(), key=lambda r: (r.get("arch") or "", r.get("shape") or "", r.get("mesh") or ""))
+
+
+def fmt_ms(s):
+    if s is None:
+        return "-"
+    return f"{1e3 * s:,.1f}"
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl"
+    rows = load(path)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    failed = [r for r in rows if r.get("status") == "fail"]
+
+    print(f"### Dry-run matrix: {len(ok)} ok / {len(skipped)} documented skips"
+          f" / {len(failed)} failed\n")
+    print("| arch | shape | mesh | compile s | peak GB/dev | FLOPs/dev | bytes/dev | coll B/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in ok:
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r.get('compile_s', 0):.0f} | {r.get('peak_memory_gb', 0):.2f} | "
+            f"{r.get('flops_per_device', 0):.3g} | {r.get('bytes_per_device', 0):.3g} | "
+            f"{r.get('collective_bytes_per_device', 0):.3g} |"
+        )
+    if skipped:
+        print("\nskips (full-attention archs at long_500k, DESIGN.md §6):")
+        for r in skipped:
+            print(f"  - {r['arch']} x {r['shape']} x {r['mesh']}")
+    if failed:
+        print("\nFAILED:")
+        for r in failed:
+            print(f"  - {r['arch']} x {r['shape']} x {r['mesh']}: {r.get('error', '')[:200]}")
+
+    # roofline table: single-pod only per assignment
+    print("\n### Roofline (single-pod 16x16, per device)\n")
+    print("| arch | shape | compute ms | memory ms | collective ms | bottleneck | useful-FLOP ratio |")
+    print("|---|---|---|---|---|---|---|")
+    for r in ok:
+        if r.get("mesh") != "16x16":
+            continue
+        ufr = r.get("useful_flop_ratio")
+        print(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(r.get('t_compute_s'))} | "
+            f"{fmt_ms(r.get('t_memory_s'))} | {fmt_ms(r.get('t_collective_s'))} | "
+            f"{r.get('bottleneck')} | {ufr if ufr is None else round(ufr, 3)} |"
+        )
+
+
+if __name__ == "__main__":
+    main()

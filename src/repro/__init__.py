@@ -1,0 +1,2 @@
+"""repro — PLoRA: efficient LoRA hyperparameter tuning, in JAX for TPU pods."""
+__version__ = "0.1.0"

@@ -1,0 +1,27 @@
+from repro.configs.base import (
+    INPUT_SHAPES,
+    AttentionConfig,
+    LoraConfig,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    default_search_space,
+    get_config,
+    list_archs,
+    reduced,
+)
+
+__all__ = [
+    "INPUT_SHAPES",
+    "AttentionConfig",
+    "LoraConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "ShapeConfig",
+    "SSMConfig",
+    "default_search_space",
+    "get_config",
+    "list_archs",
+    "reduced",
+]

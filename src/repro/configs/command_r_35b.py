@@ -1,0 +1,22 @@
+"""command-r-35b — dense GQA, no-bias [hf:CohereForAI/c4ai-command-r-v01].
+
+40L d_model=8192, 64 heads (GQA kv=8, head_dim=128), d_ff=22528, vocab=256000.
+"""
+from repro.configs.base import AttentionConfig, ModelConfig, register
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="command-r-35b",
+        family="dense",
+        n_layers=40,
+        d_model=8192,
+        d_ff=22_528,
+        vocab_size=256_000,
+        attention=AttentionConfig(
+            n_heads=64, n_kv_heads=8, head_dim=128, use_bias=False, rope_theta=8e6
+        ),
+        tie_embeddings=True,
+        citation="hf:CohereForAI/c4ai-command-r-v01",
+    )

@@ -1,0 +1,24 @@
+"""internvl2-1b — VLM: InternViT + Qwen2-0.5B LM backbone [arXiv:2404.16821].
+
+LM backbone: 24L d_model=896, 14 heads (GQA kv=2, head_dim=64), d_ff=4864,
+vocab=151655. The vision encoder + projector is a STUB: ``input_specs``
+provides 256 precomputed patch embeddings (B, 256, 896) spliced as a prefix.
+"""
+from repro.configs.base import AttentionConfig, ModelConfig, register
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-1b",
+        family="vlm",
+        n_layers=24,
+        d_model=896,
+        d_ff=4864,
+        vocab_size=151_655,
+        attention=AttentionConfig(
+            n_heads=14, n_kv_heads=2, head_dim=64, use_bias=True, rope_theta=1e6
+        ),
+        n_patch_tokens=256,
+        citation="arXiv:2404.16821 (InternVL2); LM = Qwen2-0.5B",
+    )

@@ -1,0 +1,34 @@
+"""jamba-v0.1-52b — Mamba+attention 1:7 hybrid with MoE [arXiv:2403.19887].
+
+32L d_model=4096; attention layers (GQA 32H kv=8, head_dim=128) every 8th
+layer; MoE (16 experts top-2, d_ff=14336) every other layer; vocab=65536.
+Jamba uses Mamba-1 blocks (d_state=16); we use the SSD (Mamba-2) formulation
+for the scan with d_state=16 — same recurrence family (DESIGN.md §7).
+"""
+from repro.configs.base import (
+    AttentionConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    register,
+)
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-v0.1-52b",
+        family="hybrid",
+        n_layers=32,
+        d_model=4096,
+        d_ff=14_336,
+        vocab_size=65_536,
+        attention=AttentionConfig(n_heads=32, n_kv_heads=8, head_dim=128),
+        moe=MoEConfig(n_experts=16, top_k=2, d_expert=14_336, moe_every=2, impl="ep"),
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=64, chunk_size=256),
+        attn_every=8,
+        attn_offset=3,
+        lora_targets=("q", "k", "v", "o", "ssm_in", "ssm_out"),
+        supports_long_context=True,
+        citation="arXiv:2403.19887 (Jamba)",
+    )

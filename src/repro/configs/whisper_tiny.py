@@ -1,0 +1,29 @@
+"""whisper-tiny — encoder-decoder ASR backbone [arXiv:2212.04356].
+
+4L enc + 4L dec, d_model=384, 6 heads (kv=6, head_dim=64), d_ff=1536,
+vocab=51865. The mel-spectrogram + conv frontend is a STUB: ``input_specs``
+provides precomputed frame embeddings (B, 1500, 384). Positional encoding is
+RoPE in this reproduction (whisper uses sinusoidal/learned absolute; the
+backbone compute/sharding is unchanged — noted in DESIGN.md §7).
+"""
+from repro.configs.base import AttentionConfig, ModelConfig, register
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-tiny",
+        family="audio",
+        n_layers=4,
+        d_model=384,
+        d_ff=1536,
+        vocab_size=51_865,
+        attention=AttentionConfig(n_heads=6, n_kv_heads=6, head_dim=64, use_bias=True),
+        mlp_kind="gelu",
+        norm_kind="layernorm",
+        encoder_layers=4,
+        encoder_seq_len=1500,
+        lora_targets=("q", "v", "gate", "up", "down"),
+        max_seq_len=448,
+        citation="arXiv:2212.04356 (Whisper)",
+    )

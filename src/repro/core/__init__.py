@@ -1,0 +1,19 @@
+"""Packed-LoRA core: the paper's primary contribution as a composable module."""
+from repro.core.adapter import PackMeta, init_lora_pair, pack_meta, single_meta
+from repro.core.packed_lora import (
+    extract_adapter,
+    lora_linear,
+    merge_adapter,
+    merge_model,
+)
+
+__all__ = [
+    "PackMeta",
+    "init_lora_pair",
+    "pack_meta",
+    "single_meta",
+    "extract_adapter",
+    "lora_linear",
+    "merge_adapter",
+    "merge_model",
+]

@@ -1,0 +1,127 @@
+"""Packed-LoRA application, merging, and per-adapter extraction.
+
+``lora_linear`` is the single entry point every model layer uses: a frozen
+base matmul plus (optionally) the packed adapter delta computed by the
+grouped kernels in ``repro.kernels.ops``. The activation carries the pack as
+the outermost batch factor — x has shape (N*B, ..., d_in) with adapter n
+owning the contiguous slice [n*B, (n+1)*B) — so packing never changes the
+math of any single adapter (paper §3.2: per-adapter computation is identical
+to single-adapter fine-tuning).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import packed_lora_delta
+
+
+def lora_linear(
+    x: jnp.ndarray,
+    params: dict,
+    lora: Optional[dict],
+    scales: Optional[jnp.ndarray],
+    n_pack: int = 1,
+    *,
+    impl: Optional[str] = None,
+) -> jnp.ndarray:
+    """y = x @ W (+ bias) + packed-LoRA delta.
+
+    x: (N*B, ..., d_in) — pack dim folded into the leading batch dim.
+    params: {"w": (d_in, d_out)[, "b": (d_out,)]} — frozen base weights.
+    lora: {"a": (N, d_in, r), "b": (N, r, d_out)} or None.
+    scales: (N,) effective alpha/r multipliers.
+    """
+    w = params["w"]
+    y = x @ w.astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    if lora is not None:
+        lead = x.shape[:-1]
+        d_in, d_out = w.shape
+        # keep the per-adapter batch dim B un-merged: (N, B, ..., d_in).
+        # Splitting NB -> (N, B) is always sharding-representable, whereas
+        # merging (B, S) is not when B is sharded over the model axis (FSDP
+        # execution mode) — an unrepresentable merge would make XLA insert a
+        # full activation all-reduce per projection (EXPERIMENTS.md §Perf).
+        xp = x.reshape(n_pack, x.shape[0] // n_pack, *x.shape[1:-1], d_in)
+        delta = packed_lora_delta(
+            xp,
+            lora["a"].astype(x.dtype),
+            lora["b"].astype(x.dtype),
+            scales,
+            impl=impl,
+        )
+        y = y + delta.reshape(*lead, d_out)
+    return y
+
+
+def merge_adapter(base_w: jnp.ndarray, lora: dict, scale: float, idx: int) -> jnp.ndarray:
+    """Fold adapter `idx` into the base weight: W + scale * A_i @ B_i
+    (paper Fig. 1 inference-time merge). Works for plain (N, d, r) packs and
+    layer-stacked (L, N, d, r) packs — the pack axis is always ndim-3."""
+    a = lora["a"]
+    b = lora["b"]
+    a = jnp.take(a, idx, axis=a.ndim - 3)
+    b = jnp.take(b, idx, axis=b.ndim - 3)
+    delta = jnp.einsum("...dr,...rk->...dk", a, b)
+    return (base_w + scale * delta.astype(base_w.dtype)).astype(base_w.dtype)
+
+
+def merge_model(base_params, lora_params, scales, idx: int):
+    """Return a new base param tree with adapter `idx` merged into every
+    target projection (produces a plain, adapter-free checkpoint)."""
+
+    def _merge(path, leaf, lora_leaf):
+        if lora_leaf is None:
+            return leaf
+        return merge_adapter(leaf, lora_leaf, float(scales[idx]), idx)
+
+    def walk(bp, lp):
+        if isinstance(bp, dict):
+            out = {}
+            for k, v in bp.items():
+                lsub = lp.get(k) if isinstance(lp, dict) else None
+                if (
+                    k == "w"
+                    and isinstance(lp, dict)
+                    and "a" in lp
+                    and "b" in lp
+                ):
+                    out[k] = merge_adapter(v, lp, float(scales[idx]), idx)
+                else:
+                    out[k] = walk(v, lsub if lsub is not None else {})
+            return out
+        return bp
+
+    return walk(base_params, lora_params or {})
+
+
+def extract_adapter(lora_params, idx: int, ranks=None):
+    """Slice one adapter's (unpadded if ranks given) weights out of a pack —
+    what the execution engine stores in the checkpoint pool. The pack dim is
+    axis 0 for plain leaves and axis 1 under a layer-stacked "blocks" subtree
+    (axis 0 there is the scanned layer-block axis)."""
+
+    def take(path, leaf):
+        in_blocks = any(getattr(k, "key", None) == "blocks" for k in path)
+        return jnp.take(leaf, idx, axis=1 if in_blocks else 0)
+
+    sliced = jax.tree_util.tree_map_with_path(take, lora_params)
+    if ranks is not None:
+        r = int(ranks[idx])
+
+        def crop(path_leaf):
+            return path_leaf
+
+        def walk(t):
+            if isinstance(t, dict) and set(t) == {"a", "b"}:
+                return {"a": t["a"][..., :r], "b": t["b"][..., :r, :]}
+            if isinstance(t, dict):
+                return {k: walk(v) for k, v in t.items()}
+            return t
+
+        sliced = walk(sliced)
+    return sliced

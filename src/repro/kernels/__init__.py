@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for packed-LoRA grouped GEMMs (paper §5)."""

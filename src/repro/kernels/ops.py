@@ -1,0 +1,114 @@
+"""Jit'd public ops for packed-LoRA computation.
+
+``packed_lora_delta(x, a, b, alpha)`` computes the adapter-side contribution
+``alpha_n * (x_n @ A_n) @ B_n`` for all N packed adapters with a custom VJP
+whose four gradient dataflows mirror the paper's backward cases (§5.2):
+
+  case 1  dB    = (xA)^T @ g        (tile over output dim, contract over seq)
+  case 2  d(xA) = g @ B^T           (tile over seq + rank, contract over k)
+  case 3  dA    = x^T @ d(xA)       (tile over d + rank, contract over seq)
+  case 4  dx    = d(xA) @ A^T       (tile over seq + d, contract over rank)
+
+All four are the grouped-GEMM primitive with transposed operands; on TPU the
+rank-dim reduction of case 4 is a single K-step inside the tile (rank <= 128),
+avoiding the scratch-buffer bookkeeping the paper describes on GPU.
+
+Backend selection:
+  impl="pallas"  : the Pallas kernel (interpret=True automatically off-TPU)
+  impl="xla"     : batched einsum (same packed semantics, XLA-fused GEMMs)
+  impl="auto"    : pallas on TPU, xla elsewhere (default — CPU tests/benches
+                   measure real XLA wall-clock, TPU gets the custom kernel)
+
+``alpha`` is a hyperparameter, not a trainable weight: its cotangent is zero.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.packed_matmul import packed_matmul as _pallas_matmul
+
+_IMPL_DEFAULT = "auto"
+
+
+def set_default_impl(impl: str) -> None:
+    global _IMPL_DEFAULT
+    assert impl in ("auto", "pallas", "xla")
+    _IMPL_DEFAULT = impl
+
+
+def _resolve(impl: Optional[str]) -> str:
+    impl = impl or _IMPL_DEFAULT
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return impl
+
+
+def grouped_matmul(x, w, scale=None, *, impl: Optional[str] = None):
+    """out[n] = scale[n] * x[n] @ w[n]; dispatches pallas/xla.
+
+    x may carry extra token dims (N, ..., K). The Pallas kernel is a 3D
+    grouped GEMM, so those dims are flattened around the call; the xla path
+    keeps them (sharding-friendly under pjit — see packed_matmul_ref)."""
+    if _resolve(impl) == "pallas":
+        lead = x.shape[1:-1]
+        x3 = x.reshape(x.shape[0], -1, x.shape[-1])
+        out = _pallas_matmul(
+            x3, w, scale, interpret=jax.default_backend() != "tpu"
+        )
+        return out.reshape(x.shape[0], *lead, w.shape[-1])
+    return _ref.packed_matmul_ref(x, w, scale)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _packed_lora_delta(x, a, b, alpha, impl):
+    xa = grouped_matmul(x, a, impl=impl)
+    return grouped_matmul(xa, b, alpha, impl=impl)
+
+
+def _fwd(x, a, b, alpha, impl):
+    out = _packed_lora_delta(x, a, b, alpha, impl)
+    return out, (x, a, b, alpha)
+
+
+def _bwd(impl, res, g):
+    x, a, b, alpha = res
+    g = g.astype(x.dtype)
+    # recompute xA (cheap: (N, ..., r<=128)) instead of saving — rematerialize
+    xa = grouped_matmul(x, a, impl=impl)  # (N, ..., r)
+    g_s = g * alpha.reshape(alpha.shape[0], *([1] * (g.ndim - 1))).astype(g.dtype)
+    if x.ndim == 3:
+        # 3D: all four cases go through the grouped kernel (paper §5.2)
+        # case 1: dB = (xA)^T @ g_s               (N, r, k)
+        db = grouped_matmul(jnp.swapaxes(xa, 1, 2), g_s, impl=impl)
+        # case 2: d(xA) = g_s @ B^T               (N, T, r)
+        dxa = grouped_matmul(g_s, jnp.swapaxes(b, 1, 2), impl=impl)
+        # case 3: dA = x^T @ d(xA)                (N, d, r)
+        da = grouped_matmul(jnp.swapaxes(x, 1, 2), dxa, impl=impl)
+        # case 4: dx = d(xA) @ A^T                (N, T, d)
+        dx = grouped_matmul(dxa, jnp.swapaxes(a, 1, 2), impl=impl)
+        return dx, da, db, jnp.zeros_like(alpha)
+    # N-D (FSDP pack layout): weight grads contract over ALL token dims
+    db = jnp.einsum("n...r,n...k->nrk", xa, g_s)
+    dxa = grouped_matmul(g_s, jnp.swapaxes(b, 1, 2), impl=impl)
+    da = jnp.einsum("n...d,n...r->ndr", x, dxa)
+    dx = grouped_matmul(dxa, jnp.swapaxes(a, 1, 2), impl=impl)
+    return dx, da.astype(a.dtype), db.astype(b.dtype), jnp.zeros_like(alpha)
+
+
+_packed_lora_delta.defvjp(_fwd, _bwd)
+
+
+def packed_lora_delta(x, a, b, alpha, *, impl: Optional[str] = None):
+    """alpha_n * (x_n @ A_n) @ B_n for N packed adapters.
+
+    x: (N, T, d); a: (N, d, r); b: (N, r, k); alpha: (N,) -> (N, T, k).
+    Heterogeneous ranks are zero-padded to the pack's bucket rank by
+    ``repro.core.pack``; padded columns/rows contribute exactly zero to both
+    the output and every gradient.
+    """
+    return _packed_lora_delta(x, a, b, alpha.astype(jnp.float32), impl)

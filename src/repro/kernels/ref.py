@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the packed-LoRA kernels.
+
+These define the semantics that the Pallas kernels must match bit-for-bit
+(up to float accumulation order). Shapes:
+
+  x     : (N, M, K)   N = number of packed adapters, M = batch*seq tokens
+  w     : (N, K, L)
+  scale : (N,) or None
+  out   : (N, M, L)   out[n] = scale[n] * x[n] @ w[n]
+
+``packed_lora_delta_ref`` is the full adapter delta  alpha_n * (x_n A_n) B_n
+with zero-padded heterogeneous ranks (padding contributes exactly 0).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def packed_matmul_ref(
+    x: jnp.ndarray, w: jnp.ndarray, scale: Optional[jnp.ndarray] = None
+) -> jnp.ndarray:
+    """x: (N, ..., K); w: (N, K, L) -> (N, ..., L). The token dims stay
+    un-merged ("n...k") so that under pjit a pack batch (N, B, S, d) with B
+    sharded over the model axis never needs an unrepresentable (B,S)-merge
+    resharding (FSDP execution mode, DESIGN.md §9)."""
+    out = jnp.einsum(
+        "n...k,nkl->n...l", x, w, preferred_element_type=jnp.float32
+    )
+    if scale is not None:
+        out = out * scale.reshape(scale.shape[0], *([1] * (out.ndim - 1)))
+    return out.astype(x.dtype)
+
+
+def packed_lora_delta_ref(
+    x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, alpha: jnp.ndarray
+) -> jnp.ndarray:
+    """alpha_n * (x_n @ A_n) @ B_n  for each adapter n."""
+    xa = packed_matmul_ref(x, a)
+    return packed_matmul_ref(xa, b, scale=alpha)
+
+
+def sequential_lora_delta_ref(x, a, b, alpha):
+    """The paper's naive baseline: loop adapters one by one (python loop,
+    one small GEMM pair per adapter) — used by benchmarks, not by the system."""
+    outs = []
+    for n in range(x.shape[0]):
+        xa = x[n] @ a[n]
+        outs.append(alpha[n] * (xa @ b[n]))
+    return jnp.stack(outs).astype(x.dtype)

@@ -1,0 +1,199 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination
+on the production mesh with 512 placeholder host devices.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch starcoder2-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] --out results/dryrun
+
+Per combination this prints compiled.memory_analysis() (proves the program
+fits 16 GB/chip) and cost_analysis() (FLOPs/bytes for the roofline), parses
+collective bytes from the optimized HLO, and appends a JSON row consumed by
+EXPERIMENTS.md §Dry-run/§Roofline.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.sharding import (  # noqa: E402
+    batch_axes,
+    batch_specs,
+    cache_specs,
+    make_dist,
+    param_specs,
+    to_named,
+)
+from repro.launch.specs import (  # noqa: E402
+    decode_inputs,
+    default_pack,
+    model_shapes,
+    train_inputs,
+)
+from repro.roofline.analysis import analyze  # noqa: E402
+from repro.sched.cost_model import active_param_count  # noqa: E402
+
+SKIP_LONG = {
+    # pure full-attention archs: no sub-quadratic path => long_500k skipped
+    # (DESIGN.md §6). whisper's decoder is 448-token by construction.
+    "qwen3-moe-30b-a3b", "whisper-tiny", "minicpm3-4b", "command-r-35b",
+    "starcoder2-7b", "grok-1-314b", "internvl2-1b", "qwen25-7b",
+}
+
+
+def applicable(arch: str, shape_name: str) -> bool:
+    return shape_name != "long_500k" or arch not in SKIP_LONG
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+                compile_: bool = True, chunk_q: int = 512,
+                vocab_chunk: int = 512, seq_parallel: bool = False,
+                decode_seq_shard: bool = False, fsdp: bool = False):
+    """Returns (RooflineReport | None, info dict)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(map(str, mesh.devices.shape))
+    meta = default_pack(shape)
+    nb = shape.global_batch
+    dist = make_dist(mesh, nb, seq_sharded_residuals=seq_parallel, fsdp=fsdp)
+    base_s, lora_s = model_shapes(cfg, meta)
+    base_sp = to_named(param_specs(base_s, cfg, mesh), mesh)
+    lora_sp = to_named(param_specs(lora_s, cfg, mesh), mesh)
+    n_active = active_param_count(cfg)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            from repro.train.optimizer import init_opt_state
+            from repro.train.trainer import make_train_step
+
+            batch_s = train_inputs(cfg, shape)
+            batch_sp = to_named(batch_specs(batch_s, mesh, include_model=fsdp), mesh)
+            opt_s = jax.eval_shape(init_opt_state, lora_s)
+            opt_sp = to_named(param_specs(opt_s, cfg, mesh), mesh)
+            step = make_train_step(
+                cfg, meta, dist=dist, chunk_q=chunk_q,
+                vocab_chunk=vocab_chunk, jit=False,
+            )
+            jitted = jax.jit(
+                step, in_shardings=(base_sp, lora_sp, opt_sp, batch_sp)
+            )
+            lowered = jitted.lower(base_s, lora_s, opt_s, batch_s)
+            tokens = nb * shape.seq_len
+            model_flops = 6.0 * n_active * tokens
+        elif shape.kind == "prefill":
+            from repro.serve.decode import make_prefill
+
+            batch_s = train_inputs(cfg, shape)
+            batch_s.pop("labels")
+            batch_sp = to_named(batch_specs(batch_s, mesh, include_model=fsdp), mesh)
+            fn = make_prefill(cfg, meta, dist=dist, chunk_q=chunk_q, jit=False)
+            jitted = jax.jit(fn, in_shardings=(base_sp, lora_sp, batch_sp))
+            lowered = jitted.lower(base_s, lora_s, batch_s)
+            model_flops = 2.0 * n_active * nb * shape.seq_len
+        else:  # decode
+            from repro.serve.decode import make_serve_step
+
+            caches_s, token_s, pos_s = decode_inputs(cfg, shape)
+            caches_sp = to_named(
+                cache_specs(caches_s, mesh, nb, seq_over_model=decode_seq_shard),
+                mesh,
+            )
+            ba = batch_axes(mesh, nb)
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+
+            token_sp = NamedSharding(mesh, P(ba if ba else None, None))
+            pos_sp = NamedSharding(mesh, P())
+            fn = make_serve_step(cfg, meta, dist=dist, jit=False)
+            jitted = jax.jit(
+                fn, in_shardings=(base_sp, lora_sp, caches_sp, token_sp, pos_sp)
+            )
+            lowered = jitted.lower(base_s, lora_s, caches_s, token_s, pos_s)
+            model_flops = 2.0 * n_active * nb
+        t_lower = time.time() - t0
+        if not compile_:
+            return None, {"lower_s": t_lower}
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    rep = analyze(compiled, arch, shape_name, mesh_name, model_flops=model_flops)
+    info = {"lower_s": t_lower, "compile_s": t_compile,
+            "n_devices": mesh.devices.size}
+    return rep, info
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL rows here")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="sequence-parallel residuals (beyond-paper, §Perf)")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    archs = [a for a in archs if a != "qwen25-7b"] if args.all else archs
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    rows = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape_name} x {'2x16x16' if mp else '16x16'}"
+                if not applicable(arch, shape_name):
+                    print(f"[skip] {tag}: full-attention arch, long_500k n/a")
+                    rows.append({"arch": arch, "shape": shape_name,
+                                 "mesh": "2x16x16" if mp else "16x16",
+                                 "status": "skipped"})
+                    continue
+                try:
+                    rep, info = lower_combo(
+                        arch, shape_name, multi_pod=mp,
+                        compile_=not args.no_compile,
+                        seq_parallel=args.seq_parallel,
+                    )
+                    if rep is None:
+                        print(f"[lowered] {tag} in {info['lower_s']:.1f}s")
+                        rows.append({"arch": arch, "shape": shape_name,
+                                     "status": "lowered", **info})
+                        continue
+                    row = rep.row(info["n_devices"])
+                    row.update(status="ok", **info)
+                    rows.append(row)
+                    print(
+                        f"[ok] {tag}: lower {info['lower_s']:.0f}s compile "
+                        f"{info['compile_s']:.0f}s | compute {rep.t_compute*1e3:.2f}ms "
+                        f"memory {rep.t_memory*1e3:.2f}ms collective "
+                        f"{rep.t_collective*1e3:.2f}ms -> {rep.bottleneck} | "
+                        f"peak {row['peak_memory_gb']:.2f} GB/dev | useful-FLOP "
+                        f"{row['useful_flop_ratio'] and round(row['useful_flop_ratio'],3)}"
+                    )
+                except Exception as e:
+                    print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+                    traceback.print_exc()
+                    rows.append({"arch": arch, "shape": shape_name,
+                                 "mesh": "2x16x16" if mp else "16x16",
+                                 "status": "fail", "error": str(e)[:500]})
+                if args.out:
+                    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                    with open(args.out + ".jsonl", "a") as f:
+                        f.write(json.dumps(rows[-1]) + "\n")
+    n_ok = sum(r.get("status") == "ok" for r in rows)
+    print(f"\n{n_ok} ok / {len(rows)} combos")
+
+
+if __name__ == "__main__":
+    main()

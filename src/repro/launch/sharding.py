@@ -1,0 +1,248 @@
+"""Sharding rules: params, LoRA packs, optimizer state, batches, caches.
+
+Megatron-style tensor parallelism over the "model" axis; batch over
+("pod","data"); large LoRA operands FSDP-sharded over "data" (gathered by XLA
+where used — adapters are small relative to the base, Appendix A.1.1).
+
+All rules are name+shape based and divisibility-guarded, so the same code
+shards a 314B Grok and a 2-layer smoke model (where most dims simply fall
+back to replication).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import DistContext
+
+
+def _axis_size(mesh, name) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _div(n: int, mesh, axes) -> bool:
+    if isinstance(axes, str):
+        axes = (axes,)
+    total = 1
+    for a in axes:
+        total *= _axis_size(mesh, a)
+    return n % total == 0 and total > 1
+
+
+def batch_axes(mesh, nb: int, *, include_model: bool = False) -> Tuple[str, ...]:
+    """Axes for the pack-major batch dim. Order is ("data", "pod"): the pack
+    dim is the OUTER factor of the batch and pack size == data-axis size, so
+    data shard k owns exactly adapter k's samples; the per-pack batch splits
+    over "pod". This keeps the (N, B*S, d) packed-kernel reshape exactly
+    representable — no resharding inside the layer stack (DESIGN.md §4).
+
+    ``include_model`` (FSDP execution mode, §Perf): also shard the batch over
+    the model axis. Weights stay sharded as before but are now all-gathered
+    per use (ZeRO-3 style) instead of activations being tensor-parallel —
+    the right trade when weight bytes << activation bytes (small models,
+    huge token batches)."""
+    order = [a for a in ("data", "pod") if a in mesh.axis_names]
+    if include_model and "model" in mesh.axis_names:
+        order.append("model")
+    out = []
+    for a in order:
+        if _div(nb, mesh, tuple(out + [a])):
+            out.append(a)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+_COL_PARALLEL = {"q", "k", "v", "gate", "up", "q_b", "kv_b_k", "kv_b_v", "zx", "dt"}
+_ROW_PARALLEL = {"o", "down", "out"}
+
+
+def _param_rule(path_keys, leaf, cfg: ModelConfig, mesh) -> P:
+    """PartitionSpec for one base-param leaf; extra leading dims (layer
+    stacks) are padded with None."""
+    names = [getattr(k, "key", str(k)) for k in path_keys]
+    leafname = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    gparent = names[-3] if len(names) >= 3 else ""
+    shape = leaf.shape
+
+    def pad(spec_tail):
+        return P(*([None] * (len(shape) - len(spec_tail)) + list(spec_tail)))
+
+    # --- embeddings / head ---
+    if parent == "embed" and leafname == "w":
+        return pad([("model" if _div(shape[0], mesh, "model") else None), None])
+    if parent == "lm_head" and leafname == "w":
+        return pad([None, "model" if _div(shape[-1], mesh, "model") else None])
+
+    # --- MoE experts (E, d, f) / (E, f, d) ---
+    if parent == "moe" or gparent == "moe":
+        if leafname in ("w_gate", "w_up", "w_down") or parent in (
+            "w_gate", "w_up", "w_down",
+        ):
+            e, a, b = shape[-3], shape[-2], shape[-1]
+            if cfg.moe.impl == "ep" and _div(e, mesh, "model"):
+                return pad(["model", None, None])
+            # dense/FSDP path (grok): f over model, other big dim over data
+            is_down = leafname == "w_down" or parent == "w_down"
+            if is_down:  # (E, f, d)
+                return pad([
+                    None,
+                    "model" if _div(a, mesh, "model") else None,
+                    "data" if _div(b, mesh, "data") else None,
+                ])
+            return pad([
+                None,
+                "data" if _div(a, mesh, "data") else None,
+                "model" if _div(b, mesh, "model") else None,
+            ])
+        return pad([None] * len(shape))  # router etc.
+
+    # --- LoRA packs {a, b}: the pack dim N shards over "data" (adapter k's
+    # gradient comes only from data shard k — zero-communication adapter
+    # grads); the big matrix dim follows the base weight's TP sharding.
+    if leafname == "a" and len(shape) >= 3:
+        n, d_in = shape[-3], shape[-2]
+        npack = "data" if _div(n, mesh, "data") else None
+        return pad([npack, None, None])
+    if leafname == "b" and len(shape) >= 3:
+        n, d_out = shape[-3], shape[-1]
+        npack = "data" if _div(n, mesh, "data") else None
+        if parent in _COL_PARALLEL and _div(d_out, mesh, "model"):
+            return pad([npack, None, "model"])
+        return pad([npack, None, None])
+
+    # --- plain linears ---
+    if leafname == "w" and len(shape) >= 2:
+        if parent in _COL_PARALLEL:
+            return pad([None, "model" if _div(shape[-1], mesh, "model") else None])
+        if parent in _ROW_PARALLEL:
+            return pad(["model" if _div(shape[-2], mesh, "model") else None, None])
+        return pad([None, None])
+    if leafname == "b" and len(shape) >= 1:  # bias vectors
+        if parent in _COL_PARALLEL and _div(shape[-1], mesh, "model"):
+            return pad(["model"])
+        return pad([None])
+
+    # norms, conv, scalars, a_log, dt_bias, ...
+    return pad([None] * len(shape))
+
+
+def param_specs(params_shape, cfg: ModelConfig, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_rule(path, leaf, cfg, mesh), params_shape
+    )
+
+
+def to_named(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch_shape, mesh, *, include_model: bool = False):
+    """tokens/labels (NB, S); frames/patches (NB, S, d)."""
+
+    def rule(path, leaf):
+        ba = batch_axes(mesh, leaf.shape[0], include_model=include_model)
+        tail = [None] * (len(leaf.shape) - 1)
+        return P(ba if ba else None, *tail)
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+def cache_specs(cache_shape, mesh, nb: int, *, seq_over_model: bool = False):
+    """KV caches: batch over data axes when divisible, else seq over data;
+    head_dim / feature dims over model when divisible.
+
+    ``seq_over_model`` (beyond-paper §Perf optimization — flash-decode
+    layout): shard the cache SEQUENCE dim over the model axis instead of
+    head_dim. Attention against the cache then keeps every byte of cache
+    local (each shard scores its own positions; softmax statistics and the
+    weighted sum reduce with tiny all-reduces) instead of XLA replicating the
+    cache to satisfy the head_dim contraction."""
+    ba = batch_axes(mesh, nb)
+    da = data_axes(mesh)
+
+    def rule(path, leaf):
+        names = [getattr(k, "key", str(k)) for k in path.__iter__()]
+        leafname = names[-1]
+        shape = leaf.shape
+
+        def spec(tail):
+            return P(*([None] * (len(shape) - len(tail)) + list(tail)))
+
+        if leafname in ("k", "v"):  # (NB, S, KV, hd)
+            b = ba if ba else None
+            if seq_over_model and _div(shape[-3], mesh, "model"):
+                return spec([b, "model", None, None])
+            s = da if (not ba and _div(shape[-3], mesh, da)) else None
+            hd = "model" if _div(shape[-1], mesh, "model") else None
+            return spec([b, s, None, hd])
+        if leafname == "ckv":  # (NB, S, kvlr)
+            b = ba if ba else None
+            if seq_over_model and _div(shape[-2], mesh, "model"):
+                return spec([b, "model", None])
+            s = da if (not ba and _div(shape[-2], mesh, da)) else None
+            return spec([b, s, "model" if _div(shape[-1], mesh, "model") else None])
+        if leafname == "k_rope":  # (NB, S, dr)
+            b = ba if ba else None
+            if seq_over_model and _div(shape[-2], mesh, "model"):
+                return spec([b, "model", None])
+            s = da if (not ba and _div(shape[-2], mesh, da)) else None
+            return spec([b, s, None])
+        if leafname == "conv":  # (NB, K-1, C)
+            return spec([ba if ba else None, None,
+                         "model" if _div(shape[-1], mesh, "model") else None])
+        if leafname == "state":  # (NB, H, P, N)
+            return spec([ba if ba else None,
+                         "model" if _div(shape[-3], mesh, "model") else None,
+                         None, None])
+        return spec([None] * len(shape))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def make_dist(
+    mesh,
+    nb: Optional[int] = None,
+    *,
+    seq_sharded_residuals: bool = False,
+    fsdp: bool = False,
+) -> DistContext:
+    """nb: the step's leading batch size — the shard_map data axes must match
+    how the batch is actually sharded (e.g. long_500k b=1 is unsharded).
+    ``fsdp``: batch also sharded over the model axis (see batch_axes); the
+    model axis then carries no tensor parallelism at runtime, so MoE "ep"
+    shard_map is not used in this mode."""
+    da = (
+        data_axes(mesh)
+        if nb is None
+        else batch_axes(mesh, nb, include_model=fsdp)
+    )
+    return DistContext(
+        mesh=mesh,
+        data_axes=da,
+        model_axis=None if fsdp else "model",
+        model_axis_size=1 if fsdp else _axis_size(mesh, "model"),
+        seq_sharded_residuals=seq_sharded_residuals,
+        fsdp=fsdp,
+    )

@@ -1,0 +1,84 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``train_inputs``  -> {"tokens", "labels"[, "frames"/"patches"]}
+``decode_inputs`` -> (caches, token, pos) against a seq_len-capacity cache.
+
+Pack layout for the assigned shapes: 8 packed adapters (rank 32, the paper's
+job-level setting) splitting the global batch, except long_500k (b=1, single
+adapter). VLM/audio shapes keep the assigned token budget: for internvl2 the
+patch prefix replaces the first n_patch positions; whisper decodes against
+its (stubbed) 1500-frame encoder output.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LoraConfig, ModelConfig, ShapeConfig
+from repro.core.adapter import PackMeta, pack_meta
+from repro.models.model import init_caches, init_model
+
+
+def default_pack(shape: ShapeConfig) -> PackMeta:
+    # pack size == data-axis size (16): data shard k owns adapter k's samples
+    n = 1 if shape.global_batch < 16 else 16
+    return pack_meta(
+        [
+            LoraConfig(rank=32, alpha=32.0, learning_rate=1e-4,
+                       batch_size=shape.global_batch // n, seq_len=shape.seq_len)
+            for _ in range(n)
+        ]
+    )
+
+
+def model_shapes(cfg: ModelConfig, meta: PackMeta, dtype=jnp.bfloat16):
+    """(base, lora) as ShapeDtypeStructs via eval_shape — no allocation."""
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_model(k, cfg, meta, dtype), key)
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    nb = shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+    out = {
+        "tokens": jax.ShapeDtypeStruct((nb, s), i32),
+        "labels": jax.ShapeDtypeStruct((nb, s), i32),
+    }
+    if cfg.is_encdec:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (nb, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16
+        )
+        # labels for the (patch-free) decoder tokens only
+    if cfg.n_patch_tokens:
+        # patch prefix + text fills the assigned seq budget
+        s_text = s - cfg.n_patch_tokens
+        out["tokens"] = jax.ShapeDtypeStruct((nb, s_text), i32)
+        out["labels"] = jax.ShapeDtypeStruct((nb, s), i32)
+        out["patches"] = jax.ShapeDtypeStruct(
+            (nb, cfg.n_patch_tokens, cfg.d_model), jnp.bfloat16
+        )
+    return out
+
+
+def decode_inputs(
+    cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16
+) -> Tuple:
+    """(caches, token, pos) for serve_step: ONE new token against a cache of
+    capacity seq_len."""
+    nb = shape.global_batch
+    caches = jax.eval_shape(
+        lambda: init_caches(cfg, nb, shape.seq_len, dtype)
+    )
+    token = jax.ShapeDtypeStruct((nb, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return caches, token, pos
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Unified entry: kind-dependent input structs (assignment API)."""
+    if shape.kind == "train" or shape.kind == "prefill":
+        return train_inputs(cfg, shape)
+    return decode_inputs(cfg, shape)

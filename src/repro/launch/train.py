@@ -1,0 +1,137 @@
+"""Training launcher: run a packed-LoRA fine-tuning job for a selected
+architecture on this host (real execution), with optional sharding over a
+forced host mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch starcoder2-7b \
+      --reduced --steps 20 --ranks 8,16 --lrs 1e-3,5e-4 --seq 32
+
+  # sharded on 8 forced host devices (4 data x 2 model):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.train --arch qwen25-7b --reduced \
+      --mesh 4x2 --steps 10
+
+Full (non-reduced) configs are for the dry-run (repro.launch.dryrun); this
+driver trains for real, so use --reduced on CPU.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import LoraConfig, get_config, list_archs, reduced
+from repro.core.adapter import pack_meta
+from repro.core.packed_lora import extract_adapter
+from repro.models.model import init_model
+from repro.train.checkpoint import CheckpointPool
+from repro.train.data import packed_batch_iterator
+from repro.train.optimizer import init_opt_state
+from repro.train.trainer import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen25-7b", choices=list_archs())
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized variant of the same family")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--ranks", default="8,16")
+    ap.add_argument("--lrs", default="1e-3,5e-4")
+    ap.add_argument("--alphas", default=None, help="default: 2*rank")
+    ap.add_argument("--batch-sizes", default=None, help="default: 1 each")
+    ap.add_argument("--mesh", default=None, help="e.g. 4x2 (data x model)")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--pool", default=None, help="checkpoint pool dir")
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    ranks = [int(r) for r in args.ranks.split(",")]
+    lrs = [float(x) for x in args.lrs.split(",")]
+    alphas = (
+        [float(a) for a in args.alphas.split(",")]
+        if args.alphas
+        else [2.0 * r for r in ranks]
+    )
+    bss = (
+        [int(b) for b in args.batch_sizes.split(",")]
+        if args.batch_sizes
+        else [1] * len(ranks)
+    )
+    assert len(lrs) == len(ranks) == len(alphas) == len(bss)
+    configs = [
+        LoraConfig(rank=r, alpha=a, learning_rate=lr, batch_size=b, seq_len=args.seq)
+        for r, a, lr, b in zip(ranks, alphas, lrs, bss)
+    ]
+    meta = pack_meta(configs)
+    print(f"arch={cfg.name} pack N={meta.n} r_bucket={meta.r_bucket} "
+          f"steps={args.steps} seq={args.seq}")
+
+    dist = None
+    mesh_ctx = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.sharding import (
+            batch_specs, make_dist, param_specs, to_named,
+        )
+
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = make_host_mesh(d, m)
+        nb = meta.n * meta.max_batch
+        dist = make_dist(mesh, nb, fsdp=args.fsdp,
+                         seq_sharded_residuals=args.seq_parallel)
+        mesh_ctx = mesh
+
+    key = jax.random.PRNGKey(0)
+    base, lora = init_model(key, cfg, meta)
+    it = packed_batch_iterator(cfg, configs, seq=args.seq)
+    step = make_train_step(cfg, meta, dist=dist)
+    opt = init_opt_state(lora)
+
+    def run():
+        nonlocal lora, opt
+        t0 = time.perf_counter()
+        for i in range(args.steps):
+            lora, opt, metrics = step(base, lora, opt, next(it))
+            if args.log_every and i % args.log_every == 0:
+                per = np.asarray(metrics["per_adapter_loss"])
+                print(f"step {i:4d}  loss={float(metrics['loss']):.4f}  "
+                      f"per-adapter={np.round(per, 3)}")
+        jax.block_until_ready(metrics["loss"])
+        wall = time.perf_counter() - t0
+        print(f"{args.steps} steps in {wall:.1f}s "
+              f"({1e3 * wall / args.steps:.0f} ms/step)")
+        return metrics
+
+    if mesh_ctx is not None:
+        from repro.launch.sharding import batch_specs, param_specs, to_named
+
+        with mesh_ctx:
+            base = jax.device_put(
+                base, to_named(param_specs(jax.eval_shape(lambda: base), cfg, mesh_ctx), mesh_ctx))
+            lora = jax.device_put(
+                lora, to_named(param_specs(jax.eval_shape(lambda: lora), cfg, mesh_ctx), mesh_ctx))
+            opt = init_opt_state(lora)
+            metrics = run()
+    else:
+        metrics = run()
+
+    if args.pool:
+        pool = CheckpointPool(args.pool)
+        per = np.asarray(metrics["per_adapter_loss"])
+        for i, c in enumerate(configs):
+            pool.save_adapter(
+                f"{cfg.name}_adapter_{i:03d}",
+                extract_adapter(lora, i, meta.ranks),
+                {"rank": c.rank, "alpha": c.alpha, "learning_rate": c.learning_rate,
+                 "batch_size": c.batch_size, "final_loss": float(per[i])},
+            )
+        print(f"saved {len(configs)} adapters to {args.pool}")
+
+
+if __name__ == "__main__":
+    main()

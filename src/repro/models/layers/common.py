@@ -1,0 +1,84 @@
+"""Shared layer primitives: norms, MLPs, linear init."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adapter import PackMeta, init_lora_pair
+from repro.core.packed_lora import lora_linear
+
+
+def init_linear(key, d_in: int, d_out: int, bias: bool, dtype=jnp.float32) -> dict:
+    w = jax.random.normal(key, (d_in, d_out), dtype) * (d_in**-0.5)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def init_norm(d: int, kind: str, dtype=jnp.float32) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: dict, x: jnp.ndarray, kind: str, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = (xf**2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants. "swiglu": gate/up/down; "gelu": gated-gelu (geglu);
+# "gelu2": classic two-matrix up -> gelu -> down (starcoder2/whisper).
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(
+    key,
+    d_model: int,
+    d_ff: int,
+    kind: str,
+    bias: bool,
+    meta: Optional[PackMeta],
+    targets,
+    dtype=jnp.float32,
+):
+    ks = jax.random.split(key, 6)
+    params, lora = {}, {}
+    if kind == "gelu2":
+        params["up"] = init_linear(ks[0], d_model, d_ff, bias, dtype)
+        params["down"] = init_linear(ks[1], d_ff, d_model, bias, dtype)
+    else:
+        params["gate"] = init_linear(ks[0], d_model, d_ff, bias, dtype)
+        params["up"] = init_linear(ks[1], d_model, d_ff, bias, dtype)
+        params["down"] = init_linear(ks[2], d_ff, d_model, bias, dtype)
+    if meta is not None:
+        names = ["up", "down"] if kind == "gelu2" else ["gate", "up", "down"]
+        for i, nm in enumerate(names):
+            if nm in targets:
+                d_in, d_out = params[nm]["w"].shape
+                lora[nm] = init_lora_pair(ks[3 + i], meta, d_in, d_out, dtype)
+    return params, lora
+
+
+def apply_mlp(params, lora, scales, x, kind: str, n_pack: int = 1):
+    lo = lora or {}
+    if kind == "gelu2":
+        h = lora_linear(x, params["up"], lo.get("up"), scales, n_pack)
+        h = jax.nn.gelu(h)
+        return lora_linear(h, params["down"], lo.get("down"), scales, n_pack)
+    g = lora_linear(x, params["gate"], lo.get("gate"), scales, n_pack)
+    u = lora_linear(x, params["up"], lo.get("up"), scales, n_pack)
+    act = jax.nn.gelu(g) if kind == "gelu" else jax.nn.silu(g)
+    return lora_linear(act * u, params["down"], lo.get("down"), scales, n_pack)

@@ -1,0 +1,164 @@
+"""Mixture-of-Experts FFN: dense (exact oracle) and expert-parallel paths.
+
+``impl="dense"`` computes every expert for every token and combines with the
+top-k gate weights — exact, used for smoke tests / small E, and for Grok-1
+whose E=8 does not divide the mandated 16-way model axis (weights are then
+FSDP-sharded over data x model; see DESIGN.md §4).
+
+``impl="ep"`` is the production path: activations are replicated across the
+model axis (they already are, under megatron-style TP), experts are sharded
+over it, and each shard routes the full local token set to its own experts
+with a capacity-bounded sort-based dispatch (no giant one-hot). Partial
+outputs are combined with a single psum over the model axis — the same
+collective cost as a TP MLP. Requires E % model_axis == 0.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers.common import init_linear
+
+
+def init_moe(key, d_model: int, mcfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    e, f = mcfg.n_experts, mcfg.d_expert
+    s = d_model**-0.5
+    return {
+        "router": init_linear(ks[0], d_model, e, False, jnp.float32),
+        "w_gate": jax.random.normal(ks[1], (e, d_model, f), dtype) * s,
+        "w_up": jax.random.normal(ks[2], (e, d_model, f), dtype) * s,
+        "w_down": jax.random.normal(ks[3], (e, f, d_model), dtype) * (f**-0.5),
+    }
+
+
+def _router(x, params, mcfg: MoEConfig):
+    """x: (T, d) -> (gates (T, k) normalized, idx (T, k), aux load-balance loss)."""
+    logits = (x.astype(jnp.float32)) @ params["router"]["w"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, mcfg.top_k)
+    gates = gates / (gates.sum(-1, keepdims=True) + 1e-9)
+    # Switch-style load-balance aux loss: E * sum_e f_e * p_e
+    e = mcfg.n_experts
+    me = probs.mean(0)
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (
+        idx.size + 1e-9
+    )
+    aux = e * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def _expert_ffn(w_gate, w_up, w_down, h):
+    """h: (E_loc, C, d) -> (E_loc, C, d), SwiGLU experts via batched GEMM."""
+    g = jnp.einsum("ecd,edf->ecf", h, w_gate.astype(h.dtype))
+    u = jnp.einsum("ecd,edf->ecf", h, w_up.astype(h.dtype))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, w_down.astype(h.dtype))
+
+
+def _moe_dense(params, x, mcfg: MoEConfig, chunk: int = 1024):
+    """All-experts compute, gate-weighted combine; token-chunked so the
+    (chunk, E, f) intermediate stays small. FLOPs are E/top_k x the routed
+    cost — acceptable for small E (Grok-1 E=8) and exact for testing."""
+    t, d = x.shape
+    gates, idx, aux = _router(x, params, mcfg)
+    comb = jnp.zeros((t, mcfg.n_experts), x.dtype)
+    comb = comb.at[jnp.arange(t)[:, None], idx].set(gates.astype(x.dtype))
+
+    def one_chunk(args):
+        xc, cc = args  # (c, d), (c, E)
+        g = jnp.einsum("td,edf->etf", xc, params["w_gate"].astype(xc.dtype))
+        u = jnp.einsum("td,edf->etf", xc, params["w_up"].astype(xc.dtype))
+        h = jax.nn.silu(g) * u
+        # fold gate weight in before the down projection
+        return jnp.einsum(
+            "etf,efd,te->td", h, params["w_down"].astype(xc.dtype), cc
+        )
+
+    if t <= chunk:
+        y = one_chunk((x, comb))
+    else:
+        n = t // chunk
+        pad = n * chunk < t
+        if pad:
+            n += 1
+            xpad = jnp.pad(x, ((0, n * chunk - t), (0, 0)))
+            cpad = jnp.pad(comb, ((0, n * chunk - t), (0, 0)))
+        else:
+            xpad, cpad = x, comb
+        y = jax.lax.map(
+            jax.checkpoint(one_chunk),
+            (xpad.reshape(n, chunk, d), cpad.reshape(n, chunk, -1)),
+        ).reshape(n * chunk, d)[:t]
+    return y, aux
+
+
+def _moe_ep_local(params_local, x, mcfg: MoEConfig, e_lo, e_local: int, capacity: int):
+    """Process the local expert slice [e_lo, e_lo + e_local) for all local
+    tokens; returns this shard's partial output (psum'd by the caller)."""
+    t, d = x.shape
+    gates, idx, aux = _router(x, params_local, mcfg)
+    k = mcfg.top_k
+    flat_e = idx.reshape(-1)  # (T*k,)
+    flat_g = gates.reshape(-1)
+    tok_of = jnp.repeat(jnp.arange(t), k)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    counts = jnp.zeros((mcfg.n_experts,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(t * k) - starts[se]
+
+    local = (se >= e_lo) & (se < e_lo + e_local) & (pos_in_e < capacity)
+    slot = jnp.where(local, (se - e_lo) * capacity + pos_in_e, e_local * capacity)
+    buf = jnp.zeros((e_local * capacity + 1, d), x.dtype).at[slot].set(x[tok_of[order]])
+    h = buf[:-1].reshape(e_local, capacity, d)
+    y_e = _expert_ffn(
+        params_local["w_gate"], params_local["w_up"], params_local["w_down"], h
+    ).reshape(e_local * capacity, d)
+    y_e = jnp.concatenate([y_e, jnp.zeros((1, d), y_e.dtype)], 0)
+    contrib = y_e[slot] * (flat_g[order] * local.astype(jnp.float32)).astype(
+        y_e.dtype
+    )[:, None]
+    y = jnp.zeros((t, d), x.dtype).at[tok_of[order]].add(contrib)
+    return y, aux
+
+
+def moe_capacity(t: int, mcfg: MoEConfig) -> int:
+    c = int(t * mcfg.top_k / mcfg.n_experts * mcfg.capacity_factor) + 1
+    return max(8, min(c, t))
+
+
+def apply_moe(
+    params,
+    x: jnp.ndarray,
+    mcfg: MoEConfig,
+    *,
+    model_axis: Optional[str] = None,
+    model_axis_size: int = 1,
+):
+    """x: (NB, S, d) -> (y, aux_loss).
+
+    When called inside shard_map with ``model_axis`` set, params hold only the
+    local expert slice and the partial outputs are psum'd over the axis.
+    Outside shard_map (CPU tests), all experts are local.
+    """
+    nb, s, d = x.shape
+    xt = x.reshape(nb * s, d)
+    if mcfg.impl == "dense":
+        y, aux = _moe_dense(params, xt, mcfg)
+        if model_axis is not None:
+            aux = jax.lax.pmean(aux, model_axis)
+    else:
+        e_local = mcfg.n_experts // max(model_axis_size, 1)
+        cap = moe_capacity(nb * s, mcfg)
+        if model_axis is not None:
+            e_lo = jax.lax.axis_index(model_axis) * e_local
+            y, aux = _moe_ep_local(params, xt, mcfg, e_lo, e_local, cap)
+            y = jax.lax.psum(y, model_axis)
+            aux = jax.lax.pmean(aux, model_axis)
+        else:
+            y, aux = _moe_ep_local(params, xt, mcfg, 0, mcfg.n_experts, cap)
+    return y.reshape(nb, s, d), aux

@@ -1,0 +1,28 @@
+"""Rotary position embeddings, including dual-theta (Gemma-3 local/global)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_tables(positions: jnp.ndarray, dim: int, theta: float):
+    """cos/sin tables for given positions. positions: (...,) int; dim even."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs (split-half convention).
+
+    x: (..., S, H, D). cos/sin: (S, D/2) shared across batch, or
+    (B, S, D/2) per-example (decode). A head axis is inserted at -2 and
+    leading axes broadcast.
+    """
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = jnp.expand_dims(cos, -2)  # (..., S, 1, D/2)
+    s = jnp.expand_dims(sin, -2)
+    while c.ndim < x1.ndim:
+        c, s = c[None], s[None]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)

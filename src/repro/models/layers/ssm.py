@@ -1,0 +1,241 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD scan: within a chunk the contribution is computed as a decay-
+masked quadratic form (the "attention-like" dual); across chunks a lax.scan
+carries the (H, P, N) state — O(S) time, O(chunk^2) working set, exact w.r.t.
+the step recurrence (``ssd_reference`` below; tests assert allclose).
+
+LoRA targets: "ssm_in" (z/x input projection) and "ssm_out" (output proj) —
+the paper's packing applies unchanged to SSM projections (DESIGN.md §5).
+Single-group (G=1) B/C, as used by both assigned SSM configs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.core.adapter import PackMeta, init_lora_pair
+from repro.core.packed_lora import lora_linear
+from repro.models.layers.common import apply_norm, init_linear
+
+
+def init_ssm(key, d_model: int, scfg: SSMConfig, meta, targets, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    di = scfg.d_inner(d_model)
+    h = scfg.n_heads(d_model)
+    n, g = scfg.d_state, scfg.n_groups
+    assert g == 1, "single-group SSD"
+    conv_ch = di + 2 * g * n
+    params = {
+        "zx": init_linear(ks[0], d_model, 2 * di, False, dtype),
+        "bc": init_linear(ks[1], d_model, 2 * g * n, False, dtype),
+        "dt": init_linear(ks[2], d_model, h, False, dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "conv_w": jax.random.normal(ks[3], (scfg.d_conv, conv_ch), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ).astype(dtype),
+        "d_skip": jnp.ones((h,), dtype),
+        "norm": {"scale": jnp.ones((di,), dtype)},
+        "out": init_linear(ks[4], di, d_model, False, dtype),
+    }
+    lora = {}
+    if meta is not None:
+        if "ssm_in" in targets:
+            lora["zx"] = init_lora_pair(ks[5], meta, d_model, 2 * di, dtype)
+        if "ssm_out" in targets:
+            lora["out"] = init_lora_pair(ks[6], meta, di, d_model, dtype)
+    return params, lora
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (NB, S, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(k)
+    )
+    return out + b.astype(x.dtype)
+
+
+def _ssd_scan(xs, b, c, dt, a_log, chunk: int):
+    """Chunked SSD. xs: (NB,S,H,P); b/c: (NB,S,N); dt: (NB,S,H) (post-softplus).
+    Returns (y (NB,S,H,P), final_state (NB,H,P,N))."""
+    nb, s, h, p = xs.shape
+    n = b.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,), negative
+    if s % chunk:
+        pad = chunk - s % chunk
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    sp = xs.shape[1]
+    nc = sp // chunk
+    xs_c = xs.reshape(nb, nc, chunk, h, p)
+    b_c = b.reshape(nb, nc, chunk, n)
+    c_c = c.reshape(nb, nc, chunk, n)
+    dt_c = dt.reshape(nb, nc, chunk, h).astype(jnp.float32)
+    da_c = dt_c * a  # (NB,nc,Q,H) log-decay per step
+
+    iq = jnp.arange(chunk)
+    tri = iq[:, None] >= iq[None, :]  # j <= i
+
+    @jax.checkpoint
+    def body(state, inp):
+        xq, bq, cq, dtq, daq = inp  # per-chunk slices (NB, Q, ...)
+        cum = jnp.cumsum(daq, axis=1)  # (NB,Q,H) inclusive
+        # inter-chunk: y_i += exp(cum_i) * C_i . state_prev
+        y_inter = jnp.einsum(
+            "bqn,bhpn->bqhp", cq.astype(jnp.float32), state
+        ) * jnp.exp(cum)[..., None]
+        # intra-chunk quadratic dual
+        cb = jnp.einsum(
+            "bin,bjn->bij", cq.astype(jnp.float32), bq.astype(jnp.float32)
+        )
+        ldiff = cum[:, :, None, :] - cum[:, None, :, :]  # (NB,i,j,H)
+        l_mat = jnp.exp(jnp.where(tri[None, :, :, None], ldiff, -jnp.inf))
+        m = cb[:, :, :, None] * l_mat * dtq[:, None, :, :]  # (NB,i,j,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", m, xs_f(xq))
+        # state update
+        last = cum[:, -1:, :]  # (NB,1,H)
+        decay_rem = jnp.exp(last - cum)  # (NB,Q,H)
+        new_state = state * jnp.exp(last)[:, 0, :, None, None] + jnp.einsum(
+            "bqh,bqn,bqhp->bhpn", dtq * decay_rem, bq.astype(jnp.float32), xs_f(xq)
+        )
+        return new_state, y_inter + y_intra
+
+    def xs_f(xq):
+        return xq.astype(jnp.float32)
+
+    state0 = jnp.zeros((nb, h, p, n), jnp.float32)
+    # scan over chunks: move chunk axis to front
+    inps = (
+        jnp.moveaxis(xs_c, 1, 0),
+        jnp.moveaxis(b_c, 1, 0),
+        jnp.moveaxis(c_c, 1, 0),
+        jnp.moveaxis(dt_c, 1, 0),
+        jnp.moveaxis(da_c, 1, 0),
+    )
+    final_state, ys = jax.lax.scan(body, state0, inps)
+    y = jnp.moveaxis(ys, 0, 1).reshape(nb, sp, h, p)[:, :s]
+    return y.astype(xs.dtype), final_state
+
+
+def apply_ssm(
+    params,
+    lora,
+    scales,
+    x,
+    *,
+    scfg: SSMConfig,
+    n_pack: int = 1,
+    return_state: bool = False,
+):
+    """Full-sequence SSD block. x: (NB, S, d). Returns (out, cache|None)."""
+    lo = lora or {}
+    nb, s, d = x.shape
+    di = scfg.d_inner(d)
+    h = scfg.n_heads(d)
+    n = scfg.d_state
+    zx = lora_linear(x, params["zx"], lo.get("zx"), scales, n_pack)
+    z, xs = zx[..., :di], zx[..., di:]
+    bc = x @ params["bc"]["w"].astype(x.dtype)
+    dt_raw = x @ params["dt"]["w"].astype(x.dtype) + params["dt_bias"].astype(x.dtype)
+
+    conv_in = jnp.concatenate([xs, bc], -1)
+    conv = jax.nn.silu(_causal_conv(conv_in, params["conv_w"], params["conv_b"]))
+    xs, b, c = conv[..., :di], conv[..., di : di + n], conv[..., di + n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32))
+
+    y, state = _ssd_scan(
+        xs.reshape(nb, s, h, -1), b, c, dt, params["a_log"], scfg.chunk_size
+    )
+    y = y + params["d_skip"].astype(y.dtype)[None, None, :, None] * xs.reshape(
+        nb, s, h, -1
+    )
+    y = y.reshape(nb, s, di)
+    y = apply_norm(params["norm"], y * jax.nn.silu(z), "rmsnorm")
+    out = lora_linear(y, params["out"], lo.get("out"), scales, n_pack)
+    cache = None
+    if return_state:
+        cache = {
+            "conv": conv_in[:, -(scfg.d_conv - 1) :, :],
+            "state": state,
+        }
+    return out, cache
+
+
+def apply_ssm_decode(params, lora, scales, x, cache, *, scfg: SSMConfig, n_pack=1):
+    """One-token step. x: (NB, 1, d); cache: {conv (NB,K-1,C), state (NB,H,P,N)}."""
+    lo = lora or {}
+    nb, _, d = x.shape
+    di = scfg.d_inner(d)
+    h = scfg.n_heads(d)
+    n = scfg.d_state
+    zx = lora_linear(x, params["zx"], lo.get("zx"), scales, n_pack)
+    z, xs = zx[..., :di], zx[..., di:]
+    bc = x @ params["bc"]["w"].astype(x.dtype)
+    dt_raw = x @ params["dt"]["w"].astype(x.dtype) + params["dt_bias"].astype(x.dtype)
+
+    conv_in = jnp.concatenate([xs, bc], -1)  # (NB,1,C)
+    win = jnp.concatenate([cache["conv"], conv_in], 1)  # (NB,K,C)
+    conv = jnp.einsum("bkc,kc->bc", win, params["conv_w"].astype(win.dtype))
+    conv = jax.nn.silu(conv + params["conv_b"].astype(conv.dtype))
+    xs1, b1, c1 = conv[..., :di], conv[..., di : di + n], conv[..., di + n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32))[:, 0]  # (NB,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)  # (NB,H)
+    xh = xs1.reshape(nb, h, -1).astype(jnp.float32)
+    state = cache["state"] * decay[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, b1.astype(jnp.float32), xh
+    )
+    y = jnp.einsum("bn,bhpn->bhp", c1.astype(jnp.float32), state)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(nb, 1, di).astype(x.dtype)
+    y = apply_norm(params["norm"], y * jax.nn.silu(z), "rmsnorm")
+    out = lora_linear(y, params["out"], lo.get("out"), scales, n_pack)
+    return out, {"conv": win[:, 1:], "state": state}
+
+
+def init_ssm_cache(nb, d_model: int, scfg: SSMConfig, dtype=jnp.float32):
+    di = scfg.d_inner(d_model)
+    h = scfg.n_heads(d_model)
+    conv_ch = di + 2 * scfg.n_groups * scfg.d_state
+    return {
+        "conv": jnp.zeros((nb, scfg.d_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((nb, h, scfg.head_dim, scfg.d_state), jnp.float32),
+    }
+
+
+def ssd_reference(xs, b, c, dt, a_log):
+    """Naive step recurrence oracle (tests only). Same inputs as _ssd_scan."""
+    nb, s, h, p = xs.shape
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, bt, ct, dtt = inp
+        decay = jnp.exp(dtt * a)  # (NB,H)
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dtt, bt, xt
+        )
+        y = jnp.einsum("bn,bhpn->bhp", ct, state)
+        return state, y
+
+    state0 = jnp.zeros((nb, h, p, b.shape[-1]), jnp.float32)
+    xs_t = jnp.moveaxis(xs.astype(jnp.float32), 1, 0)
+    _, ys = jax.lax.scan(
+        step,
+        state0,
+        (
+            xs_t,
+            jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(c.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        ),
+    )
+    return jnp.moveaxis(ys, 0, 1)

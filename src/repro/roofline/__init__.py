@@ -1,0 +1,1 @@
+from repro.roofline.analysis import RooflineReport, analyze, collective_bytes

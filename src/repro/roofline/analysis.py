@@ -1,0 +1,168 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / link_bw
+
+HLO_FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device, post-SPMD
+module). collective bytes are parsed from the optimized HLO text: per-device
+result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, with ring-algorithm wire multipliers.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+# TPU v5e (assignment constants)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+# wire-bytes multiplier relative to the RESULT shape, ring algorithms,
+# n large: all-gather result is n x input (moves ~result bytes);
+# all-reduce moves ~2 x size; reduce-scatter moves ~input = n x result.
+_WIRE_FACTOR = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,  # applied to the (larger) operand, approximated
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device wire bytes per collective kind, summed over the module.
+    '-start' ops only are counted once ('-done' carries no shape transfer)."""
+    out: Dict[str, float] = {}
+    seen_done = 0
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done" in hlo_text[m.start() : m.end()]:
+            seen_done += 1
+            continue
+        b = _shape_bytes(shape_str) * _WIRE_FACTOR[kind]
+        out[kind] = out.get(kind, 0.0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_per_device: float
+    coll_breakdown: Dict[str, float] = field(default_factory=dict)
+    peak_memory_bytes: Optional[float] = None
+    model_flops: Optional[float] = None  # 6*N*D (or 2*N*D decode), global
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_per_device / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    def useful_flop_ratio(self, n_devices: int) -> Optional[float]:
+        if not self.model_flops:
+            return None
+        return self.model_flops / (self.flops_per_device * n_devices)
+
+    def row(self, n_devices: int) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_per_device,
+            "peak_memory_gb": (self.peak_memory_bytes or 0) / 1e9,
+            "model_flops": self.model_flops,
+            "useful_flop_ratio": self.useful_flop_ratio(n_devices),
+        }
+
+
+def analyze(compiled, arch, shape, mesh_name, *, model_flops=None) -> RooflineReport:
+    """Costs come from the trip-count-aware HLO walker (repro.roofline
+    .hlo_cost) — XLA's own cost_analysis() counts scan bodies once and would
+    under-report a 62-layer stack by ~62x."""
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    text = compiled.as_text()
+    cost = analyze_hlo(text)
+    flops = cost.flops
+    byt = cost.bytes
+    coll = dict(cost.coll)
+    coll["total"] = cost.coll_total
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        peak = float(
+            getattr(ma, "temp_size_in_bytes", 0)
+            + getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+            - getattr(ma, "alias_size_in_bytes", 0)
+        )
+    except Exception:
+        pass
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        flops_per_device=flops,
+        bytes_per_device=byt,
+        collective_per_device=coll.get("total", 0.0),
+        coll_breakdown=coll,
+        peak_memory_bytes=peak,
+        model_flops=model_flops,
+    )

@@ -1,0 +1,3 @@
+from repro.serve.decode import generate, make_prefill, make_serve_step, pad_caches
+
+__all__ = ["generate", "make_prefill", "make_serve_step", "pad_caches"]

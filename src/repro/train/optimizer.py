@@ -1,0 +1,78 @@
+"""AdamW over packed adapter parameters with PER-ADAPTER learning rates.
+
+Only LoRA parameters carry optimizer state — the base model is frozen (the
+paper's memory argument, §3.2/Appendix A: no base grads, no base moments).
+The pack dimension N sits at axis 0 of unstacked leaves and axis 1 of
+layer-stacked ("blocks") leaves; each adapter n is stepped with its own
+learning rate lr_n from the hyperparameter configuration — hyperparameter
+heterogeneity inside a single jitted update.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_opt_state(lora_params) -> Dict[str, Any]:
+    zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
+    return {
+        "m": zeros(lora_params),
+        "v": zeros(lora_params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _lr_shape(path, leaf, n_pack: int):
+    """Axis of the pack dim for this leaf: 1 under a 'blocks' stack, else 0."""
+    in_blocks = any(getattr(k, "key", None) == "blocks" for k in path)
+    ax = 1 if in_blocks else 0
+    assert leaf.shape[ax] == n_pack, (path, leaf.shape, n_pack)
+    shape = [1] * leaf.ndim
+    shape[ax] = n_pack
+    return shape
+
+
+def adamw_update(
+    grads,
+    opt_state,
+    params,
+    lr_vector: jnp.ndarray,  # (N,)
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Tuple[Any, Dict[str, Any]]:
+    step = opt_state["step"] + 1
+    n_pack = lr_vector.shape[0]
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    flat_g = jax.tree_util.tree_flatten_with_path(grads)[0]
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    flat_p = jax.tree.leaves(params)
+    new_p, new_m, new_v = [], [], []
+    for (path, g), m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * (g * g)
+        mh = m / c1
+        vh = v / c2
+        lr = lr_vector.reshape(_lr_shape(path, p, n_pack)).astype(p.dtype)
+        upd = mh / (jnp.sqrt(vh) + eps)
+        if weight_decay:
+            upd = upd + weight_decay * p
+        new_p.append(p - lr * upd)
+        new_m.append(m)
+        new_v.append(v)
+    treedef = jax.tree.structure(params)
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        {
+            "m": jax.tree.unflatten(treedef, new_m),
+            "v": jax.tree.unflatten(treedef, new_v),
+            "step": step,
+        },
+    )

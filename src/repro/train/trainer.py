@@ -1,0 +1,100 @@
+"""Packed-LoRA training step and loop.
+
+``make_train_step`` builds the jitted step for a pack of N adapters on one
+frozen base model: forward with packed-LoRA deltas, chunked CE with
+per-adapter reduction, grads w.r.t. adapter params only, AdamW with the
+per-adapter learning-rate vector. Base params enter as inputs but are never
+differentiated — XLA sees them as constants of the step (no base grads, no
+base optimizer state: the paper's packing-memory property).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.adapter import PackMeta
+from repro.models.model import forward, unembed_w
+from repro.models.transformer import DistContext
+from repro.train.losses import chunked_cross_entropy
+from repro.train.optimizer import adamw_update, init_opt_state
+
+
+def loss_fn(
+    lora,
+    base,
+    batch,
+    cfg: ModelConfig,
+    meta: PackMeta,
+    *,
+    dist: Optional[DistContext] = None,
+    chunk_q: int = 512,
+    vocab_chunk: int = 512,
+    aux_weight: float = 0.01,
+):
+    h, _, aux = forward(
+        base, lora, meta.scales(), batch, cfg,
+        n_pack=meta.n, dist=dist, chunk_q=chunk_q,
+    )
+    per_adapter, total = chunked_cross_entropy(
+        h, unembed_w(base, cfg), batch["labels"], meta.n,
+        chunk=vocab_chunk, vocab=cfg.vocab_size,
+    )
+    return total + aux_weight * aux, per_adapter
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    meta: PackMeta,
+    *,
+    dist: Optional[DistContext] = None,
+    chunk_q: int = 512,
+    vocab_chunk: int = 512,
+    weight_decay: float = 0.0,
+    jit: bool = True,
+):
+    lr_vec = meta.lr_vector()
+
+    def train_step(base, lora, opt_state, batch):
+        (total, per_adapter), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(lora, base, batch, cfg, meta,
+          dist=dist, chunk_q=chunk_q, vocab_chunk=vocab_chunk)
+        lora_new, opt_state = adamw_update(
+            grads, opt_state, lora, lr_vec, weight_decay=weight_decay
+        )
+        metrics = {"loss": total, "per_adapter_loss": per_adapter}
+        return lora_new, opt_state, metrics
+
+    return jax.jit(train_step, donate_argnums=(1, 2)) if jit else train_step
+
+
+def train_loop(
+    base,
+    lora,
+    cfg: ModelConfig,
+    meta: PackMeta,
+    data_iter,
+    n_steps: int,
+    *,
+    dist=None,
+    chunk_q: int = 512,
+    vocab_chunk: int = 512,
+    log_every: int = 0,
+) -> Dict[str, Any]:
+    """Run n_steps; returns final state + loss history."""
+    step_fn = make_train_step(
+        cfg, meta, dist=dist, chunk_q=chunk_q, vocab_chunk=vocab_chunk
+    )
+    opt_state = init_opt_state(lora)
+    history = []
+    for i in range(n_steps):
+        batch = next(data_iter)
+        lora, opt_state, m = step_fn(base, lora, opt_state, batch)
+        history.append(jax.device_get(m["per_adapter_loss"]))
+        if log_every and (i % log_every == 0):
+            print(f"step {i}: loss={float(m['loss']):.4f}")
+    return {"lora": lora, "opt_state": opt_state, "history": history}

@@ -1,0 +1,45 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches run on
+the single real CPU device; only launch/dryrun.py forces 512 host devices
+(and it must be a separate process, which tests/test_dryrun_small.py does)."""
+import os
+
+# Deterministic, quiet, single-device CPU runs.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LoraConfig, get_config, list_archs, reduced
+from repro.core.adapter import pack_meta
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def meta2():
+    """A small heterogeneous 2-adapter pack used across tests."""
+    return pack_meta(
+        [
+            LoraConfig(rank=8, alpha=8.0, learning_rate=1e-3, batch_size=2),
+            LoraConfig(rank=16, alpha=4.0, learning_rate=5e-4, batch_size=2),
+        ]
+    )
+
+
+def all_arch_ids():
+    return list_archs()
+
+
+@pytest.fixture(scope="session")
+def reduced_cfgs():
+    return {name: reduced(get_config(name)) for name in list_archs()}

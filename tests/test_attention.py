@@ -1,0 +1,196 @@
+"""Attention primitives: chunked flash vs naive, sliding window banding,
+GQA grouping, RoPE invariants, MLA absorbed-decode equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import AttentionConfig
+from repro.models.layers.attention import (
+    _attend_chunk,
+    apply_gqa,
+    apply_mla,
+    decode_attention,
+    flash_attention,
+    init_gqa,
+    init_gqa_cache,
+    init_mla,
+    init_mla_cache,
+)
+from repro.models.layers.rope import apply_rope, rope_tables
+
+
+def _naive_attention(q, k, v, causal=True, window=0, scale=None):
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else d**-0.5
+    qg = q.reshape(b, sq, kv, g, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= (qpos - kpos) < window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, -1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return out.reshape(b, sq, h, d)
+
+
+@pytest.mark.parametrize("sq,chunk", [(8, 32), (32, 8), (64, 16)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_naive(sq, chunk, causal):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    b, h, kv, d = 2, 4, 2, 16
+    q = jax.random.normal(ks[0], (b, sq, h, d))
+    k = jax.random.normal(ks[1], (b, sq, kv, d))
+    v = jax.random.normal(ks[2], (b, sq, kv, d))
+    got = flash_attention(q, k, v, causal=causal, chunk_q=chunk)
+    want = _naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("window", [4, 16, 31])
+def test_sliding_window_band_path(window):
+    """The banded (sub-quadratic) path == naive masked attention."""
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    b, sq, h, d = 1, 64, 2, 8
+    q = jax.random.normal(ks[0], (b, sq, h, d))
+    k = jax.random.normal(ks[1], (b, sq, h, d))
+    v = jax.random.normal(ks[2], (b, sq, h, d))
+    got = flash_attention(q, k, v, causal=True, window=window, chunk_q=16)
+    want = _naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    sq=st.sampled_from([16, 32, 48]),
+    window=st.integers(1, 40),
+    chunk=st.sampled_from([8, 16]),
+)
+def test_window_property(sq, window, chunk):
+    key = jax.random.PRNGKey(sq * 100 + window)
+    q = jax.random.normal(key, (1, sq, 2, 8))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, sq, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, sq, 2, 8))
+    got = flash_attention(q, k, v, causal=True, window=window, chunk_q=chunk)
+    want = _naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("sq", [100, 1500, 33])
+def test_flash_q_padding_non_divisible(sq):
+    """sq not divisible by chunk_q (e.g. whisper's 1500 frames): padded query
+    chunks must not change real outputs."""
+    key = jax.random.PRNGKey(42)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, sq, 2, 8))
+    k = jax.random.normal(ks[1], (1, sq, 2, 8))
+    v = jax.random.normal(ks[2], (1, sq, 2, 8))
+    got = flash_attention(q, k, v, causal=True, chunk_q=32)
+    want = _naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+    # non-causal too (whisper encoder)
+    got_nc = flash_attention(q, k, v, causal=False, chunk_q=32)
+    want_nc = _naive_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got_nc), np.asarray(want_nc), rtol=1e-4, atol=1e-4)
+
+
+def test_decode_attention_matches_full():
+    """decode at position p == row p of the full causal attention."""
+    key = jax.random.PRNGKey(2)
+    ks = jax.random.split(key, 3)
+    b, s, h, kv, d = 2, 16, 4, 2, 8
+    q_full = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    full = _naive_attention(q_full, k, v, causal=True)
+    for p in (0, 7, 15):
+        got = decode_attention(q_full[:, p : p + 1], k, v, jnp.int32(p))
+        np.testing.assert_allclose(
+            np.asarray(got[:, 0]), np.asarray(full[:, p]), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_rope_preserves_norm_and_relative_scores():
+    pos = jnp.arange(16)
+    cos, sin = rope_tables(pos, 8, 10_000.0)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 16, 2, 8))
+    y = apply_rope(x, cos, sin)
+    # rotation preserves per-pair norms
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(x, axis=-1)),
+        np.asarray(jnp.linalg.norm(y, axis=-1)),
+        rtol=1e-5,
+    )
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(4), (8,))
+    k = jax.random.normal(jax.random.PRNGKey(5), (8,))
+
+    def score(i, j):
+        ci, si = rope_tables(jnp.asarray([i]), 8, 10_000.0)
+        cj, sj = rope_tables(jnp.asarray([j]), 8, 10_000.0)
+        qr = apply_rope(q[None, None, None, :], ci, si)
+        kr = apply_rope(k[None, None, None, :], cj, sj)
+        return float((qr * kr).sum())
+
+    np.testing.assert_allclose(score(3, 1), score(10, 8), rtol=1e-4)
+    np.testing.assert_allclose(score(5, 5), score(12, 12), rtol=1e-4)
+
+
+def test_gqa_cache_decode_matches_prefill(meta2):
+    acfg = AttentionConfig(n_heads=4, n_kv_heads=2, head_dim=16)
+    d_model = 32
+    params, lora = init_gqa(jax.random.PRNGKey(0), acfg, d_model, meta2, ("q", "k", "v", "o"))
+    nb, s = meta2.n, 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (nb, s, d_model)) * 0.3
+    pos = jnp.arange(s)
+    rope = rope_tables(pos, acfg.head_dim, acfg.rope_theta)
+    scales = meta2.scales()
+    full, _ = apply_gqa(
+        params, lora, scales, x, acfg=acfg, n_pack=meta2.n, rope=rope
+    )
+    cache = init_gqa_cache(nb, s, acfg, jnp.float32)
+    outs = []
+    for t in range(s):
+        r_t = rope_tables(jnp.asarray([t]), acfg.head_dim, acfg.rope_theta)
+        o, cache = apply_gqa(
+            params, lora, scales, x[:, t : t + 1], acfg=acfg, n_pack=meta2.n,
+            rope=r_t, cache=cache, pos=jnp.int32(t),
+        )
+        outs.append(o)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), rtol=1e-3, atol=1e-3)
+
+
+def test_mla_absorbed_decode_matches_prefill(meta2):
+    acfg = AttentionConfig(
+        n_heads=4, n_kv_heads=4, head_dim=32,
+        q_lora_rank=24, kv_lora_rank=16,
+        qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
+    )
+    d_model = 32
+    params, lora = init_mla(jax.random.PRNGKey(0), acfg, d_model, meta2, ("q", "kv", "o"))
+    nb, s = meta2.n, 8
+    x = jax.random.normal(jax.random.PRNGKey(1), (nb, s, d_model)) * 0.3
+    rope = rope_tables(jnp.arange(s), acfg.qk_rope_head_dim, 10_000.0)
+    scales = meta2.scales()
+    full, _ = apply_mla(params, lora, scales, x, acfg=acfg, n_pack=meta2.n, rope=rope)
+    cache = init_mla_cache(nb, s, acfg, jnp.float32)
+    outs = []
+    for t in range(s):
+        r_t = rope_tables(jnp.asarray([t]), acfg.qk_rope_head_dim, 10_000.0)
+        o, cache = apply_mla(
+            params, lora, scales, x[:, t : t + 1], acfg=acfg, n_pack=meta2.n,
+            rope=r_t, cache=cache, pos=jnp.int32(t),
+        )
+        outs.append(o)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), rtol=2e-3, atol=2e-3)

@@ -1,0 +1,134 @@
+"""Chunked CE vs naive full-logits CE; AdamW per-adapter semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.train.losses import IGNORE, chunked_cross_entropy, top1_accuracy
+from repro.train.optimizer import adamw_update, init_opt_state
+
+
+def _naive_ce(hidden, unembed, labels, n_pack, vocab):
+    lg = (hidden @ unembed).astype(jnp.float32)
+    lg = jnp.where(jnp.arange(lg.shape[-1]) < vocab, lg, -1e30)
+    mask = (labels != IGNORE)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    tgt = jnp.take_along_axis(lg, safe[..., None], -1)[..., 0]
+    nll = jnp.where(mask, lse - tgt, 0.0)
+    nll_n = nll.reshape(n_pack, -1).sum(-1)
+    cnt_n = mask.astype(jnp.float32).reshape(n_pack, -1).sum(-1)
+    per = nll_n / jnp.maximum(cnt_n, 1.0)
+    return per, per.sum()
+
+
+@pytest.mark.parametrize("s,chunk", [(16, 64), (64, 16), (65, 16), (17, 8)])
+def test_chunked_ce_matches_naive(s, chunk):
+    key = jax.random.PRNGKey(0)
+    nb, d, vpad, vocab, n_pack = 4, 16, 64, 50, 2
+    hidden = jax.random.normal(key, (nb, s, d))
+    unembed = jax.random.normal(jax.random.PRNGKey(1), (d, vpad)) * 0.1
+    labels = jax.random.randint(jax.random.PRNGKey(2), (nb, s), 0, vocab)
+    labels = labels.at[:, -2:].set(IGNORE)
+    per, total = chunked_cross_entropy(
+        hidden, unembed, labels, n_pack, chunk=chunk, vocab=vocab
+    )
+    per_n, total_n = _naive_ce(hidden, unembed, labels, n_pack, vocab)
+    np.testing.assert_allclose(np.asarray(per), np.asarray(per_n), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(total), float(total_n), rtol=1e-5)
+
+
+def test_chunked_ce_grad_matches_naive():
+    key = jax.random.PRNGKey(3)
+    nb, s, d, vpad, vocab = 2, 32, 8, 32, 30
+    hidden = jax.random.normal(key, (nb, s, d))
+    unembed = jax.random.normal(jax.random.PRNGKey(4), (d, vpad)) * 0.1
+    labels = jax.random.randint(jax.random.PRNGKey(5), (nb, s), 0, vocab)
+    g1 = jax.grad(lambda h: chunked_cross_entropy(h, unembed, labels, 2, chunk=8, vocab=vocab)[1])(hidden)
+    g2 = jax.grad(lambda h: _naive_ce(h, unembed, labels, 2, vocab)[1])(hidden)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-5)
+
+
+def test_all_ignored_rows_are_safe():
+    hidden = jnp.ones((2, 8, 4))
+    unembed = jnp.ones((4, 16))
+    labels = jnp.full((2, 8), IGNORE)
+    per, total = chunked_cross_entropy(hidden, unembed, labels, 2, vocab=16)
+    assert bool(jnp.isfinite(per).all()) and float(total) == 0.0
+
+
+def test_padded_vocab_never_predicted():
+    key = jax.random.PRNGKey(6)
+    hidden = jax.random.normal(key, (1, 4, 8))
+    unembed = jax.random.normal(jax.random.PRNGKey(7), (8, 32))
+    # huge logit mass on padded column 31 — must be masked out
+    unembed = unembed.at[:, 31].set(100.0)
+    labels = jnp.zeros((1, 4), jnp.int32)
+    per, _ = chunked_cross_entropy(hidden, unembed, labels, 1, vocab=31)
+    assert bool(jnp.isfinite(per).all())
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(1, 48), chunk=st.sampled_from([4, 16, 64]))
+def test_chunked_ce_property(s, chunk):
+    key = jax.random.PRNGKey(s)
+    hidden = jax.random.normal(key, (2, s, 8))
+    unembed = jax.random.normal(jax.random.PRNGKey(s + 1), (8, 24)) * 0.2
+    labels = jax.random.randint(jax.random.PRNGKey(s + 2), (2, s), 0, 20)
+    per, _ = chunked_cross_entropy(hidden, unembed, labels, 2, chunk=chunk, vocab=20)
+    per_n, _ = _naive_ce(hidden, unembed, labels, 2, 20)
+    np.testing.assert_allclose(np.asarray(per), np.asarray(per_n), rtol=1e-4, atol=1e-4)
+
+
+def test_top1_accuracy():
+    lg = jnp.zeros((2, 3, 5)).at[:, :, 2].set(1.0)
+    labels = jnp.asarray([[2, 2, IGNORE], [2, 0, IGNORE]])
+    acc = top1_accuracy(lg, labels, 2)
+    np.testing.assert_allclose(np.asarray(acc), [1.0, 0.5])
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {
+        "q": {"a": jnp.ones((2, 4, 3)), "b": jnp.zeros((2, 3, 4))},
+        "blocks": {"mlp": {"a": jnp.ones((5, 2, 4, 3))}},  # (L, N, ...)
+    }
+
+
+def test_adamw_per_adapter_lr():
+    params = _tree()
+    grads = jax.tree.map(jnp.ones_like, params)
+    opt = init_opt_state(params)
+    lr = jnp.asarray([0.0, 1e-2])
+    new, opt2 = adamw_update(grads, opt, params, lr)
+    # adapter 0 (lr=0) unchanged on both plain and blocks leaves
+    np.testing.assert_allclose(np.asarray(new["q"]["a"][0]), 1.0)
+    np.testing.assert_allclose(np.asarray(new["blocks"]["mlp"]["a"][:, 0]), 1.0)
+    # adapter 1 moved by ~lr (first step: mhat/sqrt(vhat) = 1)
+    np.testing.assert_allclose(np.asarray(new["q"]["a"][1]), 1.0 - 1e-2, rtol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(new["blocks"]["mlp"]["a"][:, 1]), 1.0 - 1e-2, rtol=1e-4
+    )
+    assert int(opt2["step"]) == 1
+
+
+def test_adamw_moments_update():
+    params = {"a": jnp.zeros((1, 2, 2))}
+    grads = {"a": jnp.full((1, 2, 2), 2.0)}
+    opt = init_opt_state(params)
+    _, opt2 = adamw_update(grads, opt, params, jnp.asarray([1e-3]))
+    np.testing.assert_allclose(np.asarray(opt2["m"]["a"]), 0.2, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(opt2["v"]["a"]), 0.004, rtol=1e-6)
+
+
+def test_adamw_weight_decay():
+    params = {"a": jnp.full((1, 2, 2), 10.0)}
+    grads = {"a": jnp.zeros((1, 2, 2))}
+    opt = init_opt_state(params)
+    new, _ = adamw_update(grads, opt, params, jnp.asarray([1e-2]), weight_decay=0.1)
+    assert float(new["a"].mean()) < 10.0

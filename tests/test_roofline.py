@@ -1,0 +1,153 @@
+"""HLO cost parser: trip-count-aware FLOPs/bytes/collectives vs known-size
+programs and XLA's own cost_analysis on unrolled graphs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo_cost import analyze_hlo, _parse_instr, _shape_bytes
+from repro.roofline.analysis import RooflineReport
+
+
+def _compiled_text(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_parse_instr_tuple_with_index_comments():
+    line = (
+        "  %while.13 = (s32[], f32[8,64]{1,0}, f32[4,8,64]{2,1,0}, "
+        "/*index=5*/f32[4,64,64]{2,1,0}) while(%tuple.20), condition=%c, body=%b"
+    )
+    name, shape, op = _parse_instr(line)
+    assert name == "while.13" and op == "while"
+    assert "f32[4,64,64]" in shape
+
+
+def test_parse_instr_simple():
+    line = "  ROOT %dot.1 = f32[128,512]{1,0} dot(%a, %b), lhs_contracting_dims={1}"
+    name, shape, op = _parse_instr(line)
+    assert (name, op) == ("dot.1", "dot")
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,512]{1,0}") == 128 * 512 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(f32[4], s32[2,2])") == 16 + 16
+
+
+def test_single_dot_flops():
+    m, k, n = 128, 256, 512
+    text = _compiled_text(
+        lambda a, b: a @ b,
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+    )
+    c = analyze_hlo(text)
+    assert c.flops == 2.0 * m * k * n
+
+
+def test_scan_trip_count_multiplies():
+    """A 4-iteration scan of one matmul must count 4x the flops; the same
+    program unrolled gives XLA more fusion freedom, so unrolled <= scan and
+    both within 35% of the analytic count."""
+    L, b, d = 4, 8, 64
+    ws = jax.ShapeDtypeStruct((L, d, d), jnp.float32)
+    x = jax.ShapeDtypeStruct((b, d), jnp.float32)
+
+    def scanned(ws, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    def unrolled(ws, x):
+        for i in range(L):
+            x = jnp.tanh(x @ ws[i])
+        return x.sum()
+
+    analytic = 2.0 * b * d * d * L * 3  # fwd + dx + dw per layer
+    f_s = analyze_hlo(_compiled_text(jax.grad(scanned), ws, x)).flops
+    f_u = analyze_hlo(_compiled_text(jax.grad(unrolled), ws, x)).flops
+    assert abs(f_s - analytic) / analytic < 0.35, (f_s, analytic)
+    assert abs(f_u - analytic) / analytic < 0.35, (f_u, analytic)
+
+
+def test_nested_scan():
+    def inner(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=3)
+        return y
+
+    def outer(x, w):
+        def body(c, _):
+            return inner(c, w), None
+        y, _ = jax.lax.scan(body, x, None, length=5)
+        return y.sum()
+
+    b, d = 4, 32
+    text = _compiled_text(
+        outer, jax.ShapeDtypeStruct((b, d), jnp.float32),
+        jax.ShapeDtypeStruct((d, d), jnp.float32),
+    )
+    c = analyze_hlo(text)
+    analytic = 2.0 * b * d * d * 15
+    assert abs(c.flops - analytic) / analytic < 0.1, (c.flops, analytic)
+
+
+def test_bytes_positive_and_plausible():
+    d = 256
+    text = _compiled_text(
+        lambda a, b: a @ b,
+        jax.ShapeDtypeStruct((d, d), jnp.float32),
+        jax.ShapeDtypeStruct((d, d), jnp.float32),
+    )
+    c = analyze_hlo(text)
+    min_traffic = 3 * d * d * 4  # two reads + one write
+    assert c.bytes >= min_traffic
+    assert c.bytes <= 4 * min_traffic
+
+
+def test_collectives_counted_with_wire_factors():
+    hlo = """
+HloModule m
+
+ENTRY %main (p: f32[16,128]) -> f32[16,128] {
+  %p = f32[16,128]{1,0} parameter(0)
+  %ar = f32[16,128]{1,0} all-reduce(%p), replica_groups={}, to_apply=%add
+  %ag = f32[32,128]{1,0} all-gather(%ar), dimensions={0}
+  ROOT %cp = f32[16,128]{1,0} collective-permute(%ar), source_target_pairs={{0,1}}
+}
+"""
+    c = analyze_hlo(hlo)
+    ar = 16 * 128 * 4 * 2.0  # all-reduce wire factor 2
+    ag = 32 * 128 * 4 * 1.0
+    cp = 16 * 128 * 4 * 1.0
+    assert c.coll["all-reduce"] == ar
+    assert c.coll["all-gather"] == ag
+    assert c.coll["collective-permute"] == cp
+    assert c.coll_total == ar + ag + cp
+
+
+def test_roofline_report_terms():
+    r = RooflineReport(
+        arch="x", shape="train_4k", mesh="16x16",
+        flops_per_device=197e12,  # exactly 1 second of compute
+        bytes_per_device=819e9,   # exactly 1 second of HBM
+        collective_per_device=25e9,  # 0.5 s of link
+    )
+    np.testing.assert_allclose(r.t_compute, 1.0)
+    np.testing.assert_allclose(r.t_memory, 1.0)
+    np.testing.assert_allclose(r.t_collective, 0.5)
+    assert r.bottleneck in ("compute", "memory")
+    row = r.row(256)
+    assert set(row) >= {"arch", "t_compute_s", "bottleneck", "useful_flop_ratio"}
+
+
+def test_model_flops_ratio():
+    r = RooflineReport(
+        arch="x", shape="s", mesh="m",
+        flops_per_device=1e12, bytes_per_device=1.0,
+        collective_per_device=0.0, model_flops=128e12,
+    )
+    np.testing.assert_allclose(r.useful_flop_ratio(256), 0.5)
