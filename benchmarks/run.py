@@ -30,6 +30,7 @@ def main(argv=None):
         bench_job_throughput,
         bench_kernels,
         bench_makespan,
+        bench_online,
         bench_planner,
         bench_quality,
         bench_roofline,
@@ -38,6 +39,7 @@ def main(argv=None):
     benches = {
         "kernels": ("Table 7/8: packed-kernel speedup", bench_kernels.run),
         "makespan": ("Fig. 4: hyperparameter-tuning makespan", bench_makespan.run),
+        "online": ("§4 dynamic scheduling: online admission + repacking", bench_online.run),
         "job_throughput": ("Fig. 5: packed-job throughput", bench_job_throughput.run),
         "job_throughput_a10": ("Fig. 7 / §7.5: A10 + QLoRA", lambda fast: bench_job_throughput.run_a10(fast)),
         "breakdown": ("Fig. 6: speedup breakdown", bench_breakdown.run),
@@ -74,6 +76,11 @@ def main(argv=None):
         if name == "makespan" and rows:
             best = max(r["speedup_vs_min"] for r in rows)
             checks.append(("makespan speedup vs MinGPU (paper <=7.52x)", f"{best:.2f}x"))
+        if name == "online" and rows:
+            best = max(r["speedup_mig"] for r in rows)
+            wins = sum(1 for r in rows if r["speedup_online"] > 1.001)
+            checks.append(("online repack beats static plan (traces won)", f"{wins}/{len(rows)}"))
+            checks.append(("best online+migration speedup vs static", f"{best:.2f}x"))
         if name == "job_throughput" and rows:
             best = max(r["speedup_vs_min"] for r in rows)
             checks.append(("job throughput vs MinGPU (paper <=12.8x)", f"{best:.2f}x"))

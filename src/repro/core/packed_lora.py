@@ -125,3 +125,48 @@ def extract_adapter(lora_params, idx: int, ranks=None):
 
         sliced = walk(sliced)
     return sliced
+
+
+def inject_adapter(lora_params, adapter, idx: int):
+    """Inverse of :func:`extract_adapter`: write one adapter's weights into
+    slot ``idx`` of a pack, zero-padding rank dims up to the pack's bucket.
+
+    This is how the online execution engine resumes a preempted adapter
+    inside a *new* pack (possibly with different partners and a different
+    bucket rank): extract -> CheckpointPool -> inject round-trips the real
+    rank columns bit-exactly, and the re-introduced padding is zero — the
+    same invariant fresh initialization guarantees.
+    """
+
+    def put(leaf, sub, path):
+        ax = 1 if "blocks" in path else 0
+        sub = jnp.asarray(sub)
+        last = path[-1] if path else None
+        if last == "a" and sub.shape[-1] < leaf.shape[-1]:
+            pad = [(0, 0)] * sub.ndim
+            pad[-1] = (0, leaf.shape[-1] - sub.shape[-1])
+            sub = jnp.pad(sub, pad)
+        if last == "b" and sub.shape[-2] < leaf.shape[-2]:
+            pad = [(0, 0)] * sub.ndim
+            pad[-2] = (0, leaf.shape[-2] - sub.shape[-2])
+            sub = jnp.pad(sub, pad)
+        idxer = [slice(None)] * leaf.ndim
+        idxer[ax] = idx
+        return leaf.at[tuple(idxer)].set(sub.astype(leaf.dtype))
+
+    # manual walk rather than tree_map over both trees: checkpoint
+    # round-trips drop empty subtrees (npz stores leaves only), so the
+    # adapter may be a sparse sub-structure of the pack
+    def walk(pack, sub, path):
+        if isinstance(pack, dict):
+            return {
+                k: (
+                    walk(v, sub[k], path + (k,))
+                    if isinstance(sub, dict) and k in sub
+                    else v
+                )
+                for k, v in pack.items()
+            }
+        return put(pack, sub, path)
+
+    return walk(lora_params, adapter, ())

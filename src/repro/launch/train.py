@@ -44,8 +44,20 @@ def main():
     ap.add_argument("--fsdp", action="store_true")
     ap.add_argument("--seq-parallel", action="store_true")
     ap.add_argument("--pool", default=None, help="checkpoint pool dir")
+    ap.add_argument("--save-state", action="store_true",
+                    help="checkpoint the full packed state (adapters + "
+                         "optimizer + step counts) into --pool at the end")
+    ap.add_argument("--resume-state", action="store_true",
+                    help="resume a packed run saved with --save-state "
+                         "(same arch/ranks) instead of initializing fresh")
+    ap.add_argument("--state-id", default=None,
+                    help="packed-state id in the pool (default: the arch)")
     ap.add_argument("--log-every", type=int, default=5)
     args = ap.parse_args()
+    if (args.save_state or args.resume_state) and not args.pool:
+        ap.error("--save-state/--resume-state require --pool")
+    if args.resume_state and args.mesh:
+        ap.error("--resume-state is not supported together with --mesh")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -90,7 +102,19 @@ def main():
     base, lora = init_model(key, cfg, meta)
     it = packed_batch_iterator(cfg, configs, seq=args.seq)
     step = make_train_step(cfg, meta, dist=dist)
-    opt = init_opt_state(lora)
+    opt = init_opt_state(lora, n_pack=meta.n)
+
+    state_id = args.state_id or cfg.name
+    if args.resume_state:
+        pool = CheckpointPool(args.pool)
+        lora, opt, smeta = pool.load_packed_state(state_id)
+        if tuple(smeta["ranks"]) != meta.ranks:
+            raise SystemExit(
+                f"saved state {state_id!r} has ranks {smeta['ranks']}, "
+                f"requested {list(meta.ranks)}"
+            )
+        done = np.asarray(opt["step"]).tolist()
+        print(f"resumed packed state {state_id!r} (per-adapter steps {done})")
 
     def run():
         nonlocal lora, opt
@@ -115,10 +139,20 @@ def main():
                 base, to_named(param_specs(jax.eval_shape(lambda: base), cfg, mesh_ctx), mesh_ctx))
             lora = jax.device_put(
                 lora, to_named(param_specs(jax.eval_shape(lambda: lora), cfg, mesh_ctx), mesh_ctx))
-            opt = init_opt_state(lora)
+            opt = init_opt_state(lora, n_pack=meta.n)
             metrics = run()
     else:
         metrics = run()
+
+    if args.save_state:
+        pool = CheckpointPool(args.pool)
+        pool.save_packed_state(
+            state_id, lora, opt,
+            {"arch": cfg.name, "ranks": list(meta.ranks),
+             "alphas": list(meta.alphas), "seq": args.seq,
+             "steps_done": np.asarray(opt["step"]).tolist()},
+        )
+        print(f"saved packed state {state_id!r} to {args.pool}")
 
     if args.pool:
         pool = CheckpointPool(args.pool)

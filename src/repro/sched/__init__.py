@@ -1,18 +1,27 @@
 from repro.sched.cost_model import A10_24G, A100_40G, TPU_V5E, CostModel, HardwareSpec
 from repro.sched.dtm import DTMResult, JobPlan, dtm
-from repro.sched.engine import ExecutionEngine, ResourceMonitor
+from repro.sched.engine import (
+    Arrival,
+    ExecutionEngine,
+    JobSegment,
+    OnlineSchedule,
+    ResourceMonitor,
+    poisson_trace,
+)
 from repro.sched.knapsack import brute_force, solve_pack
 from repro.sched.planner import (
     Schedule,
     max_gpu_schedule,
     min_gpu_schedule,
     plan,
+    replan,
     sequential_plora_schedule,
 )
 
 __all__ = [
     "A10_24G", "A100_40G", "TPU_V5E", "CostModel", "HardwareSpec",
-    "DTMResult", "JobPlan", "dtm", "ExecutionEngine", "ResourceMonitor",
+    "DTMResult", "JobPlan", "dtm", "Arrival", "ExecutionEngine",
+    "JobSegment", "OnlineSchedule", "ResourceMonitor", "poisson_trace",
     "brute_force", "solve_pack", "Schedule", "max_gpu_schedule",
-    "min_gpu_schedule", "plan", "sequential_plora_schedule",
+    "min_gpu_schedule", "plan", "replan", "sequential_plora_schedule",
 ]

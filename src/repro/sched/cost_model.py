@@ -297,7 +297,32 @@ class CostModel:
     def job_time(
         self, configs: Sequence[LoraConfig], d: int, seq: int, n_steps: int
     ) -> float:
-        return self.setup_time + n_steps * self.iter_time(configs, d, seq)
+        return self.job_time_residual(configs, [n_steps] * len(configs), d, seq)
+
+    def job_time_residual(
+        self,
+        configs: Sequence[LoraConfig],
+        steps: Sequence[int],
+        d: int,
+        seq: int,
+    ) -> float:
+        """Per-job residual-step cost query (online engine): adapters resumed
+        from a preempted job carry fewer remaining steps than fresh arrivals,
+        and a packed job holds its devices until its longest-residual adapter
+        finishes. ``steps[i]`` is the remaining iteration count of
+        ``configs[i]``; the job pays setup once plus ``max(steps)``
+        packed iterations."""
+        if not configs:
+            return self.setup_time
+        return self.setup_time + max(steps) * self.iter_time(configs, d, seq)
+
+    def adapter_finish_offset(
+        self, configs: Sequence[LoraConfig], steps: int, d: int, seq: int
+    ) -> float:
+        """Seconds from job launch until an adapter with ``steps`` residual
+        iterations is done training (it may ride along until the pack's
+        longest adapter finishes, but its own weights stop changing here)."""
+        return self.setup_time + steps * self.iter_time(configs, d, seq)
 
     def throughput(self, configs: Sequence[LoraConfig], d: int, seq: int) -> float:
         """Paper Eq (13): LoRA FLOP per unit time. LoRA FLOP is linear in

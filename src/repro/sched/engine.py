@@ -1,17 +1,41 @@
-"""LoRA Execution Engine (paper §4, Fig. 3): resource monitor + job launcher.
+"""Event-driven concurrent LoRA execution engine (paper §4, Fig. 3).
 
-Two modes:
-  * ``simulate``   — play the planner's job queue against a simulated device
-                     pool using cost-model durations (pod-scale what-ifs).
-  * ``run_local``  — actually execute every packed job on this host (CPU
-                     XLA): packed train_loop per job, per-adapter extraction
-                     into the CheckpointPool, measured wall-clock durations
-                     mapped back onto the simulated resource timeline. This
-                     is the end-to-end driver used by examples/benchmarks.
+The engine is a **virtual-clock event loop**: a heap of job-finish and
+job-arrive events (a finish event *is* a device-free event) drives a single
+scheduling loop that supports
+
+  * **online admission** — ``LoraConfig`` s arrive mid-run on an arrival-time
+    trace (:func:`poisson_trace` builds the paper-style Poisson workload);
+    nothing is frozen at t=0;
+  * **dynamic repacking** — on every admission and device-free event the
+    engine re-invokes the planner's incremental API
+    (:func:`repro.sched.planner.replan` -> DTM, Alg. 1) over the
+    not-yet-started configs and currently free device units, instead of
+    draining a statically planned queue;
+  * **preemption-aware checkpointing** — with ``migration_budget > 0``, a
+    running packed job can be preempted on an admission event: its finished
+    adapters complete, its unfinished adapters re-enter the pending set with
+    *residual* step counts and are repacked with the new arrivals (paper §4
+    dynamic task migration). In real execution the preempted adapters
+    round-trip through the :class:`~repro.train.checkpoint.CheckpointPool`
+    (weights + Adam moments + step counts) and are injected into whatever
+    pack the replanner chooses next.
+
+Both modes share this one loop: ``plan_online``/``simulate`` play the trace
+against cost-model durations (pod-scale what-ifs), and ``run_online_local``
+executes the *same* planned segments for real on this host (CPU XLA),
+per-adapter state flowing through the checkpoint pool. The static
+``simulate(schedule)`` / ``run_local(schedule, ...)`` entry points are the
+degenerate no-arrivals case and reuse the same segment executor.
+
+The static baseline the benchmarks compare against is ``repack="drain"``:
+admission still happens, but the engine only replans when *all* devices are
+free — exactly the frozen-queue batch replayer this engine replaced.
 """
 from __future__ import annotations
 
 import heapq
+import itertools
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -21,9 +45,9 @@ import numpy as np
 
 from repro.configs.base import LoraConfig, ModelConfig
 from repro.core.adapter import pack_meta
-from repro.core.packed_lora import extract_adapter
+from repro.core.packed_lora import extract_adapter, inject_adapter
 from repro.sched.cost_model import CostModel
-from repro.sched.planner import Schedule, ScheduledJob, plan
+from repro.sched.planner import Schedule, ScheduledJob, replan
 from repro.train.checkpoint import CheckpointPool
 
 
@@ -54,33 +78,168 @@ class JobRecord:
     final_losses: Optional[np.ndarray] = None
 
 
+# ---------------------------------------------------------------------------
+# Arrival traces
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Arrival:
+    """One online job submission: a LoRA config arriving at ``time`` that
+    needs ``steps`` training iterations (None = the run-level default)."""
+
+    time: float
+    config: LoraConfig
+    steps: Optional[int] = None
+
+
+def poisson_trace(
+    configs: Sequence[LoraConfig],
+    mean_interarrival: float,
+    seed: int = 0,
+    steps: Optional[Sequence[int]] = None,
+) -> List[Arrival]:
+    """Poisson arrival process over ``configs`` (order preserved): i.i.d.
+    exponential inter-arrival gaps with the given mean, shifted so the first
+    config arrives at t=0. Deterministic in ``seed``."""
+    rng = np.random.RandomState(seed)
+    gaps = rng.exponential(mean_interarrival, size=len(configs))
+    times = np.cumsum(gaps) - gaps[0]
+    return [
+        Arrival(float(t), c, None if steps is None else int(steps[i]))
+        for i, (t, c) in enumerate(zip(times, configs))
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Online schedule (the event loop's output)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class JobSegment:
+    """One contiguous run of a packed job on ``degree`` device units.
+
+    A job that runs to completion is one segment; a preempted job is a
+    ``preempted=True`` segment (cut at the migration point) followed — after
+    repacking — by later segments of whatever new jobs its unfinished
+    adapters land in. ``start_steps[i]`` is how many iterations
+    ``config_ids[i]`` had already trained before this segment (0 = fresh;
+    >0 = resumed from the checkpoint pool); ``run_steps`` is the number of
+    packed iterations this segment executes; ``done_ids`` are the configs
+    whose step budget completes within this segment."""
+
+    job_id: int
+    config_ids: Tuple[int, ...]
+    degree: int
+    start: float
+    end: float
+    start_steps: Tuple[int, ...]
+    run_steps: int
+    done_ids: Tuple[int, ...]
+    preempted: bool = False
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
+
+
+@dataclass
+class OnlineSchedule:
+    segments: List[JobSegment]
+    makespan: float
+    g: int
+    completed: Dict[int, float]  # cid -> virtual completion time
+    total_steps: Dict[int, int]  # cid -> total step budget
+    n_repacks: int = 0
+    n_migrations: int = 0
+    n_f_calls: int = 0
+
+    def utilization(self) -> float:
+        """Busy device-seconds / (G * makespan)."""
+        if not self.segments or self.makespan <= 0:
+            return 0.0
+        busy = sum(s.duration * s.degree for s in self.segments)
+        return busy / (self.g * self.makespan)
+
+    def validate(self):
+        """Raise if any instant oversubscribes the device pool."""
+        _validate_intervals(
+            [(s.start, s.end, s.degree) for s in self.segments], self.g
+        )
+
+
+def _validate_intervals(intervals: Sequence[Tuple[float, float, int]], g: int):
+    monitor = ResourceMonitor(g)
+    events = []
+    for start, end, degree in intervals:
+        events.append((start, 1, degree))
+        events.append((end, 0, degree))
+    # process releases before acquires at equal timestamps
+    for t, kind, d in sorted(events, key=lambda e: (e[0], e[1])):
+        if kind == 0:
+            monitor.release(d)
+        elif not monitor.acquire(d):
+            raise RuntimeError(f"schedule oversubscribes devices at t={t:.2f}")
+
+
+# ---------------------------------------------------------------------------
+# Event loop internals
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Pending:
+    cid: int
+    config: LoraConfig
+    arrival: float
+    steps_done: int
+    total_steps: int
+
+    @property
+    def residual(self) -> int:
+        return self.total_steps - self.steps_done
+
+
+@dataclass
+class _Running:
+    job_id: int
+    cids: Tuple[int, ...]
+    sel: List[LoraConfig]
+    degree: int
+    start: float
+    iter_time: float
+    residuals: Tuple[int, ...]
+    start_steps: Tuple[int, ...]
+    run_steps: int  # max residual: iterations until the job finishes
+    est_end: float
+
+
+_EPS = 1e-9
+
+# Fraction of the estimated wait-for-victim completion a preemption must
+# beat before the engine migrates (guards against churn from the myopic
+# single-victim estimate; see ExecutionEngine.plan_online).
+MIGRATION_MARGIN = 0.25
+
+
 class ExecutionEngine:
+    """Resource monitor + event loop + job launcher over ``g`` device units."""
+
     def __init__(self, cm: CostModel, g: int):
         self.cm = cm
         self.monitor = ResourceMonitor(g)
 
-    # ---------------- simulation ----------------
+    # ---------------- static entry points (no-arrivals special case) -------
 
     def simulate(self, schedule: Schedule) -> float:
-        """Replay a schedule through the resource monitor; returns makespan
-        and validates that the plan never over-subscribes devices."""
-        events = []  # (time, +1 release / -1 acquire, degree)
-        for j in schedule.jobs:
-            events.append((j.start, 1, j.degree))
-            events.append((j.end, 0, j.degree))
-        # process releases before acquires at equal timestamps
-        for t, kind, d in sorted(events, key=lambda e: (e[0], e[1])):
-            if kind == 0:
-                self.monitor.release(d)
-            else:
-                ok = self.monitor.acquire(d)
-                if not ok:
-                    raise RuntimeError(
-                        f"schedule oversubscribes devices at t={t:.2f}"
-                    )
+        """Replay a static schedule's timeline through the resource monitor;
+        returns the makespan and raises if the plan ever over-subscribes."""
+        _validate_intervals(
+            [(j.start, j.end, j.degree) for j in schedule.jobs],
+            self.monitor.total,
+        )
         return schedule.makespan
-
-    # ---------------- real local execution ----------------
 
     def run_local(
         self,
@@ -95,56 +254,492 @@ class ExecutionEngine:
         data_iter_fn: Optional[Callable] = None,
         seed: int = 0,
     ) -> Tuple[List[JobRecord], float]:
-        """Execute every job of the schedule on this host. Returns the job
-        records and the *measured-duration* makespan (each job's simulated
-        duration replaced by its measured wall time, replayed through the
-        planner's resource timeline)."""
+        """Execute every job of a static schedule on this host via the shared
+        segment executor. Returns the job records and the measured-duration
+        makespan (each job's simulated duration replaced by its wall time,
+        replayed through the resource timeline)."""
+        segments = [
+            JobSegment(
+                job_id=i,
+                config_ids=j.config_ids,
+                degree=j.degree,
+                start=j.start,
+                end=j.end,
+                start_steps=(0,) * len(j.config_ids),
+                run_steps=n_steps,
+                done_ids=j.config_ids,
+            )
+            for i, j in enumerate(schedule.jobs)
+        ]
+        records = self._execute_segments(
+            segments,
+            {i: c for i, c in enumerate(configs)},
+            {i: n_steps for i in range(len(configs))},
+            cfg,
+            base_params,
+            seq=seq,
+            pool=pool,
+            data_iter_fn=data_iter_fn,
+            seed=seed,
+        )
+        makespan = replay_measured(schedule, records, self.monitor.total)
+        return records, makespan
+
+    # ---------------- the event loop ----------------
+
+    def plan_online(
+        self,
+        trace: Sequence[Arrival],
+        seq: int,
+        n_steps: int,
+        *,
+        repack: str = "event",
+        admission: str = "patient",
+        migration_budget: int = 0,
+        preempt_min_remaining: Optional[float] = None,
+    ) -> OnlineSchedule:
+        """Play an arrival trace through the virtual-clock event loop.
+
+        ``repack="event"`` replans on every admission/device-free event (the
+        online engine); ``repack="drain"`` only replans when the pool is
+        fully idle (the frozen-queue static baseline). ``migration_budget``
+        caps how many running jobs may be preempted over the whole run;
+        ``preempt_min_remaining`` (default ``4 * setup_time``) is the minimum
+        estimated remaining time that makes a victim worth re-paying setup
+        for.
+
+        ``admission="patient"`` guards against the online-greedy pathology:
+        dispatching an arrival immediately onto a few free units can lose to
+        waiting for the next job-finish and launching at higher parallelism.
+        On every repack with jobs still running, the engine compares the
+        estimated completion of launch-now-on-``free`` against
+        wait-then-launch-on-``free + soon-freed`` and holds the pending set
+        when waiting wins. ``admission="eager"`` always dispatches (exactly
+        Algorithm 2's greedy rule, and the t=0 behavior of ``plan``)."""
+        if repack not in ("event", "drain"):
+            raise ValueError(f"unknown repack policy {repack!r}")
+        if admission not in ("patient", "eager"):
+            raise ValueError(f"unknown admission policy {admission!r}")
+        g = self.monitor.total
+        cm = self.cm
+        if preempt_min_remaining is None:
+            preempt_min_remaining = 4.0 * cm.setup_time
+
+        heap: List[Tuple[float, int, int, str, int]] = []
+        seqno = itertools.count()
+        for cid, a in enumerate(trace):
+            heapq.heappush(heap, (a.time, 1, next(seqno), "arrive", cid))
+
+        pending: List[_Pending] = []
+        running: Dict[int, _Running] = {}
+        segments: List[JobSegment] = []
+        completed: Dict[int, float] = {}
+        total_steps = {
+            cid: (a.steps if a.steps is not None else n_steps)
+            for cid, a in enumerate(trace)
+        }
+        free = g
+        next_job = itertools.count()
+        n_repacks = n_migrations = n_f = 0
+
+        def finish_segment(r: _Running, end: float, steps_run: int, preempted: bool):
+            done = tuple(
+                cid
+                for cid, resid in zip(r.cids, r.residuals)
+                if resid <= steps_run
+            )
+            for cid, resid in zip(r.cids, r.residuals):
+                if resid <= steps_run:
+                    completed[cid] = r.start + cm.adapter_finish_offset(
+                        r.sel, resid, r.degree, seq
+                    )
+            segments.append(
+                JobSegment(
+                    job_id=r.job_id,
+                    config_ids=r.cids,
+                    degree=r.degree,
+                    start=r.start,
+                    end=end,
+                    start_steps=r.start_steps,
+                    run_steps=steps_run,
+                    done_ids=done,
+                    preempted=preempted,
+                )
+            )
+
+        def do_repack(now: float):
+            nonlocal free, n_repacks, n_f
+            if not pending or free <= 0:
+                return
+            if repack == "drain" and running:
+                return  # static baseline: wait for the full drain
+            pending.sort(key=lambda e: e.cid)
+            cfgs = [e.config for e in pending]
+            resid = [e.residual for e in pending]
+            res = replan(cm, cfgs, free, seq, n_steps, residual_steps=resid)
+            n_repacks += 1
+            n_f += res.n_f_calls
+            if not res.jobs:
+                return
+            if admission == "patient" and running:
+                # launch now at `free`, or wait for the next finish and
+                # launch wider? Compare estimated completion times.
+                t_next = min(r.est_end for r in running.values())
+                freed = free + sum(
+                    r.degree
+                    for r in running.values()
+                    if r.est_end <= t_next + _EPS
+                )
+                res_wait = replan(
+                    cm, cfgs, freed, seq, n_steps, residual_steps=resid
+                )
+                n_f += res_wait.n_f_calls
+                covered_now = sum(len(j.config_ids) for j in res.jobs)
+                covered_wait = sum(len(j.config_ids) for j in res_wait.jobs)
+                finish_now = now + max(j.est_time for j in res.jobs)
+                finish_wait = (
+                    t_next + max(j.est_time for j in res_wait.jobs)
+                    if res_wait.jobs
+                    else float("inf")
+                )
+                if covered_wait >= covered_now and finish_wait <= finish_now:
+                    return  # hold: the next device-free event re-evaluates
+            launched = set()
+            for jp in res.jobs:
+                entries = [pending[i] for i in jp.config_ids]
+                sel = [e.config for e in entries]
+                r = _Running(
+                    job_id=next(next_job),
+                    cids=tuple(e.cid for e in entries),
+                    sel=sel,
+                    degree=jp.degree,
+                    start=now,
+                    iter_time=cm.iter_time(sel, jp.degree, seq),
+                    residuals=tuple(e.residual for e in entries),
+                    start_steps=tuple(e.steps_done for e in entries),
+                    run_steps=max(e.residual for e in entries),
+                    est_end=now + jp.est_time,
+                )
+                running[r.job_id] = r
+                heapq.heappush(
+                    heap, (r.est_end, 0, next(seqno), "finish", r.job_id)
+                )
+                free -= jp.degree
+                launched |= set(r.cids)
+            if launched:
+                pending[:] = [e for e in pending if e.cid not in launched]
+
+        def steps_run_at(r: _Running, now: float) -> int:
+            done = int((now - r.start - cm.setup_time) // r.iter_time)
+            return max(0, min(done, r.run_steps))
+
+        def preempt(r: _Running, now: float):
+            nonlocal free, n_migrations
+            steps_run = steps_run_at(r, now)
+            finish_segment(r, now, steps_run, preempted=True)
+            for cfg_c, cid, resid, st0 in zip(
+                r.sel, r.cids, r.residuals, r.start_steps
+            ):
+                if resid > steps_run:
+                    pending.append(
+                        _Pending(
+                            cid, cfg_c, now, st0 + steps_run, total_steps[cid]
+                        )
+                    )
+            del running[r.job_id]  # its finish event becomes stale
+            free += r.degree
+            n_migrations += 1
+
+        def migration_pays(victim: _Running, now: float) -> bool:
+            """Cost-model estimate of the paper's dynamic-task-migration
+            trade: preempt the victim and repack its unfinished adapters
+            together with the pending set on its devices *now*, versus
+            leaving it alone and scheduling the pending set when it
+            finishes. Preemption re-pays job setup, so it only wins when
+            the victim still has a long run ahead of stranded arrivals."""
+            steps_run = steps_run_at(victim, now)
+            unfinished = [
+                (c, resid - steps_run)
+                for c, resid in zip(victim.sel, victim.residuals)
+                if resid > steps_run
+            ]
+            if not unfinished:
+                return False
+            avail = free + victim.degree
+            merged = [e.config for e in pending] + [c for c, _ in unfinished]
+            merged_resid = [e.residual for e in pending] + [
+                s for _, s in unfinished
+            ]
+            res_m = replan(
+                cm, merged, avail, seq, n_steps, residual_steps=merged_resid
+            )
+            res_w = replan(
+                cm,
+                [e.config for e in pending],
+                avail,
+                seq,
+                n_steps,
+                residual_steps=[e.residual for e in pending],
+            )
+            miss_m = len(merged) - sum(len(j.config_ids) for j in res_m.jobs)
+            miss_w = len(pending) - sum(len(j.config_ids) for j in res_w.jobs)
+            fin_m = (
+                now + max(j.est_time for j in res_m.jobs)
+                if res_m.jobs
+                else float("inf")
+            )
+            fin_w = (
+                victim.est_end + max(j.est_time for j in res_w.jobs)
+                if res_w.jobs
+                else victim.est_end
+            )
+            if miss_m != miss_w:
+                return miss_m < miss_w
+            # the wait estimate is pessimistic (other jobs may free devices
+            # first), so demand the preemption win clear a safety margin
+            # before re-paying setup and churning the pack
+            return fin_m < now + (fin_w - now) * (1.0 - MIGRATION_MARGIN)
+
+        while heap:
+            t = heap[0][0]
+            arrived = False
+            while heap and heap[0][0] <= t + _EPS:
+                _, _, _, kind, payload = heapq.heappop(heap)
+                if kind == "finish":
+                    r = running.pop(payload, None)
+                    if r is None:
+                        continue  # stale event of a preempted job
+                    finish_segment(r, r.est_end, r.run_steps, preempted=False)
+                    free += r.degree
+                else:
+                    a = trace[payload]
+                    pending.append(
+                        _Pending(payload, a.config, a.time, 0, total_steps[payload])
+                    )
+                    arrived = True
+
+            do_repack(t)
+            # dynamic task migration (paper §4): on admission events, if work
+            # is still stranded in the pending set, preempt the running job
+            # with the most remaining time and repack everything together.
+            while (
+                repack == "event"
+                and arrived
+                and pending
+                and running
+                and n_migrations < migration_budget
+            ):
+                victims = [
+                    r for r in running.values() if r.start < t - _EPS
+                ]
+                if not victims:
+                    break
+                victim = max(victims, key=lambda r: (r.est_end, r.job_id))
+                if victim.est_end - t <= preempt_min_remaining:
+                    break
+                if not migration_pays(victim, t):
+                    break
+                preempt(victim, t)
+                do_repack(t)
+
+        if pending:
+            raise RuntimeError(
+                f"{len(pending)} configs can never be scheduled on "
+                f"{g} free device units (min degree exceeds the pool?)"
+            )
+        makespan = max(
+            (s.end for s in segments),
+            default=0.0,
+        )
+        sched = OnlineSchedule(
+            segments=segments,
+            makespan=makespan,
+            g=g,
+            completed=completed,
+            total_steps=total_steps,
+            n_repacks=n_repacks,
+            n_migrations=n_migrations,
+            n_f_calls=n_f,
+        )
+        sched.validate()
+        return sched
+
+    # ``simulate`` for the online mode is just the event loop itself.
+    simulate_online = plan_online
+
+    def run_online_local(
+        self,
+        trace: Sequence[Arrival],
+        cfg: ModelConfig,
+        base_params,
+        *,
+        n_steps: int,
+        seq: int,
+        pool: Optional[CheckpointPool] = None,
+        repack: str = "event",
+        admission: str = "patient",
+        migration_budget: int = 0,
+        preempt_min_remaining: Optional[float] = None,
+        data_iter_fn: Optional[Callable] = None,
+        seed: int = 0,
+    ) -> Tuple[List[JobRecord], OnlineSchedule]:
+        """Real CPU-XLA execution of an online trace: the event loop above
+        decides the segments; every segment then trains for real, preempted
+        adapters checkpointing through ``pool`` and resuming — possibly with
+        different pack partners — via ``inject_adapter``."""
+        sched = self.plan_online(
+            trace,
+            seq,
+            n_steps,
+            repack=repack,
+            admission=admission,
+            migration_budget=migration_budget,
+            preempt_min_remaining=preempt_min_remaining,
+        )
+        if sched.n_migrations and pool is None:
+            raise ValueError(
+                "preemption occurred but no CheckpointPool was given to "
+                "carry resumable adapter state"
+            )
+        records = self._execute_segments(
+            sched.segments,
+            {cid: a.config for cid, a in enumerate(trace)},
+            sched.total_steps,
+            cfg,
+            base_params,
+            seq=seq,
+            pool=pool,
+            data_iter_fn=data_iter_fn,
+            seed=seed,
+        )
+        return records, sched
+
+    # ---------------- shared segment executor ----------------
+
+    def _execute_segments(
+        self,
+        segments: Sequence[JobSegment],
+        configs_by_cid: Dict[int, LoraConfig],
+        total_steps: Dict[int, int],
+        cfg: ModelConfig,
+        base_params,
+        *,
+        seq: int,
+        pool: Optional[CheckpointPool],
+        data_iter_fn: Optional[Callable],
+        seed: int,
+    ) -> List[JobRecord]:
+        """Execute planned segments in virtual-time order on this host.
+
+        Resumed adapters (``start_steps > 0``) are loaded from the pool and
+        injected into the new pack (weights + Adam moments + per-adapter step
+        count); per-adapter step *budgets* freeze an adapter once its own
+        iteration count is met, even while longer-residual packmates keep
+        training — so real execution matches the virtual accounting."""
         from repro.models.model import init_model
         from repro.train.data import packed_batch_iterator
-        from repro.train.trainer import make_train_step, train_loop
         from repro.train.optimizer import init_opt_state
+        from repro.train.trainer import make_train_step
 
         records: List[JobRecord] = []
-        for j in schedule.jobs:
-            job_cfgs = [configs[i] for i in j.config_ids]
+        order = sorted(segments, key=lambda s: (s.start, s.job_id))
+        for seg in order:
+            job_cfgs = [configs_by_cid[cid] for cid in seg.config_ids]
             meta = pack_meta(job_cfgs)
             key = jax.random.PRNGKey(seed)
             _, lora = init_model(key, cfg, meta)
+            opt = init_opt_state(lora, n_pack=meta.n)
+            for slot, (cid, st0) in enumerate(
+                zip(seg.config_ids, seg.start_steps)
+            ):
+                if st0 == 0:
+                    continue
+                if pool is None or not pool.has_adapter_state(f"{cid:04d}"):
+                    raise RuntimeError(
+                        f"segment resumes config {cid} at step {st0} but the "
+                        "pool holds no checkpointed state for it"
+                    )
+                state, smeta = pool.load_adapter_state(f"{cid:04d}")
+                assert int(smeta["steps_done"]) == st0, (cid, smeta, st0)
+                lora = inject_adapter(lora, state["w"], slot)
+                opt["m"] = inject_adapter(opt["m"], state["m"], slot)
+                opt["v"] = inject_adapter(opt["v"], state["v"], slot)
+                opt["step"] = opt["step"].at[slot].set(st0)
+            budgets = np.asarray(
+                [total_steps[cid] for cid in seg.config_ids], np.int32
+            )
+            step = make_train_step(cfg, meta, step_budgets=budgets)
             it = (
                 data_iter_fn(cfg, job_cfgs, seq)
                 if data_iter_fn
                 else packed_batch_iterator(cfg, job_cfgs, seq=seq)
             )
-            step = make_train_step(cfg, meta)
-            opt = init_opt_state(lora)
-            # compile outside the timed region (the paper times steady state)
-            b0 = next(it)
-            lora, opt, m = step(base_params, lora, opt, b0)
-            jax.block_until_ready(m["loss"])
-            t0 = time.perf_counter()
+            wall = 0.0
             losses = None
-            for _ in range(n_steps):
-                lora, opt, m = step(base_params, lora, opt, next(it))
-            jax.block_until_ready(m["loss"])
-            wall = time.perf_counter() - t0
-            losses = np.asarray(m["per_adapter_loss"])
-            records.append(JobRecord(j, wall, losses))
-            if pool is not None:
-                for slot, cid in enumerate(j.config_ids):
+            m = None
+            if seg.run_steps > 0:
+                b0 = next(it)
+                # compile outside the timed region on throwaway copies (the
+                # paper times steady state); the real loop then starts from
+                # the same state and batch, so step accounting stays exact
+                lora_w = jax.tree.map(lambda x: x.copy(), lora)
+                opt_w = jax.tree.map(lambda x: x.copy(), opt)
+                _, _, warm = step(base_params, lora_w, opt_w, b0)
+                jax.block_until_ready(warm["loss"])
+                t0 = time.perf_counter()
+                for batch in itertools.islice(
+                    itertools.chain([b0], it), seg.run_steps
+                ):
+                    lora, opt, m = step(base_params, lora, opt, batch)
+                jax.block_until_ready(m["loss"])
+                wall = time.perf_counter() - t0
+                losses = np.asarray(m["per_adapter_loss"])
+            done = set(seg.done_ids)
+            for slot, cid in enumerate(seg.config_ids):
+                c = configs_by_cid[cid]
+                if cid in done:
+                    if pool is None:
+                        continue
                     adapter = extract_adapter(lora, slot, meta.ranks)
                     pool.save_adapter(
                         f"adapter_{cid:04d}",
                         adapter,
                         {
-                            "rank": configs[cid].rank,
-                            "alpha": configs[cid].alpha,
-                            "learning_rate": configs[cid].learning_rate,
-                            "batch_size": configs[cid].batch_size,
-                            "final_loss": float(losses[slot]),
+                            "rank": c.rank,
+                            "alpha": c.alpha,
+                            "learning_rate": c.learning_rate,
+                            "batch_size": c.batch_size,
+                            "final_loss": (
+                                float(losses[slot]) if losses is not None
+                                else float("nan")
+                            ),
+                            "total_steps": int(total_steps[cid]),
                         },
                     )
-        makespan = replay_measured(schedule, records, self.monitor.total)
-        return records, makespan
+                else:  # preempted mid-training: checkpoint resumable state
+                    assert pool is not None
+                    state = {
+                        "w": extract_adapter(lora, slot, meta.ranks),
+                        "m": extract_adapter(opt["m"], slot, meta.ranks),
+                        "v": extract_adapter(opt["v"], slot, meta.ranks),
+                    }
+                    pool.save_adapter_state(
+                        f"{cid:04d}",
+                        state,
+                        {
+                            "steps_done": int(seg.start_steps[slot] + seg.run_steps),
+                            "rank": c.rank,
+                            "total_steps": int(total_steps[cid]),
+                        },
+                    )
+            records.append(
+                JobRecord(
+                    ScheduledJob(seg.config_ids, seg.degree, seg.start, seg.end),
+                    wall,
+                    losses,
+                )
+            )
+        return records
 
 
 def replay_measured(

@@ -68,6 +68,33 @@ class Schedule:
         return min(self.ar_bound(), self.ar_bound_work())
 
 
+def replan(
+    cm: CostModel,
+    configs: Sequence[LoraConfig],
+    free: int,
+    seq: int,
+    n_steps: int,
+    *,
+    residual_steps: Optional[Sequence[int]] = None,
+    max_policies: int = 4096,
+) -> DTMResult:
+    """Incremental replanning API (online engine hook): one DTM invocation
+    over the *currently pending* configs and the *currently free* device
+    units. The event-driven engine calls this on every admission and
+    device-free event instead of draining a frozen queue; ``residual_steps``
+    carries the remaining iteration counts of adapters preempted out of
+    running jobs (paper §4 dynamic task migration)."""
+    return dtm(
+        cm,
+        configs,
+        free,
+        seq,
+        n_steps,
+        residual_steps=residual_steps,
+        max_policies=max_policies,
+    )
+
+
 def plan(
     cm: CostModel,
     configs: Sequence[LoraConfig],
@@ -75,7 +102,9 @@ def plan(
     seq: int,
     n_steps: int,
 ) -> Schedule:
-    """Algorithm 2."""
+    """Algorithm 2: the offline special case of online replanning — every
+    config is known at t=0, so the loop below is exactly `replan` on each
+    device-free event over the not-yet-started remainder."""
     remaining = set(range(len(configs)))
     free = g
     t = 0.0
@@ -85,7 +114,7 @@ def plan(
     while remaining or running:
         launched = False
         if remaining and free > 0:
-            res: DTMResult = dtm(
+            res: DTMResult = replan(
                 cm, [configs[i] for i in sorted(remaining)], free, seq, n_steps
             )
             n_calls += res.n_f_calls

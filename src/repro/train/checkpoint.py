@@ -71,7 +71,60 @@ class CheckpointPool:
         with open(self._path(adapter_id) + ".json") as f:
             return json.load(f)
 
+    def has(self, adapter_id: str) -> bool:
+        return os.path.exists(self._path(adapter_id))
+
+    # "state_" / "part_" are reserved prefixes: whole-pack snapshots and
+    # preempted-adapter training state live in the same directory but are
+    # NOT finished adapters, so list() (whose callers read final_loss meta)
+    # must not return them.
+    _RESERVED = ("state_", "part_")
+
     def list(self):
         return sorted(
-            f[:-4] for f in os.listdir(self.root) if f.endswith(".npz")
+            f[:-4]
+            for f in os.listdir(self.root)
+            if f.endswith(".npz") and not f.startswith(self._RESERVED)
         )
+
+    def list_states(self):
+        """Ids of resumable snapshots: packed states and per-adapter
+        preempted-training state (the reserved-prefix files)."""
+        return sorted(
+            f[:-4]
+            for f in os.listdir(self.root)
+            if f.endswith(".npz") and f.startswith(self._RESERVED)
+        )
+
+    # ---------------- resumable packed state (online engine) ----------------
+    #
+    # Two granularities:
+    #   * whole-pack snapshots — resume the SAME job after an interruption
+    #     (launch/train.py --save-state/--resume-state);
+    #   * per-adapter training state (weights + Adam moments + step count) —
+    #     a preempted job checkpoints each unfinished adapter here, and the
+    #     engine re-injects it into whatever pack the replanner puts it in
+    #     next (paper §4 dynamic task migration).
+
+    def save_packed_state(self, state_id: str, lora, opt_state, meta: dict):
+        save_tree(
+            self._path(f"state_{state_id}"),
+            {"lora": lora, "opt": opt_state},
+            meta,
+        )
+
+    def load_packed_state(self, state_id: str):
+        tree = load_tree(self._path(f"state_{state_id}"))
+        meta = self.load_meta(f"state_{state_id}")
+        return tree["lora"], tree["opt"], meta
+
+    def save_adapter_state(self, adapter_id: str, state_tree, meta: dict):
+        """``state_tree`` = {"w": adapter, "m": moments, "v": moments}."""
+        save_tree(self._path(f"part_{adapter_id}"), state_tree, meta)
+
+    def load_adapter_state(self, adapter_id: str):
+        tree = load_tree(self._path(f"part_{adapter_id}"))
+        return tree, self.load_meta(f"part_{adapter_id}")
+
+    def has_adapter_state(self, adapter_id: str) -> bool:
+        return self.has(f"part_{adapter_id}")

@@ -9,18 +9,22 @@ heterogeneity inside a single jitted update.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 
-def init_opt_state(lora_params) -> Dict[str, Any]:
+def init_opt_state(lora_params, n_pack: int = 0) -> Dict[str, Any]:
+    """``n_pack > 0`` makes ``step`` a per-adapter (N,) vector instead of a
+    scalar — required by the online engine, where a pack can mix fresh
+    adapters (step 0) with adapters resumed from a preempted job (step k):
+    each adapter's Adam bias correction continues from its own count."""
     zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
     return {
         "m": zeros(lora_params),
         "v": zeros(lora_params),
-        "step": jnp.zeros((), jnp.int32),
+        "step": jnp.zeros((n_pack,) if n_pack else (), jnp.int32),
     }
 
 
@@ -44,8 +48,19 @@ def adamw_update(
     b2: float = 0.999,
     eps: float = 1e-8,
     weight_decay: float = 0.0,
+    step_budget: Optional[jnp.ndarray] = None,  # (N,) max steps per adapter
 ) -> Tuple[Any, Dict[str, Any]]:
-    step = opt_state["step"] + 1
+    """``step_budget`` (online engine) freezes adapter n — params, moments
+    and step count — once it has trained its own budgeted iterations, while
+    packmates with longer residuals keep updating: packed jobs can then mix
+    adapters with heterogeneous remaining-step counts and real execution
+    matches the virtual scheduler's per-adapter accounting."""
+    active = None
+    if step_budget is not None:
+        active = (opt_state["step"] < step_budget).astype(jnp.float32)  # (N,)
+        step = opt_state["step"] + active.astype(opt_state["step"].dtype)
+    else:
+        step = opt_state["step"] + 1
     n_pack = lr_vector.shape[0]
     c1 = 1.0 - b1 ** step.astype(jnp.float32)
     c2 = 1.0 - b2 ** step.astype(jnp.float32)
@@ -56,17 +71,30 @@ def adamw_update(
     flat_p = jax.tree.leaves(params)
     new_p, new_m, new_v = [], [], []
     for (path, g), m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
-        m = b1 * m + (1 - b1) * g
-        v = b2 * v + (1 - b2) * (g * g)
-        mh = m / c1
-        vh = v / c2
-        lr = lr_vector.reshape(_lr_shape(path, p, n_pack)).astype(p.dtype)
+        shape = _lr_shape(path, p, n_pack)
+        # per-adapter step vector (online engine): broadcast bias correction
+        # along the pack axis, same as the learning rate
+        c1l = c1.reshape(shape) if c1.ndim else c1
+        c2l = c2.reshape(shape) if c2.ndim else c2
+        if active is not None:
+            g = g * active.reshape(shape).astype(g.dtype)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * (g * g)
+        if active is not None:
+            act = active.reshape(shape)
+            m_new = act * m_new + (1 - act) * m
+            v_new = act * v_new + (1 - act) * v
+        mh = m_new / jnp.maximum(c1l, 1e-12)
+        vh = v_new / jnp.maximum(c2l, 1e-12)
+        lr = lr_vector.reshape(shape).astype(p.dtype)
         upd = mh / (jnp.sqrt(vh) + eps)
         if weight_decay:
             upd = upd + weight_decay * p
+        if active is not None:
+            upd = upd * active.reshape(shape).astype(p.dtype)
         new_p.append(p - lr * upd)
-        new_m.append(m)
-        new_v.append(v)
+        new_m.append(m_new)
+        new_v.append(v_new)
     treedef = jax.tree.structure(params)
     return (
         jax.tree.unflatten(treedef, new_p),

@@ -54,9 +54,13 @@ def make_train_step(
     chunk_q: int = 512,
     vocab_chunk: int = 512,
     weight_decay: float = 0.0,
+    step_budgets=None,  # (N,) per-adapter max step counts (online engine)
     jit: bool = True,
 ):
     lr_vec = meta.lr_vector()
+    budgets = (
+        jnp.asarray(step_budgets, jnp.int32) if step_budgets is not None else None
+    )
 
     def train_step(base, lora, opt_state, batch):
         (total, per_adapter), grads = jax.value_and_grad(
@@ -64,7 +68,8 @@ def make_train_step(
         )(lora, base, batch, cfg, meta,
           dist=dist, chunk_q=chunk_q, vocab_chunk=vocab_chunk)
         lora_new, opt_state = adamw_update(
-            grads, opt_state, lora, lr_vec, weight_decay=weight_decay
+            grads, opt_state, lora, lr_vec, weight_decay=weight_decay,
+            step_budget=budgets,
         )
         metrics = {"loss": total, "per_adapter_loss": per_adapter}
         return lora_new, opt_state, metrics

@@ -1,0 +1,42 @@
+"""Guarded ``hypothesis`` import (ISSUE 1 satellite).
+
+Property-based tests use ``from _hyp import given, settings, st``. When
+``hypothesis`` is installed (the CI/[test] extra) this re-exports the real
+API unchanged. On a minimal install (``requirements.txt`` only) the suite
+must degrade to *skips*, not collection errors, so this module falls back to
+stub decorators that mark every ``@given`` test as skipped via
+``pytest.importorskip`` semantics while leaving all non-property tests in
+the same file runnable.
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # minimal install: degrade property tests to skips
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _Strategies:
+        """Stub for ``hypothesis.strategies``: every strategy builder returns
+        an inert placeholder (the ``given`` stub never draws from it)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

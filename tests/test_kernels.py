@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # guarded hypothesis import (skips sans hypothesis)
 
 from repro.kernels.ops import packed_lora_delta, grouped_matmul
 from repro.kernels.packed_matmul import packed_matmul

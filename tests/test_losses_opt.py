@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # guarded hypothesis import (skips sans hypothesis)
 
 from repro.train.losses import IGNORE, chunked_cross_entropy, top1_accuracy
 from repro.train.optimizer import adamw_update, init_opt_state

@@ -7,6 +7,8 @@ import numpy as np
 import pytest
 
 from repro.configs.base import LoraConfig, get_config, reduced
+
+pytestmark = pytest.mark.slow  # real-training sweep; full set runs on main
 from repro.core.adapter import pack_meta
 from repro.models import model as M
 from repro.train.data import eval_batch, packed_batch_iterator

@@ -3,7 +3,7 @@ job planner (Alg. 2), the Thm 6.1 AR bound, and baseline orderings that
 reproduce the paper's qualitative results (PLoRA < MinGPU < MaxGPU)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # guarded hypothesis import (skips sans hypothesis)
 
 from repro.configs.base import LoraConfig, default_search_space, get_config
 from repro.sched.cost_model import (

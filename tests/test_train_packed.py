@@ -46,9 +46,11 @@ def test_packed_equals_single_adapter_losses():
     _, h1, _ = _train([c1])
     _, h2, _ = _train([c2])
     # identical math up to float reduction order (NB=4 vs NB=2 GEMMs reduce
-    # in different orders; AdamW's rsqrt amplifies ~1e-7 to ~3e-4 by step 4)
-    np.testing.assert_allclose(h_packed[:, 0], h1[:, 0], rtol=1e-3, atol=1e-3)
-    np.testing.assert_allclose(h_packed[:, 1], h2[:, 0], rtol=1e-3, atol=1e-3)
+    # in different orders; AdamW's rsqrt amplifies ~1e-7 per-step noise by
+    # step 4 — to ~3e-4 or ~2e-3 depending on the host's XLA CPU codegen,
+    # hence the 5e-3 relative tolerance)
+    np.testing.assert_allclose(h_packed[:, 0], h1[:, 0], rtol=5e-3, atol=1e-3)
+    np.testing.assert_allclose(h_packed[:, 1], h2[:, 0], rtol=5e-3, atol=1e-3)
 
 
 def test_packed_equals_single_adapter_weights():
