@@ -27,6 +27,7 @@ def main(argv=None):
 
     from benchmarks import (
         bench_breakdown,
+        bench_cluster,
         bench_job_throughput,
         bench_kernels,
         bench_makespan,
@@ -40,6 +41,7 @@ def main(argv=None):
         "kernels": ("Table 7/8: packed-kernel speedup", bench_kernels.run),
         "makespan": ("Fig. 4: hyperparameter-tuning makespan", bench_makespan.run),
         "online": ("§4 dynamic scheduling: online admission + repacking", bench_online.run),
+        "cluster": ("Cluster executor: concurrent mesh slices vs sequential", bench_cluster.run),
         "job_throughput": ("Fig. 5: packed-job throughput", bench_job_throughput.run),
         "job_throughput_a10": ("Fig. 7 / §7.5: A10 + QLoRA", lambda fast: bench_job_throughput.run_a10(fast)),
         "breakdown": ("Fig. 6: speedup breakdown", bench_breakdown.run),
@@ -81,6 +83,13 @@ def main(argv=None):
             wins = sum(1 for r in rows if r["speedup_online"] > 1.001)
             checks.append(("online repack beats static plan (traces won)", f"{wins}/{len(rows)}"))
             checks.append(("best online+migration speedup vs static", f"{best:.2f}x"))
+        if name == "cluster" and rows:
+            sp = [r for r in rows if r["mode"] == "speedup"]
+            if sp:
+                best = max(r["speedup_concurrent"] for r in sp)
+                exact = all(r["losses_bitexact"] for r in sp)
+                checks.append(("concurrent slices vs sequential (forced 8-dev host)", f"{best:.2f}x"))
+                checks.append(("concurrent per-adapter losses bit-exact", str(exact)))
         if name == "job_throughput" and rows:
             best = max(r["speedup_vs_min"] for r in rows)
             checks.append(("job throughput vs MinGPU (paper <=12.8x)", f"{best:.2f}x"))

@@ -1,0 +1,96 @@
+"""Concurrent mesh-slice execution of an online trace — the cluster
+subsystem demo.
+
+Four LoRA configs arrive over time; the event-driven engine plans segments
+*and their device groups* (``JobSegment.units``), and the cluster runner
+executes each segment on the mesh slice backing its group — concurrently,
+thread-per-slice, on 4 CPU devices forced via XLA_FLAGS (set below before
+jax loads, so just run it):
+
+  PYTHONPATH=src python examples/cluster_concurrent.py
+
+The demo prints the real wall-clock timeline of both modes: in sequential
+mode segments run back to back; in concurrent mode segments planned on
+disjoint slices overlap, and per-adapter losses are bit-identical anyway.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+
+
+def main():
+    import jax
+
+    from repro.cluster import ClusterRunner, DevicePool, SliceExecutor
+    from repro.configs.base import LoraConfig, get_config, reduced
+    from repro.core.adapter import pack_meta
+    from repro.models.model import init_model
+    from repro.sched.cost_model import A100_40G, CostModel
+    from repro.sched.engine import Arrival, ExecutionEngine
+
+    n_dev = jax.device_count()
+    cfg = reduced(get_config("qwen25-7b"))
+    # Tiny modeled link bandwidth: TP collectives swamp any d>1 gain, so the
+    # planner carves degree-1 device groups — the regime where concurrent
+    # arrivals land on separate slices and genuinely overlap.
+    cm = CostModel(cfg, A100_40G.scaled(link_bw=1.0))
+    cm.setup_time = 0.0  # virtual seconds, not CPU wall time
+    g = min(4, n_dev)
+    eng = ExecutionEngine(cm, g)
+    seq, steps = 32, 30  # batch 2 x seq 32: per-step compute large enough
+    grid = [             # to dominate dispatch, so slices really overlap
+        LoraConfig(rank=8, alpha=8.0, learning_rate=1e-3, batch_size=2, seq_len=seq),
+        LoraConfig(rank=8, alpha=16.0, learning_rate=5e-4, batch_size=2, seq_len=seq),
+        LoraConfig(rank=16, alpha=16.0, learning_rate=1e-3, batch_size=2, seq_len=seq),
+        LoraConfig(rank=16, alpha=32.0, learning_rate=2e-4, batch_size=2, seq_len=seq),
+    ]
+    it = cm.iter_time([grid[0]], 1, seq)
+    trace = [Arrival(i * 0.5 * it, c, steps) for i, c in enumerate(grid)]
+    base, _ = init_model(jax.random.PRNGKey(0), cfg, pack_meta(grid))
+    print(f"{len(grid)} LoRA configs arriving online, {n_dev} host device(s), "
+          f"{g}-unit pool\n")
+
+    # one executor for every run: the first (discarded) run compiles each
+    # (pack shape, device) executable, so the displayed runs compare warm
+    # dispatch — the steady state of a long-running tuning service
+    ex = SliceExecutor()
+    print("warming compile caches (one discarded concurrent run) ...\n")
+    eng.run_online_local(
+        trace, cfg, base, n_steps=steps, seq=seq,
+        runner=ClusterRunner(ex, DevicePool(), concurrent=True),
+    )
+    outcomes = {}
+    for mode in ("sequential", "concurrent"):
+        runner = ClusterRunner(
+            ex, DevicePool(), concurrent=(mode == "concurrent")
+        )
+        records, sched = eng.run_online_local(
+            trace, cfg, base, n_steps=steps, seq=seq, runner=runner,
+        )
+        order = sorted(sched.segments, key=lambda s: (s.start, s.job_id))
+        makespan = max(r.real_end for r in records)
+        print(f"{mode}: wall-clock makespan {makespan:.2f}s")
+        for seg, rec in zip(order, records):
+            bar_w = 40
+            scale = bar_w / max(makespan, 1e-9)
+            lo = int(rec.real_start * scale)
+            hi = max(lo + 1, int(rec.real_end * scale))
+            bar = " " * lo + "#" * (hi - lo)
+            print(f"  job {seg.job_id} units={seg.units} "
+                  f"[{rec.real_start:6.2f}s -> {rec.real_end:6.2f}s] |{bar:<{bar_w}}|")
+        losses = np.concatenate([r.final_losses for r in records])
+        outcomes[mode] = (makespan, losses)
+        print()
+
+    seq_mk, seq_losses = outcomes["sequential"]
+    conc_mk, conc_losses = outcomes["concurrent"]
+    print(f"concurrent speedup: x{seq_mk / conc_mk:.2f}   "
+          f"per-adapter losses bit-exact: "
+          f"{bool(np.array_equal(seq_losses, conc_losses))}")
+
+
+if __name__ == "__main__":
+    main()

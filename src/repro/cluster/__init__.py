@@ -1,0 +1,29 @@
+"""Concurrent mesh-slice cluster executor (paper §4 made real).
+
+``DevicePool`` partitions the host's devices into disjoint mesh slices,
+``SliceExecutor`` compile-caches one packed train step per (slice shape,
+model config, pack width), and ``ClusterRunner`` drives planned segments
+onto slices with thread-per-slice dispatch — so concurrent LoRA jobs
+scheduled on different device groups actually overlap in wall-clock time.
+"""
+from repro.cluster.executor import NO_BUDGET, PackResult, SliceExecutor
+from repro.cluster.pool import DevicePool, MeshSlice, assign_units
+from repro.cluster.runner import (
+    ClusterResult,
+    ClusterRunner,
+    peak_overlap,
+    resume_deps,
+)
+
+__all__ = [
+    "NO_BUDGET",
+    "PackResult",
+    "SliceExecutor",
+    "DevicePool",
+    "MeshSlice",
+    "assign_units",
+    "ClusterResult",
+    "ClusterRunner",
+    "peak_overlap",
+    "resume_deps",
+]

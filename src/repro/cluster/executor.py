@@ -1,0 +1,404 @@
+"""Slice executor: compile-cached packed train steps placed on mesh slices.
+
+One :class:`SliceExecutor` owns a cache of jitted packed train steps keyed by
+(model config, pack width, slice shape). The step itself
+(:func:`repro.train.trainer.make_packed_step`) takes the per-adapter
+hyperparameter vectors — scales, learning rates, step budgets — as *runtime
+arguments*, so two packs with the same (n, r_bucket, batch, seq) shape share
+one compiled executable even when their hyperparameters differ. Segment
+execution (`run_segment`) is what the engine's ``_execute_segments`` used to
+do inline, plus explicit placement onto the segment's :class:`MeshSlice`:
+
+  * width-1 slice — everything ``device_put`` onto the slice's device;
+  * width-g slice — params sharded per the production rules
+    (``launch.sharding.param_specs``) over a ``slice_mesh`` covering exactly
+    the slice's devices, batch per ``batch_specs``, vectors replicated.
+
+Batches are pre-generated and pre-placed in bounded chunks (``PREGEN_CHUNK``)
+ahead of the step stream: Python-side data synthesis holds the GIL, and
+interleaving it step-by-step serializes concurrently dispatched segments
+(measured: it flips a 1.7x concurrency win into a 0.8x loss on a 2-core
+host); chunking keeps resident batch memory O(chunk), not O(n_steps).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LoraConfig, ModelConfig
+from repro.core.adapter import pack_meta
+from repro.core.packed_lora import extract_adapter, inject_adapter
+from repro.cluster.pool import MeshSlice
+
+# per-adapter step cap meaning "no budget": always larger than any real
+# step count, so the budget mask stays 1.0 and the update is bit-identical
+# to an unbudgeted AdamW step.
+NO_BUDGET = np.int32(2**31 - 1)
+
+# batches pre-generated and pre-placed per refill (bounds resident batch
+# memory for long runs while keeping GIL-bound data synthesis out of the
+# concurrent step stream for a whole chunk at a time)
+PREGEN_CHUNK = 256
+
+
+@dataclass
+class PackResult:
+    """Final state of one packed training run on a slice."""
+
+    lora: Any
+    opt: Any
+    losses: Optional[np.ndarray]  # final per-adapter losses (None if 0 steps)
+    wall_seconds: float  # steady-state loop time (compile excluded)
+    real_start: float = 0.0  # absolute perf_counter timestamps of the
+    real_end: float = 0.0  # placed+timed region (overlap accounting)
+
+
+class SliceExecutor:
+    """Compile-cached packed-step execution on device slices (thread-safe)."""
+
+    def __init__(self):
+        self._steps: Dict[Tuple, Callable] = {}
+        self._templates: Dict[Tuple, Tuple] = {}
+        self._lock = threading.Lock()
+        self.n_builds = 0
+        self.n_hits = 0
+
+    # ---------------- pack-state templates ----------------
+
+    def pack_template(self, cfg: ModelConfig, configs: Sequence[LoraConfig],
+                      seed: int = 0):
+        """Fresh (lora, opt) state for this pack shape, from a cached
+        template: adapter init depends only on (seed, model config, pack
+        meta), and ``init_model`` is expensive enough (~10s on a reduced
+        config: it also materializes a base model we throw away) that
+        rebuilding it per segment dominated segment runtime. Returned trees
+        share leaves with the cache — callers get fresh containers, and
+        placement copies the leaves before anything donates them."""
+        meta = pack_meta(configs)
+        # adapter init depends only on the rank tuple (shapes + rank mask),
+        # not on alphas / learning rates / batch sizes
+        key = (cfg, meta.ranks, seed)
+        with self._lock:
+            hit = self._templates.get(key)
+        if hit is None:
+            from repro.models.model import init_model
+            from repro.train.optimizer import init_opt_state
+
+            _, lora = init_model(jax.random.PRNGKey(seed), cfg, meta)
+            opt = init_opt_state(lora, n_pack=meta.n)
+            hit = (lora, opt)
+            with self._lock:
+                self._templates.setdefault(key, hit)
+        lora, opt = hit
+        return (
+            jax.tree.map(lambda x: x, lora),
+            jax.tree.map(lambda x: x, opt),
+        )
+
+    # ---------------- compile cache ----------------
+
+    def step_fn(
+        self,
+        cfg: ModelConfig,
+        n_pack: int,
+        slice_: Optional[MeshSlice] = None,
+        *,
+        nb: int = 0,
+        mesh_shape: Optional[Tuple[int, int]] = None,
+        fsdp: bool = False,
+        seq_parallel: bool = False,
+    ) -> Tuple[Callable, Optional[Any]]:
+        """Jitted packed step for this (config, pack width, slice shape).
+
+        Returns ``(step, dist)``; ``dist`` is None for width-1 slices. The
+        Python-level cache is the subsystem's compile cache: same-shape packs
+        hit the same jitted callable (and, through jax's executable cache,
+        the same XLA compilation when placed identically)."""
+        width = 1 if slice_ is None else slice_.width
+        if width == 1:
+            key: Tuple = (cfg, n_pack, 1)
+        else:
+            key = (
+                cfg, n_pack, width, slice_.devices, nb,
+                mesh_shape, fsdp, seq_parallel,
+            )
+        with self._lock:
+            hit = self._steps.get(key)
+            if hit is not None:
+                self.n_hits += 1
+                return hit
+            from repro.train.trainer import make_packed_step
+
+            dist = None
+            if width > 1:
+                from repro.launch.sharding import make_dist
+
+                data, model = mesh_shape or (1, width)
+                mesh = slice_.mesh(data=data, model=model)
+                dist = make_dist(
+                    mesh, nb or None, fsdp=fsdp,
+                    seq_sharded_residuals=seq_parallel,
+                )
+            step = make_packed_step(cfg, n_pack, dist=dist)
+            self._steps[key] = (step, dist)
+            self.n_builds += 1
+            return step, dist
+
+    # ---------------- placement ----------------
+
+    @staticmethod
+    def _place(slice_: Optional[MeshSlice], cfg, dist, base, lora, opt, vecs):
+        """Commit all step inputs to the slice's devices.
+
+        ``lora``/``opt`` leaves may alias a cached pack template, and the
+        train step *donates* them — so they are deep-copied on-device
+        (``x + 0`` stays on the target placement) while ``base`` (never
+        donated, shared by every concurrent segment) is placed as-is."""
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        copy = lambda t: jax.tree.map(lambda x: x + 0, t)  # noqa: E731
+        if slice_ is None or slice_.width == 1:
+            dev = None if slice_ is None else slice_.lead
+            put = (lambda t: t) if dev is None else (
+                lambda t: jax.device_put(t, dev)
+            )
+            return (
+                put(base), copy(put(lora)), copy(put(opt)),
+                tuple(put(v) for v in vecs), put,
+            )
+        from repro.launch.sharding import param_specs, to_named
+
+        mesh = dist.mesh
+        repl = NamedSharding(mesh, PartitionSpec())
+        bspec = to_named(param_specs(jax.eval_shape(lambda: base), cfg, mesh), mesh)
+        lspec = to_named(param_specs(jax.eval_shape(lambda: lora), cfg, mesh), mesh)
+        base_d = jax.device_put(base, bspec)
+        lora_d = copy(jax.device_put(lora, lspec))
+        opt_d = copy({
+            "m": jax.device_put(opt["m"], lspec),
+            "v": jax.device_put(opt["v"], lspec),
+            "step": jax.device_put(opt["step"], repl),
+        })
+        vecs_d = tuple(jax.device_put(v, repl) for v in vecs)
+
+        def put_batch(b):
+            from repro.launch.sharding import batch_specs
+
+            spec = to_named(batch_specs(jax.eval_shape(lambda: b), mesh), mesh)
+            return jax.device_put(b, spec)
+
+        return base_d, lora_d, opt_d, vecs_d, put_batch
+
+    # ---------------- packed training on one slice ----------------
+
+    def train_pack(
+        self,
+        cfg: ModelConfig,
+        configs: Sequence[LoraConfig],
+        *,
+        n_steps: int,
+        seq: int,
+        base,
+        lora=None,
+        opt=None,
+        slice_: Optional[MeshSlice] = None,
+        seed: int = 0,
+        budgets: Optional[np.ndarray] = None,
+        data_iter_fn: Optional[Callable] = None,
+        mesh_shape: Optional[Tuple[int, int]] = None,
+        fsdp: bool = False,
+        seq_parallel: bool = False,
+        step_callback: Optional[Callable] = None,
+    ) -> PackResult:
+        """Train one pack for ``n_steps`` on ``slice_`` (default device when
+        None). ``lora``/``opt`` may carry resumed state; ``budgets`` is the
+        per-adapter step-cap vector (None = uncapped). ``step_callback(i,
+        metrics)`` is invoked after every step (it synchronizes — use for
+        logging, not benchmarking). Compilation happens on throwaway copies
+        outside the timed region, so ``wall_seconds`` is steady-state."""
+        from repro.train.data import packed_batch_iterator
+        from repro.train.optimizer import init_opt_state
+
+        meta = pack_meta(configs)
+        if lora is None:
+            lora, tmpl_opt = self.pack_template(cfg, configs, seed)
+            if opt is None:
+                opt = tmpl_opt
+        if opt is None:
+            opt = init_opt_state(lora, n_pack=meta.n)
+        if budgets is None:
+            budgets = np.full((meta.n,), NO_BUDGET, np.int32)
+        nb = meta.n * meta.max_batch
+        step, dist = self.step_fn(
+            cfg, meta.n, slice_, nb=nb, mesh_shape=mesh_shape,
+            fsdp=fsdp, seq_parallel=seq_parallel,
+        )
+        vecs = (
+            meta.scales(),
+            meta.lr_vector(),
+            jnp.asarray(budgets, jnp.int32),
+        )
+        real_start = time.perf_counter()
+        base_d, lora_d, opt_d, (scales, lr_vec, budg), put_batch = self._place(
+            slice_, cfg, dist, base, lora, opt, vecs
+        )
+        wall = 0.0
+        losses = None
+        m = None
+        if n_steps > 0:
+            it = (
+                data_iter_fn(cfg, list(configs), seq)
+                if data_iter_fn
+                else packed_batch_iterator(cfg, list(configs), seq=seq)
+            )
+            # Pre-generate + pre-place batches in bounded chunks: the
+            # GIL-bound data synthesis stays out of the (possibly
+            # concurrent) step stream for a whole chunk at a time, while
+            # resident batch memory stays O(PREGEN_CHUNK) instead of
+            # O(n_steps) for long launcher runs.
+            first = [
+                put_batch(next(it))
+                for _ in range(min(n_steps, PREGEN_CHUNK))
+            ]
+            # compile outside the timed region on throwaway copies (the
+            # paper times steady state); `x + 0` keeps each copy on the
+            # slice's own devices, so donation cannot invalidate the originals
+            lora_w = jax.tree.map(lambda x: x + 0, lora_d)
+            opt_w = jax.tree.map(lambda x: x + 0, opt_d)
+            _, _, warm = step(base_d, lora_w, opt_w, first[0], scales, lr_vec, budg)
+            jax.block_until_ready(warm["loss"])
+            t0 = time.perf_counter()
+            i = 0
+            batches = first
+            while batches:
+                for batch in batches:
+                    lora_d, opt_d, m = step(
+                        base_d, lora_d, opt_d, batch, scales, lr_vec, budg
+                    )
+                    if step_callback is not None:
+                        step_callback(i, m)
+                    i += 1
+                batches = [
+                    put_batch(next(it))
+                    for _ in range(min(n_steps - i, PREGEN_CHUNK))
+                ]
+            jax.block_until_ready(m["loss"])
+            wall = time.perf_counter() - t0
+            losses = np.asarray(m["per_adapter_loss"])
+        return PackResult(
+            lora=lora_d,
+            opt=opt_d,
+            losses=losses,
+            wall_seconds=wall,
+            real_start=real_start,
+            real_end=time.perf_counter(),
+        )
+
+    # ---------------- one planned segment (engine integration) ----------------
+
+    def run_segment(
+        self,
+        seg,  # JobSegment
+        configs_by_cid: Dict[int, LoraConfig],
+        total_steps: Dict[int, int],
+        cfg: ModelConfig,
+        base_params,
+        *,
+        seq: int,
+        pool,  # Optional[CheckpointPool]
+        data_iter_fn: Optional[Callable] = None,
+        seed: int = 0,
+        slice_: Optional[MeshSlice] = None,
+    ):
+        """Execute one planned segment on ``slice_``: resume preempted
+        adapters from the checkpoint pool, train ``seg.run_steps`` packed
+        iterations, then save finished adapters / re-checkpoint the
+        still-unfinished ones. Returns a ``JobRecord``."""
+        from repro.sched.engine import JobRecord
+        from repro.sched.planner import ScheduledJob
+
+        job_cfgs = [configs_by_cid[cid] for cid in seg.config_ids]
+        meta = pack_meta(job_cfgs)
+        lora, opt = self.pack_template(cfg, job_cfgs, seed)
+        for slot, (cid, st0) in enumerate(zip(seg.config_ids, seg.start_steps)):
+            if st0 == 0:
+                continue
+            if pool is None or not pool.has_adapter_state(f"{cid:04d}"):
+                raise RuntimeError(
+                    f"segment resumes config {cid} at step {st0} but the "
+                    "pool holds no checkpointed state for it"
+                )
+            state, smeta = pool.load_adapter_state(f"{cid:04d}")
+            assert int(smeta["steps_done"]) == st0, (cid, smeta, st0)
+            lora = inject_adapter(lora, state["w"], slot)
+            opt["m"] = inject_adapter(opt["m"], state["m"], slot)
+            opt["v"] = inject_adapter(opt["v"], state["v"], slot)
+            opt["step"] = opt["step"].at[slot].set(st0)
+        budgets = np.asarray(
+            [total_steps[cid] for cid in seg.config_ids], np.int32
+        )
+        res = self.train_pack(
+            cfg,
+            job_cfgs,
+            n_steps=seg.run_steps,
+            seq=seq,
+            base=base_params,
+            lora=lora,
+            opt=opt,
+            slice_=slice_,
+            seed=seed,
+            budgets=budgets,
+            data_iter_fn=data_iter_fn,
+        )
+        lora, opt, losses = res.lora, res.opt, res.losses
+        done = set(seg.done_ids)
+        for slot, cid in enumerate(seg.config_ids):
+            c = configs_by_cid[cid]
+            if cid in done:
+                if pool is None:
+                    continue
+                adapter = extract_adapter(lora, slot, meta.ranks)
+                pool.save_adapter(
+                    f"adapter_{cid:04d}",
+                    adapter,
+                    {
+                        "rank": c.rank,
+                        "alpha": c.alpha,
+                        "learning_rate": c.learning_rate,
+                        "batch_size": c.batch_size,
+                        "final_loss": (
+                            float(losses[slot]) if losses is not None
+                            else float("nan")
+                        ),
+                        "total_steps": int(total_steps[cid]),
+                    },
+                )
+            else:  # preempted mid-training: checkpoint resumable state
+                assert pool is not None
+                state = {
+                    "w": extract_adapter(lora, slot, meta.ranks),
+                    "m": extract_adapter(opt["m"], slot, meta.ranks),
+                    "v": extract_adapter(opt["v"], slot, meta.ranks),
+                }
+                pool.save_adapter_state(
+                    f"{cid:04d}",
+                    state,
+                    {
+                        "steps_done": int(seg.start_steps[slot] + seg.run_steps),
+                        "rank": c.rank,
+                        "total_steps": int(total_steps[cid]),
+                    },
+                )
+        return JobRecord(
+            ScheduledJob(seg.config_ids, seg.degree, seg.start, seg.end),
+            res.wall_seconds,
+            losses,
+            real_start=res.real_start,
+            real_end=res.real_end,
+        )

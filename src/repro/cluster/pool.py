@@ -1,0 +1,175 @@
+"""Device pool: partition the host's devices into disjoint mesh slices.
+
+The scheduler plans jobs over ``g`` abstract *device units*; this module owns
+the mapping from those units to real devices (real accelerators, or CPU
+devices forced via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+A :class:`MeshSlice` is a disjoint device subset wide enough for one packed
+job's parallelism degree; the pool hands slices out (`acquire` /
+`acquire_units`) and takes them back (`release`) with strict accounting, so
+concurrently running segments can never share a device by accident.
+
+The pool is thread-safe: the cluster runner's dispatch thread blocks in
+``acquire_units`` until a segment's planned units are freed by the real
+completions of earlier segments — this is what turns the engine's virtual
+device-free events into wall-clock ones.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class MeshSlice:
+    """A disjoint subset of the pool's devices backing one packed job."""
+
+    units: Tuple[int, ...]  # pool unit ids (sorted, disjoint across slices)
+    devices: Tuple  # the actual devices, one per unit (deduplicated)
+
+    @property
+    def width(self) -> int:
+        return len(self.devices)
+
+    @property
+    def lead(self):
+        return self.devices[0]
+
+    def mesh(self, *, data: int = 1, model: Optional[int] = None):
+        """Mesh over exactly this slice's devices (see launch.mesh.slice_mesh)."""
+        from repro.launch.mesh import slice_mesh
+
+        return slice_mesh(self.devices, data=data, model=model)
+
+
+class DevicePool:
+    """Thread-safe partition of devices into disjoint, accountable slices."""
+
+    def __init__(self, devices: Optional[Sequence] = None):
+        if devices is None:
+            import jax
+
+            devices = jax.devices()
+        if not devices:
+            raise ValueError("DevicePool needs at least one device")
+        self.devices = list(devices)
+        self._lock = threading.Condition()
+        self._free = set(range(len(self.devices)))
+
+    @property
+    def total(self) -> int:
+        return len(self.devices)
+
+    @property
+    def free(self) -> int:
+        with self._lock:
+            return len(self._free)
+
+    def _make_slice(self, units: Tuple[int, ...]) -> MeshSlice:
+        devs = tuple(self.devices[u] for u in units)
+        return MeshSlice(units=units, devices=devs)
+
+    def try_acquire(self, g: int) -> Optional[MeshSlice]:
+        """Non-blocking: a slice of ``g`` units, or None if fewer are free."""
+        if g <= 0:
+            raise ValueError(f"slice width must be positive, got {g}")
+        if g > self.total:
+            raise ValueError(
+                f"slice of width {g} requested but the pool holds only "
+                f"{self.total} devices"
+            )
+        with self._lock:
+            if len(self._free) < g:
+                return None
+            units = tuple(sorted(self._free)[:g])
+            self._free -= set(units)
+            return self._make_slice(units)
+
+    def acquire(self, g: int, timeout: Optional[float] = None) -> MeshSlice:
+        """Block until ``g`` units are free, then take them."""
+        if g > self.total:
+            raise ValueError(
+                f"slice of width {g} requested but the pool holds only "
+                f"{self.total} devices"
+            )
+        with self._lock:
+            if not self._lock.wait_for(
+                lambda: len(self._free) >= g, timeout=timeout
+            ):
+                raise TimeoutError(
+                    f"timed out waiting for {g} free units "
+                    f"({len(self._free)}/{self.total} free)"
+                )
+            units = tuple(sorted(self._free)[:g])
+            self._free -= set(units)
+            return self._make_slice(units)
+
+    def acquire_units(
+        self, units: Sequence[int], timeout: Optional[float] = None
+    ) -> MeshSlice:
+        """Block until the *specific* planned units are all free, then take
+        them — the cluster runner uses this to honor the scheduler's device
+        groups instead of grabbing whatever is idle."""
+        want = tuple(sorted(set(units)))
+        for u in want:
+            if not 0 <= u < self.total:
+                raise ValueError(f"unit {u} outside pool of {self.total}")
+        with self._lock:
+            if not self._lock.wait_for(
+                lambda: all(u in self._free for u in want), timeout=timeout
+            ):
+                busy = [u for u in want if u not in self._free]
+                raise TimeoutError(f"timed out waiting for units {busy}")
+            self._free -= set(want)
+            return self._make_slice(want)
+
+    def release(self, s: MeshSlice) -> None:
+        with self._lock:
+            dup = set(s.units) & self._free
+            if dup:
+                raise RuntimeError(f"double release of units {sorted(dup)}")
+            bad = [u for u in s.units if not 0 <= u < self.total]
+            if bad:
+                raise RuntimeError(f"release of foreign units {bad}")
+            self._free |= set(s.units)
+            self._lock.notify_all()
+
+    def map_units(self, units: Sequence[int]) -> Tuple[int, ...]:
+        """Fold the scheduler's abstract unit ids onto this pool's units.
+
+        When the virtual pool is wider than the host (the degenerate case —
+        e.g. an 8-unit plan executed on a 1-device laptop), planned units
+        wrap modulo the pool size; colliding segments then serialize on the
+        shared device instead of failing."""
+        return tuple(sorted({u % self.total for u in units}))
+
+
+def assign_units(
+    intervals: Sequence[Tuple[float, float, int]], g: int
+) -> List[Tuple[int, ...]]:
+    """Static unit assignment: replay ``(start, end, degree)`` intervals
+    through a ``g``-unit allocator (releases before acquires at equal
+    timestamps, lowest-numbered free units first) and return each interval's
+    unit tuple. Deterministic; raises if the intervals oversubscribe ``g`` —
+    the same feasibility contract as ``OnlineSchedule.validate``."""
+    events = []  # (time, kind, idx)  kind 0=release first, 1=acquire
+    for i, (start, end, degree) in enumerate(intervals):
+        events.append((start, 1, i))
+        events.append((end, 0, i))
+    free = set(range(g))
+    held: Dict[int, Tuple[int, ...]] = {}
+    out: List[Optional[Tuple[int, ...]]] = [None] * len(intervals)
+    for t, kind, i in sorted(events, key=lambda e: (e[0], e[1])):
+        if kind == 0:
+            free |= set(held.pop(i, ()))
+        else:
+            degree = intervals[i][2]
+            if len(free) < degree:
+                raise RuntimeError(
+                    f"intervals oversubscribe {g} units at t={t:.2f}"
+                )
+            units = tuple(sorted(free)[:degree])
+            free -= set(units)
+            held[i] = units
+            out[i] = units
+    return out  # type: ignore[return-value]

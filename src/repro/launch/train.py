@@ -1,6 +1,9 @@
 """Training launcher: run a packed-LoRA fine-tuning job for a selected
-architecture on this host (real execution), with optional sharding over a
-forced host mesh.
+architecture on this host (real execution) through the cluster subsystem —
+the job trains on a :class:`~repro.cluster.DevicePool` mesh slice wide
+enough for the requested mesh (the whole-host slice by default), via the
+same compile-cached :class:`~repro.cluster.SliceExecutor` the concurrent
+engine uses.
 
   PYTHONPATH=src python -m repro.launch.train --arch starcoder2-7b \
       --reduced --steps 20 --ranks 8,16 --lrs 1e-3,5e-4 --seq 32
@@ -14,19 +17,16 @@ Full (non-reduced) configs are for the dry-run (repro.launch.dryrun); this
 driver trains for real, so use --reduced on CPU.
 """
 import argparse
-import time
 
 import jax
 import numpy as np
 
+from repro.cluster import DevicePool, SliceExecutor
 from repro.configs.base import LoraConfig, get_config, list_archs, reduced
 from repro.core.adapter import pack_meta
 from repro.core.packed_lora import extract_adapter
 from repro.models.model import init_model
 from repro.train.checkpoint import CheckpointPool
-from repro.train.data import packed_batch_iterator
-from repro.train.optimizer import init_opt_state
-from repro.train.trainer import make_train_step
 
 
 def main():
@@ -83,26 +83,27 @@ def main():
     print(f"arch={cfg.name} pack N={meta.n} r_bucket={meta.r_bucket} "
           f"steps={args.steps} seq={args.seq}")
 
-    dist = None
-    mesh_ctx = None
+    mesh_shape = None
+    width = 1
     if args.mesh:
-        from repro.launch.mesh import make_host_mesh
-        from repro.launch.sharding import (
-            batch_specs, make_dist, param_specs, to_named,
-        )
-
         d, m = (int(x) for x in args.mesh.split("x"))
-        mesh = make_host_mesh(d, m)
-        nb = meta.n * meta.max_batch
-        dist = make_dist(mesh, nb, fsdp=args.fsdp,
-                         seq_sharded_residuals=args.seq_parallel)
-        mesh_ctx = mesh
+        mesh_shape = (d, m)
+        width = d * m
+
+    device_pool = DevicePool()
+    if width > device_pool.total:
+        raise SystemExit(
+            f"--mesh {args.mesh} needs {width} devices but this host has "
+            f"{device_pool.total}; set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={width} or request a smaller mesh"
+        )
+    slice_ = device_pool.acquire(width)
+    print(f"device pool: {device_pool.total} device(s), job slice "
+          f"units={slice_.units}")
 
     key = jax.random.PRNGKey(0)
     base, lora = init_model(key, cfg, meta)
-    it = packed_batch_iterator(cfg, configs, seq=args.seq)
-    step = make_train_step(cfg, meta, dist=dist)
-    opt = init_opt_state(lora, n_pack=meta.n)
+    opt = None
 
     state_id = args.state_id or cfg.name
     if args.resume_state:
@@ -116,33 +117,31 @@ def main():
         done = np.asarray(opt["step"]).tolist()
         print(f"resumed packed state {state_id!r} (per-adapter steps {done})")
 
-    def run():
-        nonlocal lora, opt
-        t0 = time.perf_counter()
-        for i in range(args.steps):
-            lora, opt, metrics = step(base, lora, opt, next(it))
-            if args.log_every and i % args.log_every == 0:
-                per = np.asarray(metrics["per_adapter_loss"])
-                print(f"step {i:4d}  loss={float(metrics['loss']):.4f}  "
-                      f"per-adapter={np.round(per, 3)}")
-        jax.block_until_ready(metrics["loss"])
-        wall = time.perf_counter() - t0
-        print(f"{args.steps} steps in {wall:.1f}s "
-              f"({1e3 * wall / args.steps:.0f} ms/step)")
-        return metrics
+    def log(i, m):
+        if args.log_every and i % args.log_every == 0:
+            per = np.asarray(m["per_adapter_loss"])
+            print(f"step {i:4d}  loss={float(m['loss']):.4f}  "
+                  f"per-adapter={np.round(per, 3)}")
 
-    if mesh_ctx is not None:
-        from repro.launch.sharding import batch_specs, param_specs, to_named
-
-        with mesh_ctx:
-            base = jax.device_put(
-                base, to_named(param_specs(jax.eval_shape(lambda: base), cfg, mesh_ctx), mesh_ctx))
-            lora = jax.device_put(
-                lora, to_named(param_specs(jax.eval_shape(lambda: lora), cfg, mesh_ctx), mesh_ctx))
-            opt = init_opt_state(lora, n_pack=meta.n)
-            metrics = run()
-    else:
-        metrics = run()
+    ex = SliceExecutor()
+    res = ex.train_pack(
+        cfg,
+        configs,
+        n_steps=args.steps,
+        seq=args.seq,
+        base=base,
+        lora=lora,
+        opt=opt,
+        slice_=slice_,
+        mesh_shape=mesh_shape,
+        fsdp=args.fsdp,
+        seq_parallel=args.seq_parallel,
+        step_callback=log if args.log_every else None,
+    )
+    device_pool.release(slice_)
+    lora, opt = res.lora, res.opt
+    print(f"{args.steps} steps in {res.wall_seconds:.1f}s "
+          f"({1e3 * res.wall_seconds / max(args.steps, 1):.0f} ms/step)")
 
     if args.save_state:
         pool = CheckpointPool(args.pool)
@@ -156,7 +155,7 @@ def main():
 
     if args.pool:
         pool = CheckpointPool(args.pool)
-        per = np.asarray(metrics["per_adapter_loss"])
+        per = res.losses if res.losses is not None else np.full(meta.n, np.nan)
         for i, c in enumerate(configs):
             pool.save_adapter(
                 f"{cfg.name}_adapter_{i:03d}",

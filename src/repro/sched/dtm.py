@@ -123,10 +123,23 @@ def dtm(
         # remaining config, T(p) is the wave makespan — minimize it (this is
         # what keeps the Thm 6.1 tail small). Otherwise rank by instantaneous
         # throughput (Eq 13), the streaming-optimal criterion.
+        #
+        # Online-aware tie-break: among otherwise-equal policies prefer the
+        # one holding fewer busy device-seconds (shorter jobs first) — its
+        # devices free *earlier*, so the engine's next repack-on-free event
+        # comes sooner and late arrivals wait less. Offline this is a pure
+        # tie-break (primary keys unchanged); online it is what lets
+        # repack-on-free win on more traces.
         covered = sum(len(j.config_ids) for j in p)
+        dev_seconds = sum(j.est_time * j.degree for j in p)
         if covered == n_total and p:
-            return (0, max(j.est_time for j in p), -sum(j.throughput for j in p))
-        return (1, -sum(j.throughput for j in p), -covered)
+            return (
+                0,
+                max(j.est_time for j in p),
+                dev_seconds,
+                -sum(j.throughput for j in p),
+            )
+        return (1, -sum(j.throughput for j in p), -covered, dev_seconds)
 
     best = min(policies, key=score)
     if best and sum(len(j.config_ids) for j in best) == n_total:

@@ -23,10 +23,15 @@ scheduling loop that supports
 
 Both modes share this one loop: ``plan_online``/``simulate`` play the trace
 against cost-model durations (pod-scale what-ifs), and ``run_online_local``
-executes the *same* planned segments for real on this host (CPU XLA),
-per-adapter state flowing through the checkpoint pool. The static
-``simulate(schedule)`` / ``run_local(schedule, ...)`` entry points are the
-degenerate no-arrivals case and reuse the same segment executor.
+executes the *same* planned segments for real on this host via the
+``repro.cluster`` subsystem — each segment on the mesh slice backing its
+planned device units, concurrently (thread-per-slice) when the host has
+multiple devices (real, or CPU-forced via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``), serially on the
+degenerate single-slice pool otherwise — with per-adapter state flowing
+through the checkpoint pool. The static ``simulate(schedule)`` /
+``run_local(schedule, ...)`` entry points are the degenerate no-arrivals
+case and reuse the same executor.
 
 The static baseline the benchmarks compare against is ``repack="drain"``:
 admission still happens, but the engine only replans when *all* devices are
@@ -36,16 +41,12 @@ from __future__ import annotations
 
 import heapq
 import itertools
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-import jax
 import numpy as np
 
 from repro.configs.base import LoraConfig, ModelConfig
-from repro.core.adapter import pack_meta
-from repro.core.packed_lora import extract_adapter, inject_adapter
 from repro.sched.cost_model import CostModel
 from repro.sched.planner import Schedule, ScheduledJob, replan
 from repro.train.checkpoint import CheckpointPool
@@ -76,6 +77,11 @@ class JobRecord:
     job: ScheduledJob
     wall_seconds: float
     final_losses: Optional[np.ndarray] = None
+    # wall-clock interval relative to the cluster runner's dispatch t0 —
+    # overlapping intervals of different records are segments that really
+    # ran concurrently on disjoint mesh slices
+    real_start: float = 0.0
+    real_end: float = 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -127,7 +133,13 @@ class JobSegment:
     ``config_ids[i]`` had already trained before this segment (0 = fresh;
     >0 = resumed from the checkpoint pool); ``run_steps`` is the number of
     packed iterations this segment executes; ``done_ids`` are the configs
-    whose step budget completes within this segment."""
+    whose step budget completes within this segment.
+
+    ``units`` is the segment's planned device group: which of the pool's
+    ``g`` device units this job holds for [start, end). Units of segments
+    that overlap in time are disjoint (``OnlineSchedule.validate`` checks
+    this), and the cluster runner maps them onto real disjoint mesh slices —
+    the executor honors exactly the groups the scheduler planned."""
 
     job_id: int
     config_ids: Tuple[int, ...]
@@ -138,6 +150,7 @@ class JobSegment:
     run_steps: int
     done_ids: Tuple[int, ...]
     preempted: bool = False
+    units: Tuple[int, ...] = ()
 
     @property
     def duration(self) -> float:
@@ -163,10 +176,30 @@ class OnlineSchedule:
         return busy / (self.g * self.makespan)
 
     def validate(self):
-        """Raise if any instant oversubscribes the device pool."""
+        """Raise if any instant oversubscribes the device pool, or if the
+        planned device groups (``units``) are malformed: wrong width, out of
+        range, or shared between time-overlapping segments."""
         _validate_intervals(
             [(s.start, s.end, s.degree) for s in self.segments], self.g
         )
+        timed = [s for s in self.segments if s.units]
+        for s in timed:
+            if len(s.units) != s.degree or not all(
+                0 <= u < self.g for u in s.units
+            ):
+                raise RuntimeError(
+                    f"segment {s.job_id} has units {s.units} for degree "
+                    f"{s.degree} on a {self.g}-unit pool"
+                )
+        for i, a in enumerate(timed):
+            for b in timed[i + 1:]:
+                if a.start < b.end - _EPS and b.start < a.end - _EPS:
+                    shared = set(a.units) & set(b.units)
+                    if shared:
+                        raise RuntimeError(
+                            f"overlapping segments {a.job_id}/{b.job_id} "
+                            f"share device units {sorted(shared)}"
+                        )
 
 
 def _validate_intervals(intervals: Sequence[Tuple[float, float, int]], g: int):
@@ -213,6 +246,7 @@ class _Running:
     start_steps: Tuple[int, ...]
     run_steps: int  # max residual: iterations until the job finishes
     est_end: float
+    units: Tuple[int, ...] = ()  # concrete device units this job holds
 
 
 _EPS = 1e-9
@@ -253,11 +287,20 @@ class ExecutionEngine:
         pool: Optional[CheckpointPool] = None,
         data_iter_fn: Optional[Callable] = None,
         seed: int = 0,
+        runner=None,  # Optional[repro.cluster.ClusterRunner]
     ) -> Tuple[List[JobRecord], float]:
-        """Execute every job of a static schedule on this host via the shared
-        segment executor. Returns the job records and the measured-duration
-        makespan (each job's simulated duration replaced by its wall time,
-        replayed through the resource timeline)."""
+        """Execute every job of a static schedule on this host through the
+        cluster subsystem. Concurrent runners (multi-device hosts) return
+        the *real* wall-clock makespan — overlapping groups genuinely
+        overlap; the degenerate sequential runner returns the what-if
+        makespan (each job's simulated duration replaced by its measured
+        wall time, replayed through the resource timeline)."""
+        from repro.cluster import assign_units
+
+        units = assign_units(
+            [(j.start, j.end, j.degree) for j in schedule.jobs],
+            self.monitor.total,
+        )
         segments = [
             JobSegment(
                 job_id=i,
@@ -268,10 +311,11 @@ class ExecutionEngine:
                 start_steps=(0,) * len(j.config_ids),
                 run_steps=n_steps,
                 done_ids=j.config_ids,
+                units=units[i],
             )
             for i, j in enumerate(schedule.jobs)
         ]
-        records = self._execute_segments(
+        result = self._execute_segments(
             segments,
             {i: c for i, c in enumerate(configs)},
             {i: n_steps for i in range(len(configs))},
@@ -281,9 +325,15 @@ class ExecutionEngine:
             pool=pool,
             data_iter_fn=data_iter_fn,
             seed=seed,
+            runner=runner,
         )
-        makespan = replay_measured(schedule, records, self.monitor.total)
-        return records, makespan
+        if result.concurrent:
+            makespan = result.makespan
+        else:
+            makespan = replay_measured(
+                schedule, result.records, self.monitor.total
+            )
+        return result.records, makespan
 
     # ---------------- the event loop ----------------
 
@@ -297,6 +347,7 @@ class ExecutionEngine:
         admission: str = "patient",
         migration_budget: int = 0,
         preempt_min_remaining: Optional[float] = None,
+        lookahead_k: int = 3,
     ) -> OnlineSchedule:
         """Play an arrival trace through the virtual-clock event loop.
 
@@ -315,7 +366,17 @@ class ExecutionEngine:
         estimated completion of launch-now-on-``free`` against
         wait-then-launch-on-``free + soon-freed`` and holds the pending set
         when waiting wins. ``admission="eager"`` always dispatches (exactly
-        Algorithm 2's greedy rule, and the t=0 behavior of ``plan``)."""
+        Algorithm 2's greedy rule, and the t=0 behavior of ``plan``).
+
+        ``lookahead_k`` controls the migration estimator: the wait-option
+        against which a preemption must win is evaluated at each of the next
+        k finish events (with the devices they cumulatively free), not just
+        the victim's own finish — see ``migration_pays``.
+
+        Every launched job is also assigned its concrete device *units*
+        (lowest-numbered free units first), carried on ``JobSegment.units``
+        so the cluster runner executes each job on exactly the mesh slice
+        the scheduler planned."""
         if repack not in ("event", "drain"):
             raise ValueError(f"unknown repack policy {repack!r}")
         if admission not in ("patient", "eager"):
@@ -339,8 +400,13 @@ class ExecutionEngine:
             for cid, a in enumerate(trace)
         }
         free = g
+        free_units = list(range(g))  # sorted; lowest-first assignment
         next_job = itertools.count()
         n_repacks = n_migrations = n_f = 0
+
+        def release_units(r: _Running):
+            free_units.extend(r.units)
+            free_units.sort()
 
         def finish_segment(r: _Running, end: float, steps_run: int, preempted: bool):
             done = tuple(
@@ -364,6 +430,7 @@ class ExecutionEngine:
                     run_steps=steps_run,
                     done_ids=done,
                     preempted=preempted,
+                    units=r.units,
                 )
             )
 
@@ -408,6 +475,8 @@ class ExecutionEngine:
             for jp in res.jobs:
                 entries = [pending[i] for i in jp.config_ids]
                 sel = [e.config for e in entries]
+                units = tuple(free_units[: jp.degree])
+                del free_units[: jp.degree]
                 r = _Running(
                     job_id=next(next_job),
                     cids=tuple(e.cid for e in entries),
@@ -419,6 +488,7 @@ class ExecutionEngine:
                     start_steps=tuple(e.steps_done for e in entries),
                     run_steps=max(e.residual for e in entries),
                     est_end=now + jp.est_time,
+                    units=units,
                 )
                 running[r.job_id] = r
                 heapq.heappush(
@@ -448,15 +518,24 @@ class ExecutionEngine:
                     )
             del running[r.job_id]  # its finish event becomes stale
             free += r.degree
+            release_units(r)
             n_migrations += 1
 
         def migration_pays(victim: _Running, now: float) -> bool:
             """Cost-model estimate of the paper's dynamic-task-migration
             trade: preempt the victim and repack its unfinished adapters
             together with the pending set on its devices *now*, versus
-            leaving it alone and scheduling the pending set when it
-            finishes. Preemption re-pays job setup, so it only wins when
-            the victim still has a long run ahead of stranded arrivals."""
+            leaving it alone and scheduling the pending set later.
+
+            The wait-option is a *lookahead over the next k finish events*:
+            the pending set could launch at any upcoming device-free event
+            with the devices those finishes cumulatively release, not only
+            when the victim itself ends — the single-victim myopic estimate
+            this replaces systematically overstated the cost of waiting and
+            triggered preemptions that re-paid setup for nothing. With only
+            one running job there is nothing to look ahead over, and the
+            estimate falls back to the myopic rule guarded by
+            ``MIGRATION_MARGIN``."""
             steps_run = steps_run_at(victim, now)
             unfinished = [
                 (c, resid - steps_run)
@@ -473,31 +552,49 @@ class ExecutionEngine:
             res_m = replan(
                 cm, merged, avail, seq, n_steps, residual_steps=merged_resid
             )
-            res_w = replan(
-                cm,
-                [e.config for e in pending],
-                avail,
-                seq,
-                n_steps,
-                residual_steps=[e.residual for e in pending],
-            )
             miss_m = len(merged) - sum(len(j.config_ids) for j in res_m.jobs)
-            miss_w = len(pending) - sum(len(j.config_ids) for j in res_w.jobs)
             fin_m = (
                 now + max(j.est_time for j in res_m.jobs)
                 if res_m.jobs
                 else float("inf")
             )
-            fin_w = (
-                victim.est_end + max(j.est_time for j in res_w.jobs)
-                if res_w.jobs
-                else victim.est_end
-            )
+            pend_cfgs = [e.config for e in pending]
+            pend_resid = [e.residual for e in pending]
+            ends = sorted({r.est_end for r in running.values()})[
+                : max(1, lookahead_k)
+            ]
+            best: Optional[Tuple[int, float]] = None
+            for t_i in ends:
+                avail_i = free + sum(
+                    r.degree
+                    for r in running.values()
+                    if r.est_end <= t_i + _EPS
+                )
+                res_i = replan(
+                    cm, pend_cfgs, avail_i, seq, n_steps,
+                    residual_steps=pend_resid,
+                )
+                if res_i.jobs:
+                    cand = (
+                        len(pending)
+                        - sum(len(j.config_ids) for j in res_i.jobs),
+                        t_i + max(j.est_time for j in res_i.jobs),
+                    )
+                else:
+                    cand = (len(pending), float(t_i))
+                if best is None or cand < best:
+                    best = cand
+            assert best is not None  # the victim itself is running
+            miss_w, fin_w = best
             if miss_m != miss_w:
                 return miss_m < miss_w
-            # the wait estimate is pessimistic (other jobs may free devices
-            # first), so demand the preemption win clear a safety margin
-            # before re-paying setup and churning the pack
+            if len(ends) > 1:
+                # true lookahead: intermediate frees are accounted for, so
+                # the wait estimate is realistic — compare head to head
+                return fin_m < fin_w - _EPS
+            # single finish event: the myopic estimate is pessimistic, so
+            # demand the preemption win clear a safety margin before
+            # re-paying setup and churning the pack (fallback rule)
             return fin_m < now + (fin_w - now) * (1.0 - MIGRATION_MARGIN)
 
         while heap:
@@ -511,6 +608,7 @@ class ExecutionEngine:
                         continue  # stale event of a preempted job
                     finish_segment(r, r.est_end, r.run_steps, preempted=False)
                     free += r.degree
+                    release_units(r)
                 else:
                     a = trace[payload]
                     pending.append(
@@ -580,13 +678,18 @@ class ExecutionEngine:
         admission: str = "patient",
         migration_budget: int = 0,
         preempt_min_remaining: Optional[float] = None,
+        lookahead_k: int = 3,
         data_iter_fn: Optional[Callable] = None,
         seed: int = 0,
+        runner=None,  # Optional[repro.cluster.ClusterRunner]
     ) -> Tuple[List[JobRecord], OnlineSchedule]:
-        """Real CPU-XLA execution of an online trace: the event loop above
-        decides the segments; every segment then trains for real, preempted
-        adapters checkpointing through ``pool`` and resuming — possibly with
-        different pack partners — via ``inject_adapter``."""
+        """Real execution of an online trace: the event loop above decides
+        the segments (and their device groups); the cluster runner then
+        trains every segment for real on its planned mesh slice — segments
+        on disjoint slices overlapping in wall-clock time on multi-device
+        hosts — with preempted adapters checkpointing through ``pool`` and
+        resuming, possibly with different pack partners, via
+        ``inject_adapter``."""
         sched = self.plan_online(
             trace,
             seq,
@@ -595,13 +698,14 @@ class ExecutionEngine:
             admission=admission,
             migration_budget=migration_budget,
             preempt_min_remaining=preempt_min_remaining,
+            lookahead_k=lookahead_k,
         )
         if sched.n_migrations and pool is None:
             raise ValueError(
                 "preemption occurred but no CheckpointPool was given to "
                 "carry resumable adapter state"
             )
-        records = self._execute_segments(
+        result = self._execute_segments(
             sched.segments,
             {cid: a.config for cid, a in enumerate(trace)},
             sched.total_steps,
@@ -611,10 +715,11 @@ class ExecutionEngine:
             pool=pool,
             data_iter_fn=data_iter_fn,
             seed=seed,
+            runner=runner,
         )
-        return records, sched
+        return result.records, sched
 
-    # ---------------- shared segment executor ----------------
+    # ---------------- shared segment executor (cluster subsystem) ----------
 
     def _execute_segments(
         self,
@@ -628,118 +733,32 @@ class ExecutionEngine:
         pool: Optional[CheckpointPool],
         data_iter_fn: Optional[Callable],
         seed: int,
-    ) -> List[JobRecord]:
-        """Execute planned segments in virtual-time order on this host.
+        runner=None,  # Optional[repro.cluster.ClusterRunner]
+    ):
+        """Execute planned segments through ``repro.cluster``: each segment
+        runs on the mesh slice backing its planned device units, thread-per-
+        slice when the host has multiple (possibly CPU-forced) devices, and
+        serially on the degenerate single-slice pool otherwise. Resumed
+        adapters (``start_steps > 0``) are loaded from the pool and injected
+        into the new pack (weights + Adam moments + per-adapter step count);
+        per-adapter step *budgets* freeze an adapter once its own iteration
+        count is met, even while longer-residual packmates keep training —
+        so real execution matches the virtual accounting. Returns a
+        ``repro.cluster.ClusterResult``."""
+        from repro.cluster import ClusterRunner
 
-        Resumed adapters (``start_steps > 0``) are loaded from the pool and
-        injected into the new pack (weights + Adam moments + per-adapter step
-        count); per-adapter step *budgets* freeze an adapter once its own
-        iteration count is met, even while longer-residual packmates keep
-        training — so real execution matches the virtual accounting."""
-        from repro.models.model import init_model
-        from repro.train.data import packed_batch_iterator
-        from repro.train.optimizer import init_opt_state
-        from repro.train.trainer import make_train_step
-
-        records: List[JobRecord] = []
-        order = sorted(segments, key=lambda s: (s.start, s.job_id))
-        for seg in order:
-            job_cfgs = [configs_by_cid[cid] for cid in seg.config_ids]
-            meta = pack_meta(job_cfgs)
-            key = jax.random.PRNGKey(seed)
-            _, lora = init_model(key, cfg, meta)
-            opt = init_opt_state(lora, n_pack=meta.n)
-            for slot, (cid, st0) in enumerate(
-                zip(seg.config_ids, seg.start_steps)
-            ):
-                if st0 == 0:
-                    continue
-                if pool is None or not pool.has_adapter_state(f"{cid:04d}"):
-                    raise RuntimeError(
-                        f"segment resumes config {cid} at step {st0} but the "
-                        "pool holds no checkpointed state for it"
-                    )
-                state, smeta = pool.load_adapter_state(f"{cid:04d}")
-                assert int(smeta["steps_done"]) == st0, (cid, smeta, st0)
-                lora = inject_adapter(lora, state["w"], slot)
-                opt["m"] = inject_adapter(opt["m"], state["m"], slot)
-                opt["v"] = inject_adapter(opt["v"], state["v"], slot)
-                opt["step"] = opt["step"].at[slot].set(st0)
-            budgets = np.asarray(
-                [total_steps[cid] for cid in seg.config_ids], np.int32
-            )
-            step = make_train_step(cfg, meta, step_budgets=budgets)
-            it = (
-                data_iter_fn(cfg, job_cfgs, seq)
-                if data_iter_fn
-                else packed_batch_iterator(cfg, job_cfgs, seq=seq)
-            )
-            wall = 0.0
-            losses = None
-            m = None
-            if seg.run_steps > 0:
-                b0 = next(it)
-                # compile outside the timed region on throwaway copies (the
-                # paper times steady state); the real loop then starts from
-                # the same state and batch, so step accounting stays exact
-                lora_w = jax.tree.map(lambda x: x.copy(), lora)
-                opt_w = jax.tree.map(lambda x: x.copy(), opt)
-                _, _, warm = step(base_params, lora_w, opt_w, b0)
-                jax.block_until_ready(warm["loss"])
-                t0 = time.perf_counter()
-                for batch in itertools.islice(
-                    itertools.chain([b0], it), seg.run_steps
-                ):
-                    lora, opt, m = step(base_params, lora, opt, batch)
-                jax.block_until_ready(m["loss"])
-                wall = time.perf_counter() - t0
-                losses = np.asarray(m["per_adapter_loss"])
-            done = set(seg.done_ids)
-            for slot, cid in enumerate(seg.config_ids):
-                c = configs_by_cid[cid]
-                if cid in done:
-                    if pool is None:
-                        continue
-                    adapter = extract_adapter(lora, slot, meta.ranks)
-                    pool.save_adapter(
-                        f"adapter_{cid:04d}",
-                        adapter,
-                        {
-                            "rank": c.rank,
-                            "alpha": c.alpha,
-                            "learning_rate": c.learning_rate,
-                            "batch_size": c.batch_size,
-                            "final_loss": (
-                                float(losses[slot]) if losses is not None
-                                else float("nan")
-                            ),
-                            "total_steps": int(total_steps[cid]),
-                        },
-                    )
-                else:  # preempted mid-training: checkpoint resumable state
-                    assert pool is not None
-                    state = {
-                        "w": extract_adapter(lora, slot, meta.ranks),
-                        "m": extract_adapter(opt["m"], slot, meta.ranks),
-                        "v": extract_adapter(opt["v"], slot, meta.ranks),
-                    }
-                    pool.save_adapter_state(
-                        f"{cid:04d}",
-                        state,
-                        {
-                            "steps_done": int(seg.start_steps[slot] + seg.run_steps),
-                            "rank": c.rank,
-                            "total_steps": int(total_steps[cid]),
-                        },
-                    )
-            records.append(
-                JobRecord(
-                    ScheduledJob(seg.config_ids, seg.degree, seg.start, seg.end),
-                    wall,
-                    losses,
-                )
-            )
-        return records
+        runner = runner or ClusterRunner()
+        return runner.run(
+            segments,
+            configs_by_cid,
+            total_steps,
+            cfg,
+            base_params,
+            seq=seq,
+            pool=pool,
+            data_iter_fn=data_iter_fn,
+            seed=seed,
+        )
 
 
 def replay_measured(

@@ -23,6 +23,33 @@ from repro.train.losses import chunked_cross_entropy
 from repro.train.optimizer import adamw_update, init_opt_state
 
 
+def packed_loss_fn(
+    lora,
+    base,
+    batch,
+    cfg: ModelConfig,
+    n_pack: int,
+    scales,
+    *,
+    dist: Optional[DistContext] = None,
+    chunk_q: int = 512,
+    vocab_chunk: int = 512,
+    aux_weight: float = 0.01,
+):
+    """Pack loss with the per-adapter scale vector as a runtime value (a
+    traced argument under ``make_packed_step``, a constant under
+    ``make_train_step``)."""
+    h, _, aux = forward(
+        base, lora, scales, batch, cfg,
+        n_pack=n_pack, dist=dist, chunk_q=chunk_q,
+    )
+    per_adapter, total = chunked_cross_entropy(
+        h, unembed_w(base, cfg), batch["labels"], n_pack,
+        chunk=vocab_chunk, vocab=cfg.vocab_size,
+    )
+    return total + aux_weight * aux, per_adapter
+
+
 def loss_fn(
     lora,
     base,
@@ -35,15 +62,47 @@ def loss_fn(
     vocab_chunk: int = 512,
     aux_weight: float = 0.01,
 ):
-    h, _, aux = forward(
-        base, lora, meta.scales(), batch, cfg,
-        n_pack=meta.n, dist=dist, chunk_q=chunk_q,
+    return packed_loss_fn(
+        lora, base, batch, cfg, meta.n, meta.scales(),
+        dist=dist, chunk_q=chunk_q, vocab_chunk=vocab_chunk,
+        aux_weight=aux_weight,
     )
-    per_adapter, total = chunked_cross_entropy(
-        h, unembed_w(base, cfg), batch["labels"], meta.n,
-        chunk=vocab_chunk, vocab=cfg.vocab_size,
-    )
-    return total + aux_weight * aux, per_adapter
+
+
+def make_packed_step(
+    cfg: ModelConfig,
+    n_pack: int,
+    *,
+    dist: Optional[DistContext] = None,
+    chunk_q: int = 512,
+    vocab_chunk: int = 512,
+    weight_decay: float = 0.0,
+    jit: bool = True,
+):
+    """Shape-keyed packed train step (cluster executor's compile unit).
+
+    Unlike :func:`make_train_step`, the per-adapter hyperparameter vectors —
+    ``scales`` (alpha/r), ``lr_vec`` and ``budgets`` (per-adapter step
+    caps) — enter as *runtime arguments* rather than closed-over constants,
+    so one compiled executable serves every pack with the same
+    (n, r_bucket, batch, seq) shape regardless of which alphas / learning
+    rates / step budgets the pack carries. ``repro.cluster.SliceExecutor``
+    caches the returned callable per (model-config, pack-width, slice-shape).
+    """
+
+    def train_step(base, lora, opt_state, batch, scales, lr_vec, budgets):
+        (total, per_adapter), grads = jax.value_and_grad(
+            packed_loss_fn, has_aux=True
+        )(lora, base, batch, cfg, n_pack, scales,
+          dist=dist, chunk_q=chunk_q, vocab_chunk=vocab_chunk)
+        lora_new, opt_state = adamw_update(
+            grads, opt_state, lora, lr_vec, weight_decay=weight_decay,
+            step_budget=budgets,
+        )
+        metrics = {"loss": total, "per_adapter_loss": per_adapter}
+        return lora_new, opt_state, metrics
+
+    return jax.jit(train_step, donate_argnums=(1, 2)) if jit else train_step
 
 
 def make_train_step(
