@@ -1,0 +1,360 @@
+"""Profile-guided adaptive re-planning vs trusting a mis-calibrated prior.
+
+The feedback loop's claim: when the analytic cost model is wrong about real
+hardware, the planner keeps making the same wrong decision for every job,
+and real execution pays for it again and again. Here the deliberate
+mis-calibration (``sat_tokens`` x3, ``efficiency`` /3, ``layer_overhead``
+/4) makes the prior believe per-iteration time is tiny and shrinks ~linearly
+with TP degree — so the trusted plan runs every arriving job at degree 4.
+On CPU-XLA the sharding dispatch overhead makes a degree-4 slice ~1.4x
+*slower* per step than degree 2. The adaptive engine (``ExecutionEngine``
+with a ``ProfiledCostModel``) probes the first job at degree 4, measures the
+drift, re-assigns its residual to a *narrower* device group (the paper's
+over-provisioning case), probes degree 2 once, and from then on plans every
+job with measured step times — recovering the makespan the prior throws
+away on every single job.
+
+Workload: six singleton LoRA jobs arriving on a fixed cadence on a 4-unit
+pool (forced CPU devices). Memory is sized so one adapter needs degree >= 2
+(degree 1 is infeasible for *both* modes) and packs of two never fit, so
+every plan is singleton jobs at degree 2 or 4.
+
+Loss guarantees, stated precisely:
+
+  * the adaptive *machinery* is bit-exact — probes, checkpoint splits,
+    resumes with exact step/data offsets, and drift re-assignments only
+    move work in time and space; the bench re-executes the adaptive run's
+    own segments unperturbed (sequentially, no re-planning) and asserts
+    per-adapter losses are bit-identical;
+  * across the trust/adaptive comparison the *degree* differs by design
+    (that is the recovered waste), and XLA's sharded reductions on a
+    4-device mesh agree with the 2-device mesh only to float rounding —
+    the bench reports that divergence (~1 ulp) and fails if it ever
+    exceeds rounding noise.
+
+Like ``bench_cluster``, the bench re-executes itself in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_TAG = "ADAPTIVE_ROWS_JSON:"
+
+PROBE_STEPS = 4
+
+
+def run(fast: bool = False) -> List[Dict]:
+    """Spawn the forced-8-device worker and collect its rows."""
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        JAX_PLATFORMS="cpu",
+        PYTHONPATH=os.pathsep.join(
+            p for p in (os.path.join(_ROOT, "src"), _ROOT,
+                        os.environ.get("PYTHONPATH", "")) if p
+        ),
+    )
+    cmd = [sys.executable, "-m", "benchmarks.bench_adaptive", "--worker"]
+    if fast:
+        cmd.append("--fast")
+    proc = subprocess.run(
+        cmd, capture_output=True, text=True, env=env, cwd=_ROOT, timeout=1800
+    )
+    for line in proc.stdout.splitlines():
+        if line.startswith(_TAG):
+            return json.loads(line[len(_TAG):])
+    raise RuntimeError(
+        f"adaptive worker produced no rows (exit {proc.returncode}):\n"
+        f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}"
+    )
+
+
+def _losses_by_cid(segments, records) -> Dict[int, float]:
+    """Final per-adapter loss of every finished config, keyed by cid.
+    ``segments``/``records`` must be index-aligned (both engine paths
+    return them that way)."""
+    out: Dict[int, float] = {}
+    for seg, rec in zip(segments, records):
+        done = set(seg.done_ids)
+        for slot, cid in enumerate(seg.config_ids):
+            if cid in done and rec.final_losses is not None:
+                out[cid] = float(rec.final_losses[slot])
+    return out
+
+
+def _worker(fast: bool) -> List[Dict]:
+    import jax
+    import numpy as np
+
+    from repro.cluster import ClusterRunner, DevicePool, SliceExecutor
+    from repro.configs.base import LoraConfig, get_config, reduced
+    from repro.core.adapter import pack_meta
+    from repro.models.model import init_model
+    from repro.sched.cost_model import A100_40G, CostModel
+    from repro.sched.engine import Arrival, ExecutionEngine
+    from repro.sched.profile import ProfiledCostModel
+    from repro.train.checkpoint import CheckpointPool
+
+    assert jax.device_count() >= 8, jax.device_count()
+    cfg = reduced(get_config("qwen25-7b"))
+    seq = 32
+    g = 4
+    scale = 1 if fast else 2
+    steps = 60 * scale
+
+    jobs = [
+        LoraConfig(rank=8, alpha=8.0 + i, learning_rate=1e-3, batch_size=2,
+                   seq_len=seq)
+        for i in range(6)
+    ]
+
+    # Hardware spec of the PRIOR, shaped for the demonstration:
+    #   * memory sized so a single adapter needs degree >= 2 — every plan
+    #     in both modes is singleton jobs at degree 2 or 4 (see the module
+    #     docstring for the loss guarantees across that degree difference);
+    #   * sat_tokens x3 / efficiency /3 / layer_overhead /4 (the deliberate
+    #     mis-calibration): per-step predictions come out tiny and
+    #     ~linearly improved by TP degree, so the trusted planner widens
+    #     every job to degree 4 — the real machine pays ~1.4x per step for
+    #     the extra sharding dispatch.
+    hw = A100_40G
+    cm0 = CostModel(cfg, hw)
+    need1 = max(cm0.job_mem_bytes([c], 1, seq) for c in jobs)
+    hw = hw.scaled(mem_bytes=0.7 * need1 / cm0.load_factor)
+    hw_bad = hw.scaled(
+        sat_tokens=3.0 * hw.sat_tokens,
+        efficiency=hw.efficiency / 3.0,
+        layer_overhead=hw.layer_overhead / 4.0,
+    )
+
+    def make_prior() -> CostModel:
+        cm = CostModel(cfg, hw_bad)
+        cm.setup_time = 0.0  # virtual seconds, not CPU wall time
+        return cm
+
+    base, _ = init_model(jax.random.PRNGKey(0), cfg, pack_meta([jobs[0]]))
+    ex = SliceExecutor()  # shared: both modes compare warm dispatch
+    devices = jax.devices()[:g]
+
+    # Warm the degree-2/degree-4 executables AND calibrate the arrival
+    # cadence to this box's current speed: arrivals land a bit slower than
+    # the real degree-2 job duration, so the narrowed (adaptive) schedule
+    # keeps up with the queue while the trusted degree-4 schedule falls
+    # behind on every job. Runtime calibration (not hard-coded seconds)
+    # keeps the scenario meaningful on hosts of any speed/load.
+    def measured_iter(units, n: int = 16) -> float:
+        dp = DevicePool(devices)
+        s = dp.acquire_units(units)
+        ex.train_pack(cfg, [jobs[0]], n_steps=2, seq=seq, base=base, slice_=s)
+        r = ex.train_pack(cfg, [jobs[0]], n_steps=n, seq=seq, base=base,
+                          slice_=s)
+        dp.release(s)
+        return r.wall_seconds / n
+
+    # every mesh slice the two schedules can use gets its executable built
+    # here, outside the timed runs (slice devices are part of the compile
+    # cache key — an unwarmed (2, 3) pair would pay XLA compile mid-run)
+    t2 = measured_iter((0, 1))
+    measured_iter((2, 3), n=2)
+    t4 = measured_iter((0, 1, 2, 3))
+    spacing = 1.15 * steps * t2
+    trace = [Arrival(i * spacing, c, steps) for i, c in enumerate(jobs)]
+
+    def check_shape(segments):
+        assert all(
+            s.degree in (2, 4) and len(s.config_ids) == 1 for s in segments
+        ), "bench invariant: singleton degree-2/4 jobs only"
+
+    def run_trust():
+        eng = ExecutionEngine(make_prior(), g)
+        runner = ClusterRunner(ex, DevicePool(devices), concurrent=True)
+        t0 = time.perf_counter()
+        records, sched = eng.run_online_local(
+            trace, cfg, base, n_steps=1, seq=seq, runner=runner
+        )
+        elapsed = time.perf_counter() - t0
+        check_shape(sched.segments)
+        order = sorted(sched.segments, key=lambda s: (s.start, s.job_id))
+        makespan = max(r.real_end for r in records)
+        drifts = [
+            t.drift for t in runner.last_result.timings if t.run_steps > 0
+        ]
+        return {
+            "makespan": makespan,
+            "elapsed": elapsed,
+            "losses": _losses_by_cid(order, records),
+            "mean_drift": float(np.mean(drifts)),
+            "max_drift": float(np.max(drifts)),
+        }
+
+    def run_adaptive(pool_dir: str):
+        eng = ExecutionEngine(ProfiledCostModel(make_prior()), g)
+        runner = ClusterRunner(ex, DevicePool(devices), concurrent=True)
+        pool = CheckpointPool(pool_dir)
+        t0 = time.perf_counter()
+        records, sched = eng.run_online_local(
+            trace, cfg, base, n_steps=1, seq=seq, runner=runner,
+            pool=pool, probe_steps=PROBE_STEPS,
+        )
+        elapsed = time.perf_counter() - t0
+        check_shape(sched.segments)
+        if os.environ.get("ADAPTIVE_BENCH_DEBUG"):
+            for s_, r_ in zip(sched.segments, records):
+                print(
+                    f"  adaptive cid{s_.config_ids} d{s_.degree} "
+                    f"u{s_.units} {s_.start_steps[0]}+{s_.run_steps} "
+                    f"[{s_.start:6.2f},{s_.end:6.2f}] "
+                    f"iter={r_.wall_seconds / max(s_.run_steps, 1):.4f}",
+                    file=sys.stderr,
+                )
+        return {
+            "makespan": sched.makespan,
+            "elapsed": elapsed,
+            "losses": _losses_by_cid(sched.segments, records),
+            "n_probes": sched.n_probes,
+            "n_reassignments": sched.n_reassignments,
+            "n_repacks": sched.n_repacks,
+            "segments": sched.segments,
+            "total_steps": sched.total_steps,
+        }
+
+    def run_replay(adapt, pool_dir: str):
+        """Re-execute the adaptive run's OWN segments unperturbed (one at a
+        time, no re-planning, fresh checkpoint pool): the bit-exactness
+        reference. Probes / mid-run re-assignments / degree changes must
+        only move work in time and space, never change what is trained."""
+        eng = ExecutionEngine(make_prior(), g)
+        runner = ClusterRunner(ex, DevicePool(devices), concurrent=False)
+        result = eng._execute_segments(
+            adapt["segments"],
+            {cid: a.config for cid, a in enumerate(trace)},
+            adapt["total_steps"],
+            cfg,
+            base,
+            seq=seq,
+            pool=CheckpointPool(pool_dir),
+            data_iter_fn=None,
+            seed=0,
+            runner=runner,
+        )
+        order = sorted(
+            adapt["segments"], key=lambda s: (s.start, s.job_id)
+        )
+        return {"losses": _losses_by_cid(order, result.records)}
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # best-of-2 per mode: 2-core CI boxes are noisy, and the cadence
+        # comparison compounds any transient load spike
+        trust = min(
+            (run_trust() for _ in range(2)), key=lambda r: r["makespan"]
+        )
+        adapt = min(
+            (run_adaptive(os.path.join(tmp, f"timed{i}")) for i in range(2)),
+            key=lambda r: r["makespan"],
+        )
+        replay = run_replay(adapt, os.path.join(tmp, "replay"))
+
+    cids = sorted(trust["losses"])
+    assert cids == sorted(adapt["losses"]) == list(range(len(trace)))
+    lt = np.asarray([trust["losses"][c] for c in cids], np.float64)
+    la = np.asarray([adapt["losses"][c] for c in cids], np.float64)
+    lr = np.asarray([replay["losses"][c] for c in cids], np.float64)
+    # the machinery guarantee: probe/split/resume/re-assign is bit-exact
+    # against an unperturbed replay of the same segments
+    bitexact = bool(np.array_equal(la, lr))
+    # across the trust/adaptive *degree* difference (deg-4 vs deg-2 mesh
+    # slices) XLA's sharded reductions only agree to float rounding —
+    # report the divergence rather than pretending it away
+    trust_diff = float(np.abs(lt - la).max())
+    speedup = trust["makespan"] / adapt["makespan"]
+    step_info = {"steps": steps, "spacing": round(spacing, 3),
+                 "t2_iter": round(t2, 4), "t4_iter": round(t4, 4)}
+    rows = [
+        {
+            "bench": "adaptive",
+            "mode": "trust",
+            "g": g,
+            "n_jobs": len(trace),
+            "steps": json.dumps(step_info),
+            "makespan_s": round(trust["makespan"], 3),
+            "elapsed_s": round(trust["elapsed"], 3),
+            "mean_drift": round(trust["mean_drift"], 3),
+            "max_drift": round(trust["max_drift"], 3),
+        },
+        {
+            "bench": "adaptive",
+            "mode": "adaptive",
+            "g": g,
+            "n_jobs": len(trace),
+            "steps": json.dumps(step_info),
+            "makespan_s": round(adapt["makespan"], 3),
+            "elapsed_s": round(adapt["elapsed"], 3),
+            "n_probes": adapt["n_probes"],
+            "n_reassignments": adapt["n_reassignments"],
+            "n_repacks": adapt["n_repacks"],
+        },
+        {
+            "bench": "adaptive",
+            "mode": "speedup",
+            "g": g,
+            "n_jobs": len(trace),
+            "speedup_adaptive": round(speedup, 3),
+            "losses_bitexact": bitexact,
+            "max_loss_diff_vs_trust": trust_diff,
+            "n_reassignments": adapt["n_reassignments"],
+        },
+    ]
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    if args.worker:
+        rows = _worker(args.fast)
+        print(_TAG + json.dumps(rows))
+        return 0
+    rows = run(args.fast)
+    for r in rows:
+        if r["mode"] == "speedup":
+            print(
+                f"adaptive: x{r['speedup_adaptive']:.2f} makespan vs "
+                f"plan-and-trust (mis-calibrated prior), "
+                f"{r['n_reassignments']} drift re-assignment(s), "
+                f"losses bit-exact vs unperturbed replay: "
+                f"{r['losses_bitexact']}, vs trust (deg-4 mesh): "
+                f"max |diff| {r['max_loss_diff_vs_trust']:.1e}"
+            )
+        else:
+            print(
+                f"adaptive,{r['mode']}: makespan {r['makespan_s']:.2f}s "
+                f"(elapsed {r['elapsed_s']:.2f}s)"
+            )
+    # hard guarantee of the feedback loop: re-planning must never change
+    # what is trained, only where/when — fail loudly if the probe/split/
+    # resume machinery perturbs training (bit-compared against an
+    # unperturbed replay of the same segments), or if the trust run (whose
+    # jobs execute on wider mesh slices, where XLA's sharded reductions
+    # only agree to float rounding) diverges beyond rounding noise
+    sp = next(r for r in rows if r["mode"] == "speedup")
+    if not sp["losses_bitexact"] or sp["max_loss_diff_vs_trust"] > 1e-5:
+        print(f"ERROR: per-adapter losses diverged "
+              f"(bitexact={sp['losses_bitexact']}, "
+              f"max |diff| vs trust {sp['max_loss_diff_vs_trust']:.3e})")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,11 +5,16 @@
   PYTHONPATH=src python -m benchmarks.run --only kernels,makespan
 
 Prints one CSV block per benchmark and a summary of the paper-claim checks.
+Each suite additionally persists a machine-readable ``BENCH_<name>.json``
+(rows + numeric-column means + git SHA) under ``--out-dir`` so the perf
+trajectory is comparable across PRs.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 import time
 
@@ -18,14 +23,71 @@ def _section(title):
     print(f"\n==== {title} " + "=" * max(0, 60 - len(title)))
 
 
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _summarize(rows):
+    """Means of every numeric column (bools counted as 0/1 fractions) plus
+    every per-row speedup value — the machine-readable perf trajectory."""
+    num = {}
+    for r in rows:
+        for k, v in r.items():
+            if isinstance(v, bool) or isinstance(v, (int, float)):
+                num.setdefault(k, []).append(float(v))
+    summary = {f"mean_{k}": sum(v) / len(v) for k, v in num.items() if v}
+    speedups = {
+        k: v for k, v in num.items() if "speedup" in k or k.startswith("ar_")
+    }
+    for k, v in speedups.items():
+        summary[f"all_{k}"] = v
+    return summary
+
+
+def _persist(out_dir, name, title, rows, wall, fast, sha):
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "bench": name,
+                "title": title,
+                "git_sha": sha,
+                "fast": fast,
+                "created_unix": time.time(),
+                "wall_seconds": round(wall, 2),
+                "n_rows": len(rows),
+                "summary": _summarize(rows),
+                "rows": rows,
+            },
+            f,
+            indent=1,
+        )
+    return path
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None, help="comma-separated bench names")
     ap.add_argument("--json", default=None, help="dump all rows to this file")
+    ap.add_argument(
+        "--out-dir",
+        default="benchmarks/results",
+        help="directory for per-suite BENCH_<name>.json files "
+             "('' disables persistence)",
+    )
     args = ap.parse_args(argv)
 
     from benchmarks import (
+        bench_adaptive,
         bench_breakdown,
         bench_cluster,
         bench_job_throughput,
@@ -42,6 +104,7 @@ def main(argv=None):
         "makespan": ("Fig. 4: hyperparameter-tuning makespan", bench_makespan.run),
         "online": ("§4 dynamic scheduling: online admission + repacking", bench_online.run),
         "cluster": ("Cluster executor: concurrent mesh slices vs sequential", bench_cluster.run),
+        "adaptive": ("Profile feedback loop: adaptive re-planning vs mis-calibrated prior", bench_adaptive.run),
         "job_throughput": ("Fig. 5: packed-job throughput", bench_job_throughput.run),
         "job_throughput_a10": ("Fig. 7 / §7.5: A10 + QLoRA", lambda fast: bench_job_throughput.run_a10(fast)),
         "breakdown": ("Fig. 6: speedup breakdown", bench_breakdown.run),
@@ -51,6 +114,7 @@ def main(argv=None):
     }
     selected = list(benches) if not args.only else args.only.split(",")
 
+    sha = _git_sha()
     all_rows = []
     checks = []
     for name in selected:
@@ -73,6 +137,11 @@ def main(argv=None):
                     last_keys = keys
                 print(",".join(_fmt(r.get(k)) for k in keys))
         print(f"# {name}: {len(rows)} rows in {wall:.1f}s")
+        if args.out_dir:
+            path = _persist(
+                args.out_dir, name, title, rows, wall, args.fast, sha
+            )
+            print(f"# wrote {path}")
 
         # paper-claim checks
         if name == "makespan" and rows:
@@ -90,6 +159,11 @@ def main(argv=None):
                 exact = all(r["losses_bitexact"] for r in sp)
                 checks.append(("concurrent slices vs sequential (forced 8-dev host)", f"{best:.2f}x"))
                 checks.append(("concurrent per-adapter losses bit-exact", str(exact)))
+        if name == "adaptive" and rows:
+            sp = [r for r in rows if r["mode"] == "speedup"]
+            if sp:
+                checks.append(("adaptive re-planning vs mis-calibrated prior (>=1.1x)", f"{sp[0]['speedup_adaptive']:.2f}x"))
+                checks.append(("adaptive machinery bit-exact vs unperturbed replay", str(all(r["losses_bitexact"] for r in sp))))
         if name == "job_throughput" and rows:
             best = max(r["speedup_vs_min"] for r in rows)
             checks.append(("job throughput vs MinGPU (paper <=12.8x)", f"{best:.2f}x"))

@@ -71,16 +71,23 @@ def main():
             trace, cfg, base, n_steps=steps, seq=seq, runner=runner,
         )
         order = sorted(sched.segments, key=lambda s: (s.start, s.job_id))
+        # measured-vs-predicted per segment (the profile feedback loop's
+        # raw signal), surfaced by the cluster runner on its last result in
+        # the same virtual-start order as the records
         makespan = max(r.real_end for r in records)
         print(f"{mode}: wall-clock makespan {makespan:.2f}s")
-        for seg, rec in zip(order, records):
+        for seg, rec, t in zip(order, records, runner.last_result.timings):
             bar_w = 40
             scale = bar_w / max(makespan, 1e-9)
             lo = int(rec.real_start * scale)
             hi = max(lo + 1, int(rec.real_end * scale))
             bar = " " * lo + "#" * (hi - lo)
             print(f"  job {seg.job_id} units={seg.units} "
-                  f"[{rec.real_start:6.2f}s -> {rec.real_end:6.2f}s] |{bar:<{bar_w}}|")
+                  f"[{rec.real_start:6.2f}s -> {rec.real_end:6.2f}s] "
+                  f"|{bar:<{bar_w}}| "
+                  f"{1e3 * t.measured_iter:6.1f} ms/step "
+                  f"(pred {1e3 * t.predicted_iter:5.1f}, "
+                  f"drift {100.0 * t.drift:+6.1f}%)")
         losses = np.concatenate([r.final_losses for r in records])
         outcomes[mode] = (makespan, losses)
         print()

@@ -11,6 +11,7 @@ from repro.cluster.pool import DevicePool, MeshSlice, assign_units
 from repro.cluster.runner import (
     ClusterResult,
     ClusterRunner,
+    SegmentTiming,
     peak_overlap,
     resume_deps,
 )
@@ -24,6 +25,7 @@ __all__ = [
     "assign_units",
     "ClusterResult",
     "ClusterRunner",
+    "SegmentTiming",
     "peak_overlap",
     "resume_deps",
 ]

@@ -47,6 +47,19 @@ NO_BUDGET = np.int32(2**31 - 1)
 PREGEN_CHUNK = 256
 
 
+def _accepts_start_steps(fn) -> bool:
+    """Whether a custom data_iter_fn can take per-adapter stream offsets."""
+    import inspect
+
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+    return "start_steps" in params or any(
+        p.kind == inspect.Parameter.VAR_KEYWORD for p in params.values()
+    )
+
+
 @dataclass
 class PackResult:
     """Final state of one packed training run on a slice."""
@@ -65,6 +78,7 @@ class SliceExecutor:
     def __init__(self):
         self._steps: Dict[Tuple, Callable] = {}
         self._templates: Dict[Tuple, Tuple] = {}
+        self._warmed: set = set()
         self._lock = threading.Lock()
         self.n_builds = 0
         self.n_hits = 0
@@ -211,6 +225,7 @@ class SliceExecutor:
         seed: int = 0,
         budgets: Optional[np.ndarray] = None,
         data_iter_fn: Optional[Callable] = None,
+        data_start_steps: Optional[Sequence[int]] = None,
         mesh_shape: Optional[Tuple[int, int]] = None,
         fsdp: bool = False,
         seq_parallel: bool = False,
@@ -218,10 +233,13 @@ class SliceExecutor:
     ) -> PackResult:
         """Train one pack for ``n_steps`` on ``slice_`` (default device when
         None). ``lora``/``opt`` may carry resumed state; ``budgets`` is the
-        per-adapter step-cap vector (None = uncapped). ``step_callback(i,
-        metrics)`` is invoked after every step (it synchronizes — use for
-        logging, not benchmarking). Compilation happens on throwaway copies
-        outside the timed region, so ``wall_seconds`` is steady-state."""
+        per-adapter step-cap vector (None = uncapped); ``data_start_steps``
+        fast-forwards each adapter's data stream past batches consumed in
+        earlier segments (resumed packs see the same samples they would have
+        seen uninterrupted). ``step_callback(i, metrics)`` is invoked after
+        every step (it synchronizes — use for logging, not benchmarking).
+        Compilation happens on throwaway copies outside the timed region, so
+        ``wall_seconds`` is steady-state."""
         from repro.train.data import packed_batch_iterator
         from repro.train.optimizer import init_opt_state
 
@@ -252,11 +270,27 @@ class SliceExecutor:
         losses = None
         m = None
         if n_steps > 0:
-            it = (
-                data_iter_fn(cfg, list(configs), seq)
-                if data_iter_fn
-                else packed_batch_iterator(cfg, list(configs), seq=seq)
+            skip = (
+                tuple(int(s) for s in data_start_steps)
+                if data_start_steps is not None and any(data_start_steps)
+                else None
             )
+            if data_iter_fn:
+                # custom iterators own their stream; the offsets are passed
+                # through only when a resumed segment actually needs them
+                # AND the callable opts in by accepting ``start_steps`` —
+                # legacy 3-arg iterators keep their pre-offset behavior
+                # (resumed adapters replay the stream) instead of crashing
+                if skip and _accepts_start_steps(data_iter_fn):
+                    it = data_iter_fn(
+                        cfg, list(configs), seq, start_steps=skip
+                    )
+                else:
+                    it = data_iter_fn(cfg, list(configs), seq)
+            else:
+                it = packed_batch_iterator(
+                    cfg, list(configs), seq=seq, start_steps=skip
+                )
             # Pre-generate + pre-place batches in bounded chunks: the
             # GIL-bound data synthesis stays out of the (possibly
             # concurrent) step stream for a whole chunk at a time, while
@@ -268,11 +302,31 @@ class SliceExecutor:
             ]
             # compile outside the timed region on throwaway copies (the
             # paper times steady state); `x + 0` keeps each copy on the
-            # slice's own devices, so donation cannot invalidate the originals
-            lora_w = jax.tree.map(lambda x: x + 0, lora_d)
-            opt_w = jax.tree.map(lambda x: x + 0, opt_d)
-            _, _, warm = step(base_d, lora_w, opt_w, first[0], scales, lr_vec, budg)
-            jax.block_until_ready(warm["loss"])
+            # slice's own devices, so donation cannot invalidate the
+            # originals. Skipped when this exact executable (step key +
+            # batch shapes + placement) was already warmed — segmented runs
+            # (probe / preempt / resume) would otherwise pay one throwaway
+            # iteration per segment for a compile that is already cached.
+            wkey = (
+                cfg, meta.n, meta.r_bucket,
+                None if slice_ is None else slice_.devices,
+                nb, mesh_shape, fsdp, seq_parallel,
+                tuple(sorted(
+                    (k, tuple(v.shape), str(v.dtype))
+                    for k, v in first[0].items()
+                )),
+            )
+            with self._lock:
+                need_warm = wkey not in self._warmed
+            if need_warm:
+                lora_w = jax.tree.map(lambda x: x + 0, lora_d)
+                opt_w = jax.tree.map(lambda x: x + 0, opt_d)
+                _, _, warm = step(
+                    base_d, lora_w, opt_w, first[0], scales, lr_vec, budg
+                )
+                jax.block_until_ready(warm["loss"])
+                with self._lock:
+                    self._warmed.add(wkey)
             t0 = time.perf_counter()
             i = 0
             batches = first
@@ -355,6 +409,7 @@ class SliceExecutor:
             seed=seed,
             budgets=budgets,
             data_iter_fn=data_iter_fn,
+            data_start_steps=seg.start_steps,
         )
         lora, opt, losses = res.lora, res.opt, res.losses
         done = set(seg.done_ids)

@@ -31,6 +31,28 @@ from repro.cluster.executor import SliceExecutor
 from repro.cluster.pool import DevicePool, MeshSlice
 
 
+@dataclass(frozen=True)
+class SegmentTiming:
+    """Measured-vs-predicted per-iteration wall time of one executed segment
+    — the raw material of the profile feedback loop. ``predicted_iter`` is
+    the estimator's answer at dispatch time (NaN when no estimator was
+    given); ``drift`` is ``measured / predicted - 1``."""
+
+    job_id: int
+    config_ids: Tuple[int, ...]
+    degree: int
+    run_steps: int
+    seq: int
+    measured_iter: float
+    predicted_iter: float
+
+    @property
+    def drift(self) -> float:
+        if not (self.predicted_iter > 0.0):  # NaN / zero -> undefined
+            return float("nan")
+        return self.measured_iter / self.predicted_iter - 1.0
+
+
 @dataclass
 class ClusterResult:
     """Outcome of executing one batch of segments on the pool."""
@@ -42,6 +64,8 @@ class ClusterResult:
     timeline: List[Tuple[int, float, float, Tuple[int, ...]]] = field(
         default_factory=list
     )
+    # per-segment measured step times (virtual-start order, like records)
+    timings: List[SegmentTiming] = field(default_factory=list)
 
     def max_overlap(self) -> int:
         """Peak number of segments running at the same wall-clock instant."""
@@ -111,6 +135,7 @@ class ClusterRunner:
         self.concurrent = (
             self.device_pool.total > 1 if concurrent is None else concurrent
         )
+        self.last_result: Optional[ClusterResult] = None
 
     def run(
         self,
@@ -124,16 +149,23 @@ class ClusterRunner:
         pool=None,  # CheckpointPool
         data_iter_fn: Optional[Callable] = None,
         seed: int = 0,
+        estimator=None,  # Optional[repro.sched.cost_model.CostEstimator]
     ) -> ClusterResult:
+        """Execute planned segments. With an ``estimator``, each segment's
+        predicted per-iteration time is captured at dispatch and its measured
+        time is fed back via ``estimator.observe(...)`` on completion (a
+        no-op for the pure analytic prior) — the measured/predicted pairs are
+        surfaced on ``ClusterResult.timings`` either way."""
         order = sorted(segments, key=lambda s: (s.start, s.job_id))
         done_events = [threading.Event() for _ in order]
         deps = resume_deps(order)
         results: List = [None] * len(order)
+        predicted: List[float] = [float("nan")] * len(order)
         errors: List[BaseException] = []
 
         def worker(idx: int, seg, slice_: MeshSlice):
             try:
-                results[idx] = self.executor.run_segment(
+                rec = self.executor.run_segment(
                     seg,
                     configs_by_cid,
                     total_steps,
@@ -145,6 +177,14 @@ class ClusterRunner:
                     seed=seed,
                     slice_=slice_,
                 )
+                results[idx] = rec
+                if estimator is not None and seg.run_steps > 0:
+                    estimator.observe(
+                        [configs_by_cid[cid] for cid in seg.config_ids],
+                        seg.degree,
+                        seq,
+                        rec.wall_seconds / seg.run_steps,
+                    )
             except BaseException as e:  # noqa: BLE001 — re-raised by run()
                 errors.append(e)
             finally:
@@ -172,6 +212,12 @@ class ClusterRunner:
             for idx, seg in enumerate(order):
                 if errors:
                     break
+                if estimator is not None:
+                    predicted[idx] = estimator.iter_time(
+                        [configs_by_cid[cid] for cid in seg.config_ids],
+                        seg.degree,
+                        seq,
+                    )
                 for dep in deps[idx]:
                     done_events[dep].wait()
                 units = getattr(seg, "units", ()) or ()
@@ -194,8 +240,9 @@ class ClusterRunner:
             raise errors[0]
 
         timeline = []
+        timings = []
         makespan = 0.0
-        for seg, rec in zip(order, results):
+        for idx, (seg, rec) in enumerate(zip(order, results)):
             rec.real_start -= t0
             rec.real_end -= t0
             makespan = max(makespan, rec.real_end)
@@ -203,9 +250,27 @@ class ClusterRunner:
                 (seg.job_id, rec.real_start, rec.real_end,
                  tuple(getattr(seg, "units", ()) or ()))
             )
-        return ClusterResult(
+            timings.append(
+                SegmentTiming(
+                    job_id=seg.job_id,
+                    config_ids=tuple(seg.config_ids),
+                    degree=seg.degree,
+                    run_steps=seg.run_steps,
+                    seq=seq,
+                    measured_iter=(
+                        rec.wall_seconds / seg.run_steps
+                        if seg.run_steps > 0
+                        else float("nan")
+                    ),
+                    predicted_iter=predicted[idx],
+                )
+            )
+        result = ClusterResult(
             records=list(results),
             makespan=makespan,
             concurrent=self.concurrent,
             timeline=timeline,
+            timings=timings,
         )
+        self.last_result = result
+        return result

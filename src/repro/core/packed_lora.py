@@ -103,18 +103,21 @@ def extract_adapter(lora_params, idx: int, ranks=None):
     """Slice one adapter's (unpadded if ranks given) weights out of a pack —
     what the execution engine stores in the checkpoint pool. The pack dim is
     axis 0 for plain leaves and axis 1 under a layer-stacked "blocks" subtree
-    (axis 0 there is the scanned layer-block axis)."""
+    (axis 0 there is the scanned layer-block axis).
+
+    Runs on the host in numpy: extraction is pure memory movement (slice +
+    copy, no float math, so trivially bit-exact) and it sits on the
+    preempt/checkpoint hot path — dispatching it as dozens of tiny eager XLA
+    ops made every segment resume pay ~0.5s of pure overhead."""
+    import numpy as np
 
     def take(path, leaf):
         in_blocks = any(getattr(k, "key", None) == "blocks" for k in path)
-        return jnp.take(leaf, idx, axis=1 if in_blocks else 0)
+        return np.take(np.asarray(leaf), idx, axis=1 if in_blocks else 0)
 
     sliced = jax.tree_util.tree_map_with_path(take, lora_params)
     if ranks is not None:
         r = int(ranks[idx])
-
-        def crop(path_leaf):
-            return path_leaf
 
         def walk(t):
             if isinstance(t, dict) and set(t) == {"a", "b"}:
@@ -136,23 +139,31 @@ def inject_adapter(lora_params, adapter, idx: int):
     bucket rank): extract -> CheckpointPool -> inject round-trips the real
     rank columns bit-exactly, and the re-introduced padding is zero — the
     same invariant fresh initialization guarantees.
+
+    Like :func:`extract_adapter` this runs on the host in numpy (slice +
+    zero-pad + assignment into a fresh copy, no float math): it is the other
+    half of the segment-resume hot path. The pack leaf is copied, never
+    mutated — callers may pass cached template trees.
     """
+    import numpy as np
 
     def put(leaf, sub, path):
         ax = 1 if "blocks" in path else 0
-        sub = jnp.asarray(sub)
+        sub = np.asarray(sub)
         last = path[-1] if path else None
         if last == "a" and sub.shape[-1] < leaf.shape[-1]:
             pad = [(0, 0)] * sub.ndim
             pad[-1] = (0, leaf.shape[-1] - sub.shape[-1])
-            sub = jnp.pad(sub, pad)
+            sub = np.pad(sub, pad)
         if last == "b" and sub.shape[-2] < leaf.shape[-2]:
             pad = [(0, 0)] * sub.ndim
             pad[-2] = (0, leaf.shape[-2] - sub.shape[-2])
-            sub = jnp.pad(sub, pad)
-        idxer = [slice(None)] * leaf.ndim
+            sub = np.pad(sub, pad)
+        out = np.array(np.asarray(leaf))  # host copy; template stays intact
+        idxer = [slice(None)] * out.ndim
         idxer[ax] = idx
-        return leaf.at[tuple(idxer)].set(sub.astype(leaf.dtype))
+        out[tuple(idxer)] = sub.astype(out.dtype)
+        return out
 
     # manual walk rather than tree_map over both trees: checkpoint
     # round-trips drop empty subtrees (npz stores leaves only), so the

@@ -44,6 +44,16 @@ def main():
     ap.add_argument("--fsdp", action="store_true")
     ap.add_argument("--seq-parallel", action="store_true")
     ap.add_argument("--pool", default=None, help="checkpoint pool dir")
+    ap.add_argument("--profile-in", default=None,
+                    help="load a profile (observation store JSON) from a "
+                         "previous run; predictions below use it")
+    ap.add_argument("--profile-out", default=None,
+                    help="dump the observation store (with this run's "
+                         "measured step time folded in) for reuse via "
+                         "--profile-in / the adaptive engine")
+    ap.add_argument("--hw", default="a100-40g",
+                    choices=["a100-40g", "a10-24g", "tpu-v5e"],
+                    help="hardware prior for the plan-vs-measured summary")
     ap.add_argument("--save-state", action="store_true",
                     help="checkpoint the full packed state (adapters + "
                          "optimizer + step counts) into --pool at the end")
@@ -123,6 +133,20 @@ def main():
             print(f"step {i:4d}  loss={float(m['loss']):.4f}  "
                   f"per-adapter={np.round(per, 3)}")
 
+    # profile feedback loop: prior + (optionally pre-seeded) observations
+    from repro.sched.cost_model import A10_24G, A100_40G, TPU_V5E, CostModel
+    from repro.sched.profile import ObservationStore, ProfiledCostModel
+
+    hw = {"a100-40g": A100_40G, "a10-24g": A10_24G, "tpu-v5e": TPU_V5E}[args.hw]
+    store = (
+        ObservationStore.load(args.profile_in) if args.profile_in
+        else ObservationStore()
+    )
+    est = ProfiledCostModel(CostModel(cfg, hw), store)
+    degree = max(width, 1)
+    pred_prior = est.prior.iter_time(configs, degree, args.seq)
+    pred_profiled = est.iter_time(configs, degree, args.seq)  # before observing
+
     ex = SliceExecutor()
     res = ex.train_pack(
         cfg,
@@ -142,6 +166,28 @@ def main():
     lora, opt = res.lora, res.opt
     print(f"{args.steps} steps in {res.wall_seconds:.1f}s "
           f"({1e3 * res.wall_seconds / max(args.steps, 1):.0f} ms/step)")
+
+    # plan-vs-measured summary: how far the analytic prior (and, when a
+    # profile was loaded, the calibrated estimator) was from reality
+    if args.steps > 0:
+        measured = res.wall_seconds / args.steps
+        est.observe(configs, degree, args.seq, measured)
+
+        def _row(label, pred):
+            drift = measured / pred - 1.0 if pred > 0 else float("nan")
+            print(f"  {label:<22} {1e3 * pred:9.2f} ms/step   "
+                  f"drift {100.0 * drift:+8.1f}%")
+
+        print(f"\nplan-vs-measured  key={est.key(configs, degree, args.seq)}")
+        print(f"  {'measured':<22} {1e3 * measured:9.2f} ms/step")
+        _row(f"prior ({hw.name})", pred_prior)
+        if args.profile_in:
+            _row("profiled (loaded)", pred_profiled)
+        print(f"  store: {len(store)} key(s), "
+              f"{store.n_observations} observation(s)")
+    if args.profile_out:
+        store.save(args.profile_out)
+        print(f"saved profile to {args.profile_out}")
 
     if args.save_state:
         pool = CheckpointPool(args.pool)

@@ -1,5 +1,13 @@
-from repro.sched.cost_model import A10_24G, A100_40G, TPU_V5E, CostModel, HardwareSpec
+from repro.sched.cost_model import (
+    A10_24G,
+    A100_40G,
+    TPU_V5E,
+    CostEstimator,
+    CostModel,
+    HardwareSpec,
+)
 from repro.sched.dtm import DTMResult, JobPlan, dtm
+from repro.sched.profile import ObservationStore, ProfiledCostModel, obs_key
 from repro.sched.engine import (
     Arrival,
     ExecutionEngine,
@@ -19,9 +27,10 @@ from repro.sched.planner import (
 )
 
 __all__ = [
-    "A10_24G", "A100_40G", "TPU_V5E", "CostModel", "HardwareSpec",
-    "DTMResult", "JobPlan", "dtm", "Arrival", "ExecutionEngine",
-    "JobSegment", "OnlineSchedule", "ResourceMonitor", "poisson_trace",
+    "A10_24G", "A100_40G", "TPU_V5E", "CostEstimator", "CostModel",
+    "HardwareSpec", "DTMResult", "JobPlan", "dtm", "Arrival",
+    "ExecutionEngine", "JobSegment", "OnlineSchedule", "ResourceMonitor",
+    "poisson_trace", "ObservationStore", "ProfiledCostModel", "obs_key",
     "brute_force", "solve_pack", "Schedule", "max_gpu_schedule",
     "min_gpu_schedule", "plan", "replan", "sequential_plora_schedule",
 ]

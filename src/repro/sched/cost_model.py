@@ -13,6 +13,12 @@ more adapters is almost free until the compute term takes over.
 
 ``calibrate`` fits a single efficiency scalar from a few profiled iterations
 (the paper profiles 10 iterations on the testbed).
+
+The estimation layer is pluggable: every consumer (DTM, knapsack, planner,
+engine, cluster runner) programs against :class:`CostEstimator`; the analytic
+roofline :class:`CostModel` below is the *prior* implementation, and
+:class:`repro.sched.profile.ProfiledCostModel` layers measured segment
+timings on top of it for real execution.
 """
 from __future__ import annotations
 
@@ -20,6 +26,106 @@ from dataclasses import dataclass, field
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.configs.base import LoraConfig, ModelConfig
+
+
+class CostEstimator:
+    """Interface of the estimation layer (tentpole of the profile feedback
+    loop): what the packing solver, DTM, planner, and execution engine are
+    allowed to ask about a candidate packed job.
+
+    Subclasses provide the three core queries — per-iteration time, memory
+    feasibility, minimum degree — plus a ``setup_time`` attribute; the
+    job-level queries below derive from those, so a subclass that changes
+    ``iter_time`` (e.g. by consulting measured timings) automatically
+    re-prices every downstream planning decision.
+
+    The analytic :class:`CostModel` is the pure *prior*: deterministic,
+    state-free, used by the virtual-clock simulator. The profiled layer
+    (:class:`repro.sched.profile.ProfiledCostModel`) additionally implements
+    the measurement-feedback hooks (``observe``/``observed``) and reports
+    ``adaptive = True``, which switches the engine's real execution path to
+    re-plan on live device-free events.
+    """
+
+    # ---------------- core queries (subclass responsibility) ----------------
+
+    def iter_time(self, configs: Sequence[LoraConfig], d: int, seq: int) -> float:
+        """Seconds per packed training iteration on ``d`` device units."""
+        raise NotImplementedError
+
+    def fits(self, configs: Sequence[LoraConfig], d: int, seq: int) -> bool:
+        raise NotImplementedError
+
+    def min_degree(self, configs: Sequence[LoraConfig], seq: int) -> Optional[int]:
+        raise NotImplementedError
+
+    # ---------------- derived job-level queries ----------------
+
+    def job_time(
+        self, configs: Sequence[LoraConfig], d: int, seq: int, n_steps: int
+    ) -> float:
+        return self.job_time_residual(configs, [n_steps] * len(configs), d, seq)
+
+    def job_time_residual(
+        self,
+        configs: Sequence[LoraConfig],
+        steps: Sequence[int],
+        d: int,
+        seq: int,
+    ) -> float:
+        """Per-job residual-step cost query (online engine): adapters resumed
+        from a preempted job carry fewer remaining steps than fresh arrivals,
+        and a packed job holds its devices until its longest-residual adapter
+        finishes. ``steps[i]`` is the remaining iteration count of
+        ``configs[i]``; the job pays setup once plus ``max(steps)``
+        packed iterations."""
+        if not configs:
+            return self.setup_time
+        return self.setup_time + max(steps) * self.iter_time(configs, d, seq)
+
+    def adapter_finish_offset(
+        self, configs: Sequence[LoraConfig], steps: int, d: int, seq: int
+    ) -> float:
+        """Seconds from job launch until an adapter with ``steps`` residual
+        iterations is done training (it may ride along until the pack's
+        longest adapter finishes, but its own weights stop changing here)."""
+        return self.setup_time + steps * self.iter_time(configs, d, seq)
+
+    def throughput(self, configs: Sequence[LoraConfig], d: int, seq: int) -> float:
+        """Paper Eq (13): LoRA FLOP per unit time. LoRA FLOP is linear in
+        rank (§2.1) and, with heterogeneous batch sizes, in rank * batch."""
+        return sum(c.rank * c.batch_size for c in configs) / self.iter_time(
+            configs, d, seq
+        )
+
+    # ---------------- measurement feedback (no-op for pure priors) ----------
+
+    def observe(
+        self,
+        configs: Sequence[LoraConfig],
+        d: int,
+        seq: int,
+        measured_iter_time: float,
+    ) -> None:
+        """Feed one measured per-iteration wall time back into the estimator.
+        The analytic prior ignores it; the profiled layer folds it into its
+        observation store."""
+
+    def observed(self, configs: Sequence[LoraConfig], d: int, seq: int) -> bool:
+        """Whether this exact (pack shape, degree, seq) has been measured."""
+        return False
+
+    # ---------------- simulation contract ----------------
+
+    @property
+    def adaptive(self) -> bool:
+        """True when real execution should re-plan against live measurements."""
+        return False
+
+    def virtual_model(self) -> "CostEstimator":
+        """The pure prior used by the virtual-clock simulator — simulation
+        must stay deterministic and independent of any measurement state."""
+        return self
 
 
 @dataclass(frozen=True)
@@ -142,7 +248,7 @@ def lora_param_count(cfg: ModelConfig, rank: int) -> float:
 
 
 @dataclass
-class CostModel:
+class CostModel(CostEstimator):
     cfg: ModelConfig
     hw: HardwareSpec
     prec_bytes: int = 2  # bf16 training
@@ -294,42 +400,8 @@ class CostModel:
     # this is the planner-only gain visible in the Fig. 6 ablation.
     setup_time: float = 60.0
 
-    def job_time(
-        self, configs: Sequence[LoraConfig], d: int, seq: int, n_steps: int
-    ) -> float:
-        return self.job_time_residual(configs, [n_steps] * len(configs), d, seq)
-
-    def job_time_residual(
-        self,
-        configs: Sequence[LoraConfig],
-        steps: Sequence[int],
-        d: int,
-        seq: int,
-    ) -> float:
-        """Per-job residual-step cost query (online engine): adapters resumed
-        from a preempted job carry fewer remaining steps than fresh arrivals,
-        and a packed job holds its devices until its longest-residual adapter
-        finishes. ``steps[i]`` is the remaining iteration count of
-        ``configs[i]``; the job pays setup once plus ``max(steps)``
-        packed iterations."""
-        if not configs:
-            return self.setup_time
-        return self.setup_time + max(steps) * self.iter_time(configs, d, seq)
-
-    def adapter_finish_offset(
-        self, configs: Sequence[LoraConfig], steps: int, d: int, seq: int
-    ) -> float:
-        """Seconds from job launch until an adapter with ``steps`` residual
-        iterations is done training (it may ride along until the pack's
-        longest adapter finishes, but its own weights stop changing here)."""
-        return self.setup_time + steps * self.iter_time(configs, d, seq)
-
-    def throughput(self, configs: Sequence[LoraConfig], d: int, seq: int) -> float:
-        """Paper Eq (13): LoRA FLOP per unit time. LoRA FLOP is linear in
-        rank (§2.1) and, with heterogeneous batch sizes, in rank * batch."""
-        return sum(c.rank * c.batch_size for c in configs) / self.iter_time(
-            configs, d, seq
-        )
+    # job_time / job_time_residual / adapter_finish_offset / throughput are
+    # inherited from CostEstimator, derived from iter_time + setup_time.
 
     # ---------------- calibration ----------------
 

@@ -12,7 +12,7 @@ from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 from repro.configs.base import LoraConfig
-from repro.sched.cost_model import CostModel
+from repro.sched.cost_model import CostEstimator
 from repro.sched.knapsack import solve_pack
 
 
@@ -33,7 +33,7 @@ class DTMResult:
 
 
 def dtm(
-    cm: CostModel,
+    cm: CostEstimator,
     configs: Sequence[LoraConfig],
     g: int,
     seq: int,
@@ -148,7 +148,7 @@ def dtm(
 
 
 def _rebalance(
-    cm: CostModel,
+    cm: CostEstimator,
     configs: Sequence[LoraConfig],
     jobs: List[JobPlan],
     seq: int,

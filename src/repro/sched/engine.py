@@ -41,13 +41,13 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.base import LoraConfig, ModelConfig
-from repro.sched.cost_model import CostModel
+from repro.sched.cost_model import CostEstimator
 from repro.sched.planner import Schedule, ScheduledJob, replan
 from repro.train.checkpoint import CheckpointPool
 
@@ -167,6 +167,12 @@ class OnlineSchedule:
     n_repacks: int = 0
     n_migrations: int = 0
     n_f_calls: int = 0
+    # adaptive real execution only (profile feedback loop): probe segments
+    # dispatched, drift-triggered device-unit re-assignments, and the
+    # measured-vs-predicted timing of every executed segment
+    n_probes: int = 0
+    n_reassignments: int = 0
+    timings: List = field(default_factory=list)  # List[SegmentTiming]
 
     def utilization(self) -> float:
         """Busy device-seconds / (G * makespan)."""
@@ -258,9 +264,18 @@ MIGRATION_MARGIN = 0.25
 
 
 class ExecutionEngine:
-    """Resource monitor + event loop + job launcher over ``g`` device units."""
+    """Resource monitor + event loop + job launcher over ``g`` device units.
 
-    def __init__(self, cm: CostModel, g: int):
+    ``cm`` is any :class:`~repro.sched.cost_model.CostEstimator`. Virtual
+    planning (``plan_online``/``simulate``) always runs against the pure
+    prior (``cm.virtual_model()``) so simulation stays deterministic; real
+    execution uses ``cm`` itself — give it a
+    :class:`~repro.sched.profile.ProfiledCostModel` and
+    ``run_online_local`` switches to the adaptive feedback loop
+    (:meth:`_run_adaptive`): re-planning against live measurements on every
+    device-free event and re-assigning device units on drift."""
+
+    def __init__(self, cm: CostEstimator, g: int):
         self.cm = cm
         self.monitor = ResourceMonitor(g)
 
@@ -382,7 +397,9 @@ class ExecutionEngine:
         if admission not in ("patient", "eager"):
             raise ValueError(f"unknown admission policy {admission!r}")
         g = self.monitor.total
-        cm = self.cm
+        # simulation contract: the virtual clock always ticks on the pure
+        # prior, independent of any profile/measurement state
+        cm = self.cm.virtual_model()
         if preempt_min_remaining is None:
             preempt_min_remaining = 4.0 * cm.setup_time
 
@@ -682,6 +699,9 @@ class ExecutionEngine:
         data_iter_fn: Optional[Callable] = None,
         seed: int = 0,
         runner=None,  # Optional[repro.cluster.ClusterRunner]
+        adaptive: Optional[bool] = None,
+        probe_steps: int = 4,
+        drift_threshold: Optional[float] = None,
     ) -> Tuple[List[JobRecord], OnlineSchedule]:
         """Real execution of an online trace: the event loop above decides
         the segments (and their device groups); the cluster runner then
@@ -689,7 +709,33 @@ class ExecutionEngine:
         on disjoint slices overlapping in wall-clock time on multi-device
         hosts — with preempted adapters checkpointing through ``pool`` and
         resuming, possibly with different pack partners, via
-        ``inject_adapter``."""
+        ``inject_adapter``.
+
+        With an adaptive estimator (``self.cm.adaptive``, i.e. a
+        :class:`~repro.sched.profile.ProfiledCostModel`; overridable via
+        ``adaptive=``) the virtual pre-plan is skipped entirely and the
+        engine runs the profile feedback loop instead: re-plan against live
+        measurements on every real device-free event, probe unmeasured jobs
+        for ``probe_steps`` iterations, and re-assign device units when a
+        job's measured rate drifts beyond ``drift_threshold`` from plan —
+        see :meth:`_run_adaptive` (``repack``/``admission``/
+        ``migration_budget`` apply only to the virtual pre-planned path)."""
+        if adaptive is None:
+            adaptive = self.cm.adaptive
+        if adaptive:
+            return self._run_adaptive(
+                trace,
+                cfg,
+                base_params,
+                n_steps=n_steps,
+                seq=seq,
+                pool=pool,
+                data_iter_fn=data_iter_fn,
+                seed=seed,
+                runner=runner,
+                probe_steps=probe_steps,
+                drift_threshold=drift_threshold,
+            )
         sched = self.plan_online(
             trace,
             seq,
@@ -718,6 +764,286 @@ class ExecutionEngine:
             runner=runner,
         )
         return result.records, sched
+
+    # ---------------- adaptive real execution (profile feedback loop) ------
+
+    def _run_adaptive(
+        self,
+        trace: Sequence[Arrival],
+        cfg: ModelConfig,
+        base_params,
+        *,
+        n_steps: int,
+        seq: int,
+        pool: Optional[CheckpointPool],
+        data_iter_fn: Optional[Callable],
+        seed: int,
+        runner,
+        probe_steps: int,
+        drift_threshold: Optional[float],
+    ) -> Tuple[List[JobRecord], OnlineSchedule]:
+        """Profile-guided adaptive execution: plan -> measure -> re-plan.
+
+        Unlike the virtual path (plan the whole trace, then execute), this
+        loop schedules against *real* device-free events:
+
+          * on every admission/completion it re-plans the pending set with
+            the live (calibrated) estimator over the currently free units;
+          * a job whose (pack shape, degree) has never been measured is
+            dispatched as a ``probe_steps``-iteration *probe* segment first
+            (the existing preempt machinery: the probe checkpoints its
+            unfinished adapters through ``pool`` and they resume with exact
+            step/data offsets, so splitting is bit-identical to an unbroken
+            run);
+          * when the probe's measured rate is within ``drift_threshold`` of
+            plan, the job continues in place on the same units — no planner
+            churn; when it drifts beyond the threshold, the residual re-
+            enters the pending set and the next re-plan (now calibrated by
+            the measurement) re-assigns device units — starved jobs land on
+            units that actually free early, over-provisioned plans shrink.
+
+        Observations recorded here persist on the estimator's store, so a
+        profile saved afterwards (``launch.train --profile-out``) seeds the
+        next run's planning."""
+        import dataclasses
+        import queue
+        import time as _time
+        from concurrent.futures import ThreadPoolExecutor
+
+        from repro.cluster import ClusterRunner, SegmentTiming
+
+        est = self.cm
+        runner = runner or ClusterRunner()
+        executor, dpool = runner.executor, runner.device_pool
+        if drift_threshold is None:
+            drift_threshold = getattr(est, "drift_threshold", 0.5)
+        g = self.monitor.total
+        configs_by_cid = {cid: a.config for cid, a in enumerate(trace)}
+        total_steps = {
+            cid: (a.steps if a.steps is not None else n_steps)
+            for cid, a in enumerate(trace)
+        }
+        order = sorted(range(len(trace)), key=lambda cid: (trace[cid].time, cid))
+        next_arr = 0
+        pending: List[_Pending] = []
+        # job_id -> (segment, entries, predicted iter time, is_probe)
+        running: Dict[int, Tuple[JobSegment, List[_Pending], float, bool]] = {}
+        events: queue.Queue = queue.Queue()
+        free_units = list(range(g))
+        segments: List[JobSegment] = []
+        records: List[JobRecord] = []
+        timings: List = []
+        completed: Dict[int, float] = {}
+        n_repacks = n_probes = n_reassign = n_f = 0
+        next_job = itertools.count()
+        tpe = (
+            ThreadPoolExecutor(max_workers=max(g, 1))
+            if runner.concurrent
+            else None
+        )
+        t0 = _time.perf_counter()
+
+        def now() -> float:
+            return _time.perf_counter() - t0
+
+        def submit(entries: List[_Pending], degree: int, units: Tuple[int, ...]):
+            nonlocal n_probes
+            sel = [e.config for e in entries]
+            run_steps = max(e.residual for e in entries)
+            probe = (
+                pool is not None
+                and 0 < probe_steps < run_steps
+                and not est.observed(sel, degree, seq)
+            )
+            steps_this = probe_steps if probe else run_steps
+            seg = JobSegment(
+                job_id=next(next_job),
+                config_ids=tuple(e.cid for e in entries),
+                degree=degree,
+                start=now(),
+                end=now(),  # placeholder; replaced at completion
+                start_steps=tuple(e.steps_done for e in entries),
+                run_steps=steps_this,
+                done_ids=tuple(
+                    e.cid for e in entries if e.residual <= steps_this
+                ),
+                preempted=steps_this < run_steps,
+                units=units,
+            )
+            pred = est.iter_time(sel, degree, seq)
+            running[seg.job_id] = (seg, entries, pred, probe)
+            if probe:
+                n_probes += 1
+            slice_ = dpool.acquire_units(dpool.map_units(units))
+
+            def work():
+                rec = err = None
+                try:
+                    rec = executor.run_segment(
+                        seg,
+                        configs_by_cid,
+                        total_steps,
+                        cfg,
+                        base_params,
+                        seq=seq,
+                        pool=pool,
+                        data_iter_fn=data_iter_fn,
+                        seed=seed,
+                        slice_=slice_,
+                    )
+                except BaseException as e:  # noqa: BLE001 — re-raised below
+                    err = e
+                finally:
+                    dpool.release(slice_)
+                events.put((seg.job_id, rec, err))
+
+            if tpe is not None:
+                tpe.submit(work)
+            else:
+                work()
+
+        def do_replan() -> bool:
+            nonlocal n_repacks, n_f
+            pending.sort(key=lambda e: e.cid)
+            res = replan(
+                est,
+                [e.config for e in pending],
+                len(free_units),
+                seq,
+                n_steps,
+                residual_steps=[e.residual for e in pending],
+            )
+            n_repacks += 1
+            n_f += res.n_f_calls
+            if not res.jobs:
+                return False
+            picked = [
+                (jp, [pending[i] for i in jp.config_ids]) for jp in res.jobs
+            ]
+            launched = set()
+            for jp, entries in picked:
+                units = tuple(free_units[: jp.degree])
+                del free_units[: jp.degree]
+                submit(entries, jp.degree, units)
+                launched |= {e.cid for e in entries}
+            pending[:] = [e for e in pending if e.cid not in launched]
+            return True
+
+        def on_completion(jid: int, rec):
+            nonlocal n_reassign
+            seg, entries, pred, probe = running.pop(jid)
+            end = now()
+            seg = dataclasses.replace(seg, end=end)
+            segments.append(seg)
+            rec.real_start -= t0  # loop-relative, like ClusterResult records
+            rec.real_end -= t0
+            records.append(rec)
+            sel = [e.config for e in entries]
+            measured = (
+                rec.wall_seconds / seg.run_steps
+                if seg.run_steps > 0
+                else float("nan")
+            )
+            if seg.run_steps > 0:
+                est.observe(sel, seg.degree, seq, measured)
+            timing = SegmentTiming(
+                job_id=seg.job_id,
+                config_ids=seg.config_ids,
+                degree=seg.degree,
+                run_steps=seg.run_steps,
+                seq=seq,
+                measured_iter=measured,
+                predicted_iter=pred,
+            )
+            timings.append(timing)
+            for cid in seg.done_ids:
+                completed[cid] = end
+            resumed = []
+            for e in entries:
+                if e.residual > seg.run_steps:
+                    e.steps_done += seg.run_steps
+                    resumed.append(e)
+            # NaN drift (no steps run / degenerate prediction) counts as
+            # within threshold: nothing measurable to react to
+            drift = timing.drift
+            if drift != drift:
+                drift = 0.0
+            if resumed:
+                if abs(drift) <= drift_threshold:
+                    # plan confirmed within threshold: continue in place on
+                    # the same units — no re-assignment, no planner churn
+                    submit(resumed, seg.degree, seg.units)
+                    return
+                # drifted beyond threshold: the residual goes back to the
+                # planner, which — now calibrated by this very measurement —
+                # re-assigns device units on the next replan
+                n_reassign += 1
+                pending.extend(resumed)
+            free_units.extend(seg.units)
+            free_units.sort()
+
+        try:
+            while next_arr < len(order) or pending or running:
+                while (
+                    next_arr < len(order)
+                    and trace[order[next_arr]].time <= now() + _EPS
+                ):
+                    cid = order[next_arr]
+                    next_arr += 1
+                    pending.append(
+                        _Pending(
+                            cid,
+                            trace[cid].config,
+                            trace[cid].time,
+                            0,
+                            total_steps[cid],
+                        )
+                    )
+                launched = (
+                    do_replan() if pending and free_units else False
+                )
+                if running:
+                    timeout = None
+                    if next_arr < len(order):
+                        timeout = (
+                            max(trace[order[next_arr]].time - now(), 0.0)
+                            + 1e-3
+                        )
+                    try:
+                        jid, rec, err = events.get(timeout=timeout)
+                    except queue.Empty:
+                        continue  # the next arrival is due — admit it
+                    if err is not None:
+                        raise err
+                    on_completion(jid, rec)
+                elif pending and not launched:
+                    raise RuntimeError(
+                        f"{len(pending)} configs can never be scheduled on "
+                        f"{g} free device units (min degree exceeds the "
+                        f"pool?)"
+                    )
+                elif not pending and next_arr < len(order):
+                    _time.sleep(
+                        max(trace[order[next_arr]].time - now(), 0.0)
+                    )
+        finally:
+            if tpe is not None:
+                tpe.shutdown(wait=True)
+
+        sched = OnlineSchedule(
+            segments=segments,
+            makespan=max((s.end for s in segments), default=0.0),
+            g=g,
+            completed=completed,
+            total_steps=total_steps,
+            n_repacks=n_repacks,
+            n_migrations=0,
+            n_f_calls=n_f,
+            n_probes=n_probes,
+            n_reassignments=n_reassign,
+            timings=timings,
+        )
+        return records, sched
 
     # ---------------- shared segment executor (cluster subsystem) ----------
 
@@ -758,6 +1084,7 @@ class ExecutionEngine:
             pool=pool,
             data_iter_fn=data_iter_fn,
             seed=seed,
+            estimator=self.cm,
         )
 
 

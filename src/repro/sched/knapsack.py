@@ -18,7 +18,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.base import LoraConfig
-from repro.sched.cost_model import CostModel
+from repro.sched.cost_model import CostEstimator
 
 
 def _knapsack(values: np.ndarray, weights: np.ndarray, capacity: int):
@@ -47,7 +47,7 @@ def _knapsack(values: np.ndarray, weights: np.ndarray, capacity: int):
 
 
 def solve_pack(
-    cm: CostModel,
+    cm: CostEstimator,
     configs: Sequence[LoraConfig],
     d: int,
     seq: int,
@@ -153,7 +153,7 @@ def solve_pack(
 
 
 def brute_force(
-    cm: CostModel, configs: Sequence[LoraConfig], d: int, seq: int
+    cm: CostEstimator, configs: Sequence[LoraConfig], d: int, seq: int
 ) -> Optional[Tuple[List[int], float]]:
     """Exhaustive optimum (tests only; len(configs) <= ~15)."""
     n = len(configs)

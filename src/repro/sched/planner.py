@@ -17,7 +17,7 @@ from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
 from repro.configs.base import LoraConfig
-from repro.sched.cost_model import CostModel
+from repro.sched.cost_model import CostEstimator, CostModel
 from repro.sched.dtm import DTMResult, JobPlan, dtm
 
 
@@ -69,7 +69,7 @@ class Schedule:
 
 
 def replan(
-    cm: CostModel,
+    cm: CostEstimator,
     configs: Sequence[LoraConfig],
     free: int,
     seq: int,
@@ -96,7 +96,7 @@ def replan(
 
 
 def plan(
-    cm: CostModel,
+    cm: CostEstimator,
     configs: Sequence[LoraConfig],
     g: int,
     seq: int,
@@ -176,7 +176,7 @@ def _list_schedule(durations_degrees, g) -> Schedule:
 
 
 def min_gpu_schedule(
-    cm: CostModel, configs: Sequence[LoraConfig], g: int, seq: int, n_steps: int
+    cm: CostEstimator, configs: Sequence[LoraConfig], g: int, seq: int, n_steps: int
 ) -> Schedule:
     jobs = []
     for c in configs:
@@ -188,7 +188,7 @@ def min_gpu_schedule(
 
 
 def max_gpu_schedule(
-    cm: CostModel, configs: Sequence[LoraConfig], g: int, seq: int, n_steps: int
+    cm: CostEstimator, configs: Sequence[LoraConfig], g: int, seq: int, n_steps: int
 ) -> Schedule:
     jobs = [(cm.job_time([c], g, seq, n_steps), g) for c in configs]
     return _list_schedule(jobs, g)

@@ -1,0 +1,293 @@
+"""Profile-guided cost estimation: measured segment timings fed back into
+planning.
+
+The paper calibrates its analytic roofline from ~10 profiled iterations and
+then trusts it for the whole run; on oversubscribed or heterogeneous hardware
+that prior drifts, and the cluster executor already measures every segment's
+real wall-clock anyway. This module closes the loop:
+
+  * :class:`ObservationStore` — a thread-safe online store of
+    (model, pack width, bucket rank, batch, degree, seq) -> per-iteration
+    wall-time observations, EWMA-smoothed with observation counts, JSON
+    save/load so a profile survives across runs (``launch.train
+    --profile-out/--profile-in``);
+  * :class:`ProfiledCostModel` — a :class:`~repro.sched.cost_model
+    .CostEstimator` that answers ``iter_time`` from measurements when it has
+    them and falls back to the analytic prior (scaled by the observed
+    prediction-error ratio) when it does not. Memory queries always delegate
+    to the prior — measurements say nothing about feasibility.
+
+Fallback ladder for an unmeasured key, most- to least-specific:
+
+  1. exact key observed            -> its EWMA;
+  2. same *degree* observed        -> prior * ratio[degree]   (TP overheads
+     are the dominant per-degree modeling error on real hosts);
+  3. nothing at this degree        -> the pure prior.
+
+Step 3 is deliberately *optimistic*: an unmeasured degree keeps the
+prior's (usually rosy) estimate rather than inheriting another degree's
+error ratio. That optimism is what drives exploration — when the degree
+the prior favored turns out slow, the planner's next-best degree still
+looks cheap, gets tried, gets measured, and the comparison is honest from
+then on. Scaling unseen degrees by a global ratio would preserve the
+prior's (wrong) degree ordering forever. The cross-key global ratio is
+still tracked (``ObservationStore.ratio()``) for diagnostics.
+
+The virtual-clock simulator must never see any of this:
+``ProfiledCostModel.virtual_model()`` returns the pure prior, keeping
+``ExecutionEngine.plan_online``/``simulate`` byte-identical and
+deterministic regardless of measurement state.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.configs.base import LoraConfig
+from repro.sched.cost_model import CostEstimator, CostModel
+
+# EWMA weight of a NEW observation (responsive: two observations already
+# weight the prior measurement down to 25%)
+DEFAULT_ALPHA = 0.5
+
+# |measured / predicted - 1| beyond which the engine treats a running job's
+# rate as having drifted from plan and re-assigns device units (see
+# ExecutionEngine._run_adaptive and ROADMAP "Profile feedback loop")
+DEFAULT_DRIFT_THRESHOLD = 0.5
+
+_SCHEMA = 1
+
+
+@dataclass
+class Observation:
+    """EWMA of one key's measured per-iteration seconds + sample count."""
+
+    ewma: float
+    n: int = 1
+
+    def update(self, x: float, alpha: float) -> None:
+        self.ewma = (1.0 - alpha) * self.ewma + alpha * x
+        self.n += 1
+
+
+def obs_key(
+    model_name: str, configs: Sequence[LoraConfig], d: int, seq: int
+) -> Tuple[str, int, int, int, int, int]:
+    """Observation key of one packed job: iteration time depends on the pack's
+    *shape* — width, bucket rank, total batch — not on which adapters fill it
+    (hyperparameters are runtime args; same-shape packs share executables)."""
+    return (
+        model_name,
+        len(configs),
+        CostModel.bucket_rank(configs) if configs else 0,
+        sum(c.batch_size for c in configs),
+        d,
+        seq,
+    )
+
+
+class ObservationStore:
+    """Thread-safe (key -> EWMA iter-time) store with prediction-error ratios.
+
+    Besides the per-key EWMAs it maintains per-degree and global EWMAs of
+    ``measured / prior_predicted`` — the calibration ratios the profiled
+    estimator uses to price configurations it has never run (the planner
+    constantly asks about packs/degrees that differ from what executed)."""
+
+    def __init__(self, alpha: float = DEFAULT_ALPHA):
+        self.alpha = alpha
+        self._obs: Dict[Tuple, Observation] = {}
+        self._ratio_by_degree: Dict[int, Observation] = {}
+        self._ratio: Optional[Observation] = None
+        self._lock = threading.Lock()
+
+    # ---------------- updates / queries ----------------
+
+    def update(self, key: Tuple, measured: float, predicted_prior: float) -> None:
+        with self._lock:
+            hit = self._obs.get(key)
+            if hit is None:
+                self._obs[key] = Observation(measured)
+            else:
+                hit.update(measured, self.alpha)
+            if predicted_prior > 0.0:
+                r = measured / predicted_prior
+                d = int(key[4])
+                rd = self._ratio_by_degree.get(d)
+                if rd is None:
+                    self._ratio_by_degree[d] = Observation(r)
+                else:
+                    rd.update(r, self.alpha)
+                if self._ratio is None:
+                    self._ratio = Observation(r)
+                else:
+                    self._ratio.update(r, self.alpha)
+
+    def get(self, key: Tuple) -> Optional[Observation]:
+        with self._lock:
+            return self._obs.get(key)
+
+    def ratio(self, d: Optional[int] = None) -> Optional[float]:
+        """Calibration ratio for degree ``d``, or — with ``d=None`` — the
+        global cross-key ratio (diagnostics only; see the module docstring
+        on why unseen degrees do NOT inherit it). None before any
+        observation at that degree."""
+        with self._lock:
+            if d is not None:
+                rd = self._ratio_by_degree.get(d)
+                return rd.ewma if rd is not None else None
+            return self._ratio.ewma if self._ratio is not None else None
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._obs)
+
+    @property
+    def n_observations(self) -> int:
+        with self._lock:
+            return sum(o.n for o in self._obs.values())
+
+    # ---------------- persistence ----------------
+
+    def to_json(self) -> Dict:
+        with self._lock:
+            return {
+                "schema": _SCHEMA,
+                "alpha": self.alpha,
+                "observations": [
+                    {"key": list(k), "ewma": o.ewma, "n": o.n}
+                    for k, o in sorted(self._obs.items())
+                ],
+                "ratio_by_degree": {
+                    str(d): {"ewma": o.ewma, "n": o.n}
+                    for d, o in sorted(self._ratio_by_degree.items())
+                },
+                "ratio": (
+                    {"ewma": self._ratio.ewma, "n": self._ratio.n}
+                    if self._ratio is not None
+                    else None
+                ),
+            }
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+
+    @classmethod
+    def from_json(cls, blob: Dict) -> "ObservationStore":
+        if blob.get("schema") != _SCHEMA:
+            raise ValueError(f"unknown profile schema {blob.get('schema')!r}")
+        store = cls(alpha=float(blob.get("alpha", DEFAULT_ALPHA)))
+        for row in blob.get("observations", []):
+            store._obs[tuple(row["key"])] = Observation(
+                float(row["ewma"]), int(row["n"])
+            )
+        for d, row in blob.get("ratio_by_degree", {}).items():
+            store._ratio_by_degree[int(d)] = Observation(
+                float(row["ewma"]), int(row["n"])
+            )
+        if blob.get("ratio") is not None:
+            store._ratio = Observation(
+                float(blob["ratio"]["ewma"]), int(blob["ratio"]["n"])
+            )
+        return store
+
+    @classmethod
+    def load(cls, path: str) -> "ObservationStore":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+
+class ProfiledCostModel(CostEstimator):
+    """The analytic prior wrapped with an online observation store.
+
+    Time queries prefer measurements (fallback ladder in the module
+    docstring); memory/feasibility queries and every other attribute
+    delegate to the prior, so the packing solver's memory accounting is
+    identical whether planning runs calibrated or not — only *durations*
+    adapt. ``virtual_model()`` returns the pure prior for simulation."""
+
+    def __init__(
+        self,
+        prior: CostModel,
+        store: Optional[ObservationStore] = None,
+        *,
+        drift_threshold: float = DEFAULT_DRIFT_THRESHOLD,
+    ):
+        self.prior = prior
+        self.store = store if store is not None else ObservationStore()
+        self.drift_threshold = drift_threshold
+
+    def __getattr__(self, name):
+        # memory model, hardware spec, setup_time, calibrate, ... — anything
+        # not overridden here is the prior's business. (Guard 'prior' itself:
+        # attribute lookup during unpickling/copy runs before __init__.)
+        if name == "prior":
+            raise AttributeError(name)
+        return getattr(self.prior, name)
+
+    def key(self, configs: Sequence[LoraConfig], d: int, seq: int) -> Tuple:
+        return obs_key(self.prior.cfg.name, configs, d, seq)
+
+    # ---------------- time ----------------
+
+    def iter_time(self, configs: Sequence[LoraConfig], d: int, seq: int) -> float:
+        obs = self.store.get(self.key(configs, d, seq))
+        if obs is not None:
+            return obs.ewma
+        prior_t = self.prior.iter_time(configs, d, seq)
+        ratio = self.store.ratio(d)
+        return prior_t if ratio is None else prior_t * ratio
+
+    # ---------------- memory (always the prior) ----------------
+
+    def fits(self, configs: Sequence[LoraConfig], d: int, seq: int) -> bool:
+        return self.prior.fits(configs, d, seq)
+
+    def min_degree(self, configs: Sequence[LoraConfig], seq: int) -> Optional[int]:
+        return self.prior.min_degree(configs, seq)
+
+    # ---------------- feedback ----------------
+
+    def observe(
+        self,
+        configs: Sequence[LoraConfig],
+        d: int,
+        seq: int,
+        measured_iter_time: float,
+    ) -> None:
+        self.store.update(
+            self.key(configs, d, seq),
+            measured_iter_time,
+            self.prior.iter_time(configs, d, seq),
+        )
+
+    def observed(self, configs: Sequence[LoraConfig], d: int, seq: int) -> bool:
+        return self.store.get(self.key(configs, d, seq)) is not None
+
+    def drift(
+        self,
+        configs: Sequence[LoraConfig],
+        d: int,
+        seq: int,
+        measured_iter_time: float,
+    ) -> float:
+        """Signed relative error of the *current* prediction against a fresh
+        measurement: ``measured / predicted - 1``. Positive = the job runs
+        slower than planned (starved / oversubscribed); negative = faster
+        (over-provisioned)."""
+        pred = self.iter_time(configs, d, seq)
+        if pred <= 0.0:
+            return 0.0
+        return measured_iter_time / pred - 1.0
+
+    # ---------------- simulation contract ----------------
+
+    @property
+    def adaptive(self) -> bool:
+        return True
+
+    def virtual_model(self) -> CostModel:
+        return self.prior

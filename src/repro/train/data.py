@@ -56,11 +56,18 @@ def packed_batch_iterator(
     task_seed: int = 0,
     noise: float = 0.1,
     seed: int = 1234,
+    start_steps: Optional[Sequence[int]] = None,
 ) -> Iterator[Dict[str, jnp.ndarray]]:
     """Yields {"tokens": (N*Bmax, S), "labels": (N*Bmax, S)} with per-adapter
     sample masking: adapter n uses its own batch_size b_n <= Bmax; padded rows
     have labels == IGNORE (zero gradient), so heterogeneous batch sizes pack
-    into one rectangular tensor."""
+    into one rectangular tensor.
+
+    ``start_steps[n]`` fast-forwards adapter n's stream past the batches it
+    already consumed in earlier segments (one draw per packed iteration), so
+    a preempted adapter resumed mid-run sees *exactly* the sample sequence it
+    would have seen uninterrupted — what makes segmented execution (probe /
+    preempt / resume) bit-identical to a single unbroken run."""
     vocab = cfg.vocab_size
     perm = task_permutation(task_seed, vocab)
     bmax = max(c.batch_size for c in configs)
@@ -70,6 +77,11 @@ def packed_batch_iterator(
     ]
     n_patch = cfg.n_patch_tokens or 0
     s_text = seq - n_patch  # VLM: patch prefix consumes part of the budget
+    if start_steps is not None:
+        assert len(start_steps) == len(configs)
+        for n, c in enumerate(configs):
+            for _ in range(start_steps[n]):
+                sample_perm_lm(rngs[n], perm, c.batch_size, s_text, vocab, noise)
     while True:
         toks = np.zeros((len(configs), bmax, s_text), np.int32)
         labs = np.full((len(configs), bmax, seq), IGNORE, np.int32)

@@ -1,0 +1,335 @@
+"""Profile-guided cost estimation: EWMA math, JSON round-trip, fallback
+ladder, drift thresholds, step-offset data streams, and the engine-level
+adaptive loop (probe / continue-in-place / drift re-assignment) against a
+fake executor with controlled slowdowns."""
+import numpy as np
+import pytest
+
+from repro.configs.base import LoraConfig, get_config, reduced
+from repro.sched.cost_model import A100_40G, CostModel
+from repro.sched.engine import Arrival, ExecutionEngine, JobRecord
+from repro.sched.planner import ScheduledJob
+from repro.sched.profile import (
+    ObservationStore,
+    ProfiledCostModel,
+    obs_key,
+)
+
+SEQ = 64
+
+
+@pytest.fixture()
+def prior():
+    cm = CostModel(get_config("qwen25-7b"), A100_40G)
+    cm.setup_time = 0.0
+    return cm
+
+
+def _cfg(rank=8, alpha=8.0, bs=1):
+    return LoraConfig(
+        rank=rank, alpha=alpha, learning_rate=1e-3, batch_size=bs, seq_len=SEQ
+    )
+
+
+# ---------------------------------------------------------------------------
+# ObservationStore
+# ---------------------------------------------------------------------------
+
+
+def test_ewma_update_math():
+    store = ObservationStore(alpha=0.5)
+    key = ("m", 1, 8, 1, 1, SEQ)
+    store.update(key, 2.0, 1.0)
+    obs = store.get(key)
+    assert obs.ewma == 2.0 and obs.n == 1  # first observation is taken as-is
+    store.update(key, 4.0, 1.0)
+    obs = store.get(key)
+    assert obs.ewma == pytest.approx(0.5 * 2.0 + 0.5 * 4.0)
+    assert obs.n == 2
+    store.update(key, 4.0, 1.0)
+    assert store.get(key).ewma == pytest.approx(0.5 * 3.0 + 0.5 * 4.0)
+    assert store.n_observations == 3 and len(store) == 1
+
+
+def test_ratio_tracking_per_degree():
+    store = ObservationStore(alpha=0.5)
+    store.update(("m", 1, 8, 1, 2, SEQ), measured=3.0, predicted_prior=1.0)
+    assert store.ratio(2) == pytest.approx(3.0)
+    assert store.ratio(4) is None  # unseen degree: NO cross-degree bleed
+    assert store.ratio() == pytest.approx(3.0)  # global (diagnostics)
+    store.update(("m", 1, 8, 1, 4, SEQ), measured=1.0, predicted_prior=1.0)
+    assert store.ratio(4) == pytest.approx(1.0)
+    assert store.ratio(2) == pytest.approx(3.0)  # unchanged
+
+
+def test_json_roundtrip(tmp_path, prior):
+    est = ProfiledCostModel(prior)
+    c = [_cfg()]
+    est.observe(c, 1, SEQ, 0.123)
+    est.observe(c, 1, SEQ, 0.456)
+    est.observe(c, 2, SEQ, 0.9)
+    path = str(tmp_path / "profile.json")
+    est.store.save(path)
+    loaded = ObservationStore.load(path)
+    est2 = ProfiledCostModel(prior, loaded)
+    assert est2.iter_time(c, 1, SEQ) == est.iter_time(c, 1, SEQ)
+    assert est2.iter_time(c, 2, SEQ) == est.iter_time(c, 2, SEQ)
+    k = est.key(c, 1, SEQ)
+    assert loaded.get(k).n == est.store.get(k).n
+    assert loaded.ratio(2) == est.store.ratio(2)
+    assert loaded.alpha == est.store.alpha
+
+
+def test_json_schema_guard(tmp_path):
+    with pytest.raises(ValueError, match="schema"):
+        ObservationStore.from_json({"schema": 999})
+
+
+# ---------------------------------------------------------------------------
+# ProfiledCostModel fallback ladder + interface
+# ---------------------------------------------------------------------------
+
+
+def test_fallback_ladder(prior):
+    est = ProfiledCostModel(prior)
+    a, b = [_cfg()], [_cfg(rank=16, alpha=16.0)]
+    t_prior = prior.iter_time(a, 1, SEQ)
+    # 1. nothing observed -> pure prior
+    assert est.iter_time(a, 1, SEQ) == t_prior
+    # 2. exact key observed -> EWMA wins
+    est.observe(a, 1, SEQ, 3.0 * t_prior)
+    assert est.iter_time(a, 1, SEQ) == pytest.approx(3.0 * t_prior)
+    # 3. unseen key at an OBSERVED degree -> prior * ratio[degree]
+    tb = prior.iter_time(b, 1, SEQ)
+    assert est.iter_time(b, 1, SEQ) == pytest.approx(3.0 * tb)
+    # 4. unseen degree -> optimistic pure prior (drives exploration)
+    tb2 = prior.iter_time(b, 2, SEQ)
+    assert est.iter_time(b, 2, SEQ) == tb2
+    assert est.observed(a, 1, SEQ) and not est.observed(b, 1, SEQ)
+
+
+def test_memory_and_attrs_delegate_to_prior(prior):
+    est = ProfiledCostModel(prior)
+    c = [_cfg()]
+    est.observe(c, 1, SEQ, 99.0)  # time observations must not touch memory
+    assert est.fits(c, 8, SEQ) == prior.fits(c, 8, SEQ)
+    assert est.min_degree(c, SEQ) == prior.min_degree(c, SEQ)
+    assert est.setup_time == prior.setup_time
+    assert est.hw is prior.hw and est.cfg is prior.cfg
+    # derived job queries price through the PROFILED iter_time
+    assert est.job_time(c, 1, SEQ, 10) == pytest.approx(
+        prior.setup_time + 10 * 99.0
+    )
+    # simulation contract
+    assert est.adaptive and not prior.adaptive
+    assert est.virtual_model() is prior
+    assert prior.virtual_model() is prior
+
+
+def test_drift_sign_and_threshold(prior):
+    est = ProfiledCostModel(prior, drift_threshold=0.5)
+    c = [_cfg()]
+    t = prior.iter_time(c, 1, SEQ)
+    assert est.drift(c, 1, SEQ, 3.0 * t) == pytest.approx(2.0)  # starved
+    assert est.drift(c, 1, SEQ, 0.5 * t) == pytest.approx(-0.5)  # over-prov
+    assert abs(est.drift(c, 1, SEQ, 1.2 * t)) < est.drift_threshold
+
+
+def test_obs_key_is_shape_not_hyperparams():
+    a = _cfg(alpha=8.0)
+    b = _cfg(alpha=32.0)  # same shape, different hyperparameters
+    assert obs_key("m", [a], 1, SEQ) == obs_key("m", [b], 1, SEQ)
+    wider = _cfg(bs=4)
+    assert obs_key("m", [a], 1, SEQ) != obs_key("m", [wider], 1, SEQ)
+    assert obs_key("m", [a], 1, SEQ) != obs_key("m", [a], 2, SEQ)
+
+
+# ---------------------------------------------------------------------------
+# Step-offset data streams (what makes probe/split/resume bit-exact)
+# ---------------------------------------------------------------------------
+
+
+def test_packed_batch_iterator_start_steps_offsets():
+    from repro.train.data import packed_batch_iterator
+
+    cfg = reduced(get_config("qwen25-7b"))
+    configs = [_cfg(), _cfg(rank=16, alpha=16.0, bs=2)]
+    full = packed_batch_iterator(cfg, configs, seq=32)
+    ref = [next(full) for _ in range(5)]
+    resumed = packed_batch_iterator(cfg, configs, seq=32, start_steps=(2, 2))
+    for step in (2, 3, 4):
+        batch = next(resumed)
+        for k in ref[step]:
+            np.testing.assert_array_equal(
+                np.asarray(ref[step][k]), np.asarray(batch[k])
+            )
+
+
+# ---------------------------------------------------------------------------
+# Engine-level adaptive loop with a fake executor
+# ---------------------------------------------------------------------------
+
+
+class _FakeExecutor:
+    """run_segment stand-in returning fabricated wall times: ``slow`` x the
+    pure prior's prediction. No jax, no checkpoints — pure scheduling."""
+
+    def __init__(self, prior, slow=1.0):
+        self.prior = prior
+        self.slow = slow
+        self.calls = []
+
+    def run_segment(self, seg, configs_by_cid, total_steps, cfg, base, *,
+                    seq, pool, data_iter_fn, seed, slice_):
+        sel = [configs_by_cid[c] for c in seg.config_ids]
+        wall = self.slow * self.prior.iter_time(sel, seg.degree, seq)
+        self.calls.append((seg.config_ids, seg.units, seg.run_steps))
+        return JobRecord(
+            ScheduledJob(seg.config_ids, seg.degree, seg.start, seg.end),
+            wall * seg.run_steps,
+        )
+
+
+class _FakeRunner:
+    def __init__(self, executor, n_units):
+        from repro.cluster.pool import DevicePool
+
+        self.executor = executor
+        self.device_pool = DevicePool(devices=list(range(n_units)))
+        self.concurrent = False  # inline execution: fully deterministic
+
+
+class _NoPool:
+    """Placeholder checkpoint pool (the fake executor never touches it)."""
+
+
+def _adaptive_run(prior_factory, slow, steps=20, probe_steps=4, g=1):
+    est = ProfiledCostModel(prior_factory(), drift_threshold=0.5)
+    eng = ExecutionEngine(est, g)
+    fake = _FakeExecutor(prior_factory(), slow=slow)
+    trace = [Arrival(0.0, _cfg(), steps)]
+    records, sched = eng.run_online_local(
+        trace,
+        reduced(get_config("qwen25-7b")),
+        None,
+        n_steps=steps,
+        seq=SEQ,
+        pool=_NoPool(),
+        runner=_FakeRunner(fake, g),
+        probe_steps=probe_steps,
+    )
+    return records, sched
+
+
+def _make_prior():
+    cm = CostModel(get_config("qwen25-7b"), A100_40G)
+    cm.setup_time = 0.0
+    return cm
+
+
+def test_adaptive_drift_triggers_exactly_one_reassignment():
+    """A 3x-slowed executor: the probe segment measures the drift, the
+    residual is re-assigned through the planner — exactly once — and the
+    step accounting still comes out exact."""
+    records, sched = _adaptive_run(_make_prior, slow=3.0)
+    assert sched.n_probes == 1
+    assert sched.n_reassignments == 1
+    assert len(sched.segments) == 2  # probe + re-planned residual
+    assert sched.segments[0].preempted and not sched.segments[1].preempted
+    executed = sum(
+        min(sched.total_steps[cid] - s.start_steps[i], s.run_steps)
+        for s in sched.segments
+        for i, cid in enumerate(s.config_ids)
+    )
+    assert executed == 20
+    assert sorted(sched.completed) == [0]
+    assert len(records) == 2
+    # the re-planned residual was priced with the measured (3x) rate
+    assert sched.timings[1].predicted_iter == pytest.approx(
+        3.0 * sched.timings[0].predicted_iter, rel=1e-6
+    )
+
+
+def test_adaptive_within_threshold_continues_in_place():
+    """Measured rate within the drift threshold: the probe's residual
+    continues on the same units without a re-assignment."""
+    records, sched = _adaptive_run(_make_prior, slow=1.05)
+    assert sched.n_probes == 1
+    assert sched.n_reassignments == 0
+    assert len(sched.segments) == 2  # probe + in-place continuation
+    assert sched.segments[0].units == sched.segments[1].units
+    executed = sum(
+        min(sched.total_steps[cid] - s.start_steps[i], s.run_steps)
+        for s in sched.segments
+        for i, cid in enumerate(s.config_ids)
+    )
+    assert executed == 20
+
+
+def test_adaptive_observed_key_skips_probe():
+    """Once a (shape, degree) key is measured, later jobs of the same shape
+    dispatch their full residual in one segment."""
+    est = ProfiledCostModel(_make_prior(), drift_threshold=0.5)
+    eng = ExecutionEngine(est, 1)
+    fake = _FakeExecutor(_make_prior(), slow=1.0)
+    # second job arrives (in real time) after the first finished, so the
+    # planner sees them separately instead of packing them into one job
+    trace = [Arrival(0.0, _cfg(), 20), Arrival(0.1, _cfg(alpha=9.0), 20)]
+    _, sched = eng.run_online_local(
+        trace,
+        reduced(get_config("qwen25-7b")),
+        None,
+        n_steps=20,
+        seq=SEQ,
+        pool=_NoPool(),
+        runner=_FakeRunner(fake, 1),
+        probe_steps=4,
+    )
+    # same obs key (alpha is not part of the shape): one probe total
+    assert sched.n_probes == 1
+    assert sorted(sched.completed) == [0, 1]
+    per_cid = {}
+    for s in sched.segments:
+        per_cid.setdefault(s.config_ids[0], []).append(s.run_steps)
+    assert sorted(len(v) for v in per_cid.values()) == [1, 2]
+
+
+def test_adaptive_unschedulable_raises():
+    cm = CostModel(get_config("command-r-35b"), A100_40G)  # won't fit 1 unit
+    est = ProfiledCostModel(cm)
+    eng = ExecutionEngine(est, 1)
+    fake = _FakeExecutor(cm)
+    trace = [Arrival(0.0, LoraConfig(rank=8, alpha=8.0, seq_len=1024), 5)]
+    with pytest.raises(RuntimeError, match="never be scheduled"):
+        eng.run_online_local(
+            trace,
+            get_config("command-r-35b"),
+            None,
+            n_steps=5,
+            seq=1024,
+            pool=_NoPool(),
+            runner=_FakeRunner(fake, 1),
+        )
+
+
+def test_simulation_stays_on_pure_prior():
+    """plan_online through a ProfiledCostModel engine is byte-identical to
+    the pure prior's plan regardless of observation state — the simulation
+    contract of the estimator interface."""
+    from repro.configs.base import default_search_space
+    from repro.sched.engine import poisson_trace
+
+    prior = CostModel(get_config("command-r-35b"), A100_40G)
+    est = ProfiledCostModel(prior)
+    configs = default_search_space(12, 1024)
+    steps = np.random.RandomState(0).choice([200, 500, 1000], size=12)
+    trace = poisson_trace(configs, 600.0, seed=1, steps=steps)
+    ref = ExecutionEngine(prior, 8).plan_online(trace, 1024, 1000)
+    # pollute the profile with nonsense observations; the plan must not move
+    for c in configs[:4]:
+        est.observe([c], 1, 1024, 123.456)
+        est.observe([c], 4, 1024, 0.001)
+    out = ExecutionEngine(est, 8).plan_online(trace, 1024, 1000)
+    assert out.segments == ref.segments
+    assert out.makespan == ref.makespan
+    assert out.completed == ref.completed
