@@ -1,0 +1,149 @@
+"""Multi-host dispatch tier vs the single-host runner on the same workload.
+
+The scale-out claim: a workload that oversubscribes one host should finish
+faster when the *same* segment protocol is dispatched across more hosts.
+This bench runs an 8-job schedule (single-config width-1 jobs, the 4-group
+grid doubled) twice through the dispatch tier:
+
+  * 1 host x 4 devices  — the plan needs two waves;
+  * 2 hosts x 4 devices — twice the hardware, one wave, jobs overlapping
+    across *processes* (each simulated host is a subprocess self-forcing its
+    own CPU device count, so this runs on any machine with no XLA_FLAGS).
+
+Reported per layout: wall-clock elapsed (warm workers; cold startup+compile
+reported separately), real makespan, peak overlap — plus the speedup and
+per-adapter loss bit-exactness between the layouts. Small per-step compute
+(seq 16, batch 1) keeps the single-process baseline honest: its 4 concurrent
+slices contend on one GIL for dispatch, exactly the regime where one process
+per host pays off even on a 2-core box.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+
+def run(fast: bool = False) -> List[Dict]:
+    import jax
+    import numpy as np
+
+    from repro.cluster import HostDispatcher
+    from repro.configs.base import LoraConfig, get_config, reduced
+    from repro.core.adapter import pack_meta
+    from repro.models.model import init_model
+    from repro.sched.cost_model import A100_40G, CostModel
+    from repro.sched.engine import ExecutionEngine
+    from repro.sched.planner import Schedule, ScheduledJob
+
+    cfg = reduced(get_config("qwen25-7b"))
+    cm = CostModel(cfg, A100_40G)
+    seq = 16
+    steps = 60 if fast else 150
+    grid = [
+        LoraConfig(rank=r, alpha=a, learning_rate=lr, batch_size=1, seq_len=seq)
+        for r, a, lr in [
+            (8, 8.0, 1e-3), (8, 16.0, 5e-4), (16, 16.0, 1e-3),
+            (16, 32.0, 2e-4), (8, 4.0, 2e-3), (8, 12.0, 8e-4),
+            (16, 8.0, 6e-4), (16, 24.0, 3e-4),
+        ]
+    ]
+    base, _ = init_model(jax.random.PRNGKey(0), cfg, pack_meta(grid))
+
+    def schedule(g: int) -> Schedule:
+        """Width-1 jobs in as many waves as ``g`` units require."""
+        jobs = [
+            ScheduledJob((i,), 1, float(i // g), float(i // g) + 1.0)
+            for i in range(len(grid))
+        ]
+        return Schedule(jobs, float(-(-len(grid) // g)), g)
+
+    def run_layout(hosts: List[int]):
+        g = sum(hosts)
+        eng = ExecutionEngine(cm, g, host_size=hosts[0])
+        sched = schedule(g)
+        with HostDispatcher(hosts) as disp:
+            def once():
+                t0 = time.perf_counter()
+                records, makespan = eng.run_local(
+                    sched, grid, cfg, base, n_steps=steps, seq=seq,
+                    runner=disp,
+                )
+                return (
+                    time.perf_counter() - t0,
+                    makespan,
+                    np.concatenate(
+                        [r.final_losses for r in sorted(
+                            records, key=lambda r: r.job.config_ids
+                        )]
+                    ).astype(np.float64),
+                    disp.last_result.max_overlap(),
+                )
+
+            t0 = time.perf_counter()
+            once()  # cold: worker startup + every compile
+            cold = time.perf_counter() - t0
+            a, b = once(), once()  # warm, best-of-2 (noisy small boxes)
+            best = min(a, b, key=lambda r: r[0])
+            return cold, best
+
+    rows: List[Dict] = []
+    out = {}
+    for name, hosts in (("1x4", [4]), ("2x4", [4, 4])):
+        cold, (elapsed, makespan, losses, overlap) = run_layout(hosts)
+        out[name] = (elapsed, losses)
+        rows.append(
+            {
+                "bench": "multihost",
+                "mode": name,
+                "hosts": len(hosts),
+                "devices_per_host": hosts[0],
+                "steps": steps,
+                "elapsed_s": round(elapsed, 3),
+                "cold_s": round(cold, 3),
+                "makespan_s": round(makespan, 3),
+                "peak_overlap": overlap,
+            }
+        )
+    speed = out["1x4"][0] / out["2x4"][0]
+    bitexact = bool(np.array_equal(out["1x4"][1], out["2x4"][1]))
+    rows.append(
+        {
+            "bench": "multihost",
+            "mode": "speedup",
+            "steps": steps,
+            "speedup_multihost": round(speed, 3),
+            "losses_bitexact": bitexact,
+        }
+    )
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="also dump rows to this JSON file")
+    args = ap.parse_args()
+    rows = run(args.fast)
+    for r in rows:
+        if r["mode"] == "speedup":
+            print(
+                f"multihost: 2x4 hosts x{r['speedup_multihost']:.2f} vs "
+                f"1x4 on the same 8-job workload, losses bit-exact: "
+                f"{r['losses_bitexact']}"
+            )
+        else:
+            print(
+                f"multihost,{r['mode']}: {r['elapsed_s']:.2f}s warm "
+                f"({r['cold_s']:.1f}s cold), peak overlap "
+                f"{r['peak_overlap']}"
+            )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "multihost", "rows": rows}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -93,6 +93,7 @@ def main(argv=None):
         bench_job_throughput,
         bench_kernels,
         bench_makespan,
+        bench_multihost,
         bench_online,
         bench_planner,
         bench_quality,
@@ -105,6 +106,7 @@ def main(argv=None):
         "online": ("§4 dynamic scheduling: online admission + repacking", bench_online.run),
         "cluster": ("Cluster executor: concurrent mesh slices vs sequential", bench_cluster.run),
         "adaptive": ("Profile feedback loop: adaptive re-planning vs mis-calibrated prior", bench_adaptive.run),
+        "multihost": ("Multi-host dispatch tier: 2x4 hosts vs 1x4 on one workload", bench_multihost.run),
         "job_throughput": ("Fig. 5: packed-job throughput", bench_job_throughput.run),
         "job_throughput_a10": ("Fig. 7 / §7.5: A10 + QLoRA", lambda fast: bench_job_throughput.run_a10(fast)),
         "breakdown": ("Fig. 6: speedup breakdown", bench_breakdown.run),
@@ -159,6 +161,11 @@ def main(argv=None):
                 exact = all(r["losses_bitexact"] for r in sp)
                 checks.append(("concurrent slices vs sequential (forced 8-dev host)", f"{best:.2f}x"))
                 checks.append(("concurrent per-adapter losses bit-exact", str(exact)))
+        if name == "multihost" and rows:
+            sp = [r for r in rows if r["mode"] == "speedup"]
+            if sp:
+                checks.append(("multi-host 2x4 vs 1x4 makespan (>=1.1x)", f"{sp[0]['speedup_multihost']:.2f}x"))
+                checks.append(("multi-host per-adapter losses bit-exact vs 1-host", str(all(r["losses_bitexact"] for r in sp))))
         if name == "adaptive" and rows:
             sp = [r for r in rows if r["mode"] == "speedup"]
             if sp:

@@ -1,0 +1,103 @@
+"""Multi-host dispatch demo: one schedule, executed process-per-host.
+
+Two simulated hosts of 2 CPU devices each — every host is a *subprocess*
+that forces its own device count via XLA_FLAGS, so the parent process needs
+no flags at all; just run it on any machine:
+
+  PYTHONPATH=src python examples/multihost_cluster.py
+
+Four LoRA configs are planned host-aware (``ExecutionEngine(host_size=2)``:
+per-job parallelism capped at the host width, every job's device units on
+one host) and the :class:`~repro.cluster.HostDispatcher` ships the planned
+segments — and their checkpoint traffic — to the host workers over the
+message protocol. The printed timeline shows jobs on different *hosts*
+overlapping in wall-clock time, with real per-adapter losses coming back
+over the wire; at the end the same schedule runs again with a worker
+kill+restart to show the fault path recovering mid-run.
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+
+
+def main():
+    import threading
+    import time
+
+    import jax
+
+    from repro.cluster import HostDispatcher
+    from repro.configs.base import LoraConfig, get_config, reduced
+    from repro.core.adapter import pack_meta
+    from repro.models.model import init_model
+    from repro.sched.cost_model import A100_40G, CostModel
+    from repro.sched.engine import ExecutionEngine
+    from repro.sched.planner import Schedule, ScheduledJob
+
+    cfg = reduced(get_config("qwen25-7b"))
+    cm = CostModel(cfg, A100_40G)
+    seq = 16
+    steps = 30
+    grid = [
+        LoraConfig(rank=8, alpha=8.0, learning_rate=1e-3, batch_size=1, seq_len=seq),
+        LoraConfig(rank=8, alpha=16.0, learning_rate=5e-4, batch_size=1, seq_len=seq),
+        LoraConfig(rank=16, alpha=16.0, learning_rate=1e-3, batch_size=1, seq_len=seq),
+        LoraConfig(rank=16, alpha=32.0, learning_rate=2e-4, batch_size=1, seq_len=seq),
+    ]
+    jobs = [ScheduledJob((i,), 1, 0.0, 1.0) for i in range(4)]
+    sched = Schedule(jobs, 1.0, 4)
+    base, _ = init_model(jax.random.PRNGKey(0), cfg, pack_meta(grid))
+    eng = ExecutionEngine(cm, 4, host_size=2)
+
+    print(f"2 hosts x 2 devices, {len(grid)} width-1 jobs, {steps} steps "
+          f"each (host workers start + compile on first use)")
+    with HostDispatcher([2, 2]) as disp:
+        t0 = time.perf_counter()
+        records, makespan = eng.run_local(
+            sched, grid, cfg, base, n_steps=steps, seq=seq, runner=disp
+        )
+        elapsed = time.perf_counter() - t0
+        result = disp.last_result
+
+        print(f"\nwall {elapsed:.1f}s, makespan {makespan:.2f}s, peak "
+              f"overlap {result.max_overlap()}")
+        print("timeline (host = unit // 2):")
+        scale = 40.0 / max(r.real_end for r in records)
+        for rec, (job_id, s, e, units) in zip(records, result.timeline):
+            host = units[0] // 2 if units else -1
+            bar = " " * int(s * scale) + "#" * max(int((e - s) * scale), 1)
+            print(f"  job {job_id} host {host} units={units} "
+                  f"[{s:5.2f}s -> {e:5.2f}s] {bar}")
+        for rec in records:
+            print(f"  job cids={rec.job.config_ids} "
+                  f"losses={np.round(np.asarray(rec.final_losses), 3)}")
+
+        # fault injection: SIGKILL host 0 mid-run; the dispatcher respawns
+        # it and re-dispatches the lost segment — same losses, no lost steps
+        print("\nre-running with a worker kill mid-run...")
+        stop = threading.Event()
+
+        def killer():
+            time.sleep(0.5)
+            if not stop.is_set():
+                disp.kill_host(0)
+
+        th = threading.Thread(target=killer)
+        th.start()
+        records2, _ = eng.run_local(
+            sched, grid, cfg, base, n_steps=steps, seq=seq, runner=disp
+        )
+        stop.set()
+        th.join()
+        same = np.array_equal(
+            np.concatenate([r.final_losses for r in records]),
+            np.concatenate([r.final_losses for r in records2]),
+        )
+        print(f"recovered with {disp.n_restarts} worker restart(s); "
+              f"losses bit-identical to the unkilled run: {same}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,22 @@ onto slices with thread-per-slice dispatch — so concurrent LoRA jobs
 scheduled on different device groups actually overlap in wall-clock time.
 """
 from repro.cluster.executor import NO_BUDGET, PackResult, SliceExecutor
-from repro.cluster.pool import DevicePool, MeshSlice, assign_units
+from repro.cluster.multihost import (
+    DispatchExecutor,
+    HostDispatcher,
+    HostUnit,
+    HostWorker,
+    MemoryPool,
+    RemoteSegmentError,
+    TransportError,
+    WorkerDied,
+)
+from repro.cluster.pool import (
+    DevicePool,
+    MeshSlice,
+    assign_units,
+    pick_host_units,
+)
 from repro.cluster.runner import (
     ClusterResult,
     ClusterRunner,
@@ -23,9 +38,18 @@ __all__ = [
     "DevicePool",
     "MeshSlice",
     "assign_units",
+    "pick_host_units",
     "ClusterResult",
     "ClusterRunner",
     "SegmentTiming",
     "peak_overlap",
     "resume_deps",
+    "DispatchExecutor",
+    "HostDispatcher",
+    "HostUnit",
+    "HostWorker",
+    "MemoryPool",
+    "RemoteSegmentError",
+    "TransportError",
+    "WorkerDied",
 ]

@@ -1,0 +1,770 @@
+"""Multi-host dispatch tier: process-per-host scale-out of the segment protocol.
+
+The single-host :class:`~repro.cluster.runner.ClusterRunner` is thread-per-
+slice inside one process — every plan is capped at one host's devices. This
+module scales the *same* segment protocol out across simulated (or, with a
+different transport, real) hosts:
+
+  * :class:`HostWorker` — one subprocess per simulated host. Each worker
+    self-forces its own CPU device count (``XLA_FLAGS=--xla_force_host_
+    platform_device_count=N``, inherited through the environment at spawn
+    time) and runs the existing :class:`~repro.cluster.executor.SliceExecutor`
+    + :class:`~repro.cluster.pool.DevicePool` over its local devices — the
+    per-host execution stack is exactly the single-host one.
+  * a **message protocol** replaces the runner's in-memory shared state:
+    segments, resumed adapter state, and checkpoint-pool traffic are
+    serialized over a pipe/queue transport (:func:`encode_segment` /
+    :func:`encode_tree` / :func:`encode_record`). Workers never touch the
+    central :class:`~repro.train.checkpoint.CheckpointPool`; a
+    :class:`MemoryPool` captures their checkpoint writes and the dispatcher
+    applies them *atomically on segment success* — which is what makes a
+    killed worker recoverable (no partial state ever lands in the pool, so
+    the segment's residual simply re-enters the existing preempt/resume
+    path on a fresh worker).
+  * :class:`HostDispatcher` — extends :class:`DevicePool` addressing to
+    ``(host, unit)`` pairs (:class:`HostUnit`) and duck-types as a
+    ``ClusterRunner``: ``.run`` executes planned segments process-per-host,
+    and ``.executor``/``.device_pool`` plug straight into
+    ``ExecutionEngine._run_adaptive`` — real device-free and checkpoint-
+    ready events surface back into the engine's online/adaptive loops
+    unchanged, so ``plan_online``, migration, probes, and the
+    ``ProfiledCostModel`` feedback all work across hosts.
+
+Plan host-aware (``ExecutionEngine(cm, g, host_size=...)``) so every
+segment's device units stay within one host; the dispatcher rejects
+host-spanning slices.
+
+This module is import-light on purpose: the spawn'd child imports it before
+any jax backend initializes, and the dispatcher side works without touching
+jax until a segment actually runs.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import pickle
+import threading
+import time
+import traceback
+from dataclasses import dataclass
+from queue import Empty
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Wire protocol
+# ---------------------------------------------------------------------------
+#
+# Every message is ``(kind, payload_dict)`` with plain-python / numpy payloads
+# so the protocol survives pickling across process boundaries bit-exactly.
+#
+#   dispatcher -> worker:  ("init", state) ("run", request) ("stop", {})
+#   worker -> dispatcher:  ("ready", info) ("done", result) ("err", failure)
+#                          ("fatal", failure)   # startup / loop death
+
+
+class TransportError(RuntimeError):
+    """The transport to a host worker failed."""
+
+
+class WorkerDied(TransportError):
+    """The host worker process died (crash / kill) with requests in flight."""
+
+
+class RemoteSegmentError(RuntimeError):
+    """A segment raised inside the worker; carries the remote traceback."""
+
+
+def encode_tree(tree):
+    """Nested-dict tree with every leaf forced to host ``np.ndarray`` —
+    the only array type the wire carries (bit-exact, device-free)."""
+    if isinstance(tree, dict):
+        return {k: encode_tree(v) for k, v in tree.items()}
+    return np.asarray(tree)
+
+
+_SEGMENT_FIELDS = (
+    "job_id", "config_ids", "degree", "start", "end",
+    "start_steps", "run_steps", "done_ids", "preempted", "units",
+)
+
+
+def encode_segment(seg) -> Dict[str, Any]:
+    return {f: getattr(seg, f) for f in _SEGMENT_FIELDS}
+
+
+def decode_segment(d: Dict[str, Any]):
+    from repro.sched.engine import JobSegment
+
+    return JobSegment(**d)
+
+
+def encode_record(rec) -> Dict[str, Any]:
+    return {
+        "config_ids": tuple(rec.job.config_ids),
+        "degree": rec.job.degree,
+        "start": rec.job.start,
+        "end": rec.job.end,
+        "wall_seconds": rec.wall_seconds,
+        "losses": (
+            None if rec.final_losses is None else np.asarray(rec.final_losses)
+        ),
+    }
+
+
+def decode_record(d: Dict[str, Any]):
+    from repro.sched.engine import JobRecord
+    from repro.sched.planner import ScheduledJob
+
+    return JobRecord(
+        ScheduledJob(
+            tuple(d["config_ids"]), d["degree"], d["start"], d["end"]
+        ),
+        d["wall_seconds"],
+        d["losses"],
+    )
+
+
+class MemoryPool:
+    """Worker-side stand-in for the central checkpoint pool.
+
+    Reads come from the states the dispatcher shipped with the segment;
+    writes are *captured*, not applied — the dispatcher replays them onto the
+    real pool only after the segment's ``done`` message arrives. A worker
+    killed mid-segment therefore leaves the central pool exactly as it was,
+    and the re-dispatched segment resumes from unchanged state."""
+
+    def __init__(self, states: Optional[Dict[str, Tuple[dict, dict]]] = None):
+        self.states = dict(states or {})
+        self.writes: List[Tuple[str, str, dict, dict]] = []
+
+    def has_adapter_state(self, adapter_id: str) -> bool:
+        return adapter_id in self.states
+
+    def load_adapter_state(self, adapter_id: str):
+        tree, meta = self.states[adapter_id]
+        return tree, meta
+
+    def save_adapter_state(self, adapter_id: str, state_tree, meta: dict):
+        self.writes.append(("state", adapter_id, encode_tree(state_tree), meta))
+
+    def save_adapter(self, adapter_id: str, adapter_tree, meta: dict):
+        self.writes.append(
+            ("adapter", adapter_id, encode_tree(adapter_tree), meta)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Worker process (one simulated host)
+# ---------------------------------------------------------------------------
+
+
+def _worker_main(host_id: int, n_devices: int, inbox, outbox) -> None:
+    """Entry point of one simulated host. The parent set ``XLA_FLAGS`` /
+    ``JAX_PLATFORMS`` in the environment *around* ``Process.start()`` — the
+    spawn'd child inherits them before any jax backend initializes, so this
+    process sees exactly ``n_devices`` forced CPU devices regardless of how
+    the parent's jax was configured."""
+    try:
+        import jax
+
+        devs = jax.devices()
+        if len(devs) < n_devices:
+            raise RuntimeError(
+                f"host {host_id} expected {n_devices} forced devices but "
+                f"jax initialized {len(devs)} — XLA_FLAGS not inherited?"
+            )
+        from concurrent.futures import ThreadPoolExecutor
+
+        from repro.cluster.executor import SliceExecutor
+        from repro.cluster.pool import DevicePool
+
+        executor = SliceExecutor()
+        dpool = DevicePool(devs[:n_devices])
+        outbox.put(("ready", {"host": host_id, "devices": len(devs)}))
+    except BaseException as e:  # noqa: BLE001 — shipped to the dispatcher
+        outbox.put(
+            ("fatal", {
+                "host": host_id,
+                "error": repr(e),
+                "traceback": traceback.format_exc(),
+            })
+        )
+        return
+
+    state: Dict[str, Any] = {}
+
+    def do_run(payload: Dict[str, Any]) -> None:
+        rid = payload["req"]
+        try:
+            seg = decode_segment(payload["seg"])
+            mempool = (
+                MemoryPool(payload["states"]) if payload["has_pool"] else None
+            )
+            with dpool.lease_units(payload["units"]) as slice_:
+                rec = executor.run_segment(
+                    seg,
+                    state["configs_by_cid"],
+                    state["total_steps"],
+                    state["cfg"],
+                    state["base"],
+                    seq=state["seq"],
+                    pool=mempool,
+                    data_iter_fn=state["data_iter_fn"],
+                    seed=state["seed"],
+                    slice_=slice_,
+                )
+            outbox.put(
+                ("done", {
+                    "req": rid,
+                    "host": host_id,
+                    "record": encode_record(rec),
+                    "writes": mempool.writes if mempool is not None else [],
+                })
+            )
+        except BaseException as e:  # noqa: BLE001 — shipped to the dispatcher
+            outbox.put(
+                ("err", {
+                    "req": rid,
+                    "host": host_id,
+                    "error": repr(e),
+                    "traceback": traceback.format_exc(),
+                })
+            )
+
+    tpe = ThreadPoolExecutor(max_workers=max(n_devices, 1))
+    try:
+        while True:
+            kind, payload = inbox.get()
+            if kind == "stop":
+                break
+            if kind == "init":
+                state = dict(payload)
+            elif kind == "run":
+                tpe.submit(do_run, payload)
+    finally:
+        tpe.shutdown(wait=True)
+
+
+def _forced_xla_flags(n_devices: int) -> str:
+    """Parent's XLA_FLAGS with the forced-host-device count replaced."""
+    kept = [
+        f
+        for f in os.environ.get("XLA_FLAGS", "").split()
+        if not f.startswith("--xla_force_host_platform_device_count")
+    ]
+    kept.append(f"--xla_force_host_platform_device_count={n_devices}")
+    return " ".join(kept)
+
+
+# serializes the env-set -> spawn -> env-restore dance when several hosts
+# (possibly with different device counts) start concurrently
+_SPAWN_LOCK = threading.Lock()
+
+
+class ProcessTransport:
+    """Pipe/queue transport to one :func:`_worker_main` subprocess."""
+
+    def __init__(self, host_id: int, n_devices: int):
+        import multiprocessing as mp
+
+        ctx = mp.get_context("spawn")  # fresh interpreter: no inherited jax
+        self._inbox = ctx.Queue()
+        self._outbox = ctx.Queue()
+        self.proc = ctx.Process(
+            target=_worker_main,
+            args=(host_id, n_devices, self._inbox, self._outbox),
+            daemon=True,  # never outlive the dispatcher process
+            name=f"plora-host-{host_id}",
+        )
+        with _SPAWN_LOCK:
+            saved_xla = os.environ.get("XLA_FLAGS")
+            saved_plat = os.environ.get("JAX_PLATFORMS")
+            os.environ["XLA_FLAGS"] = _forced_xla_flags(n_devices)
+            os.environ.setdefault("JAX_PLATFORMS", "cpu")
+            try:
+                self.proc.start()
+            finally:
+                for key, saved in (
+                    ("XLA_FLAGS", saved_xla), ("JAX_PLATFORMS", saved_plat)
+                ):
+                    if saved is None:
+                        os.environ.pop(key, None)
+                    else:
+                        os.environ[key] = saved
+
+    def send(self, msg) -> None:
+        self._inbox.put(msg)
+
+    def recv(self, timeout: Optional[float] = None):
+        return self._outbox.get(timeout=timeout)  # raises queue.Empty
+
+    def alive(self) -> bool:
+        return self.proc.is_alive()
+
+    def kill(self) -> None:
+        if self.proc.is_alive():
+            self.proc.kill()
+        self.proc.join(timeout=5)
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        self.proc.join(timeout)
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher side
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HostUnit:
+    """One device unit addressed as a ``(host, local unit)`` pair — the
+    virtual 'device' objects backing the dispatcher's :class:`DevicePool`."""
+
+    host: int
+    local: int
+
+
+class _Reply:
+    """Future for one in-flight segment request."""
+
+    __slots__ = ("_evt", "_kind", "_payload", "_err")
+
+    def __init__(self):
+        self._evt = threading.Event()
+        self._kind = self._payload = self._err = None
+
+    def resolve(self, kind: str, payload: Dict[str, Any]) -> None:
+        self._kind, self._payload = kind, payload
+        self._evt.set()
+
+    def fail(self, err: BaseException) -> None:
+        self._err = err
+        self._evt.set()
+
+    def wait(self) -> Dict[str, Any]:
+        self._evt.wait()
+        if self._err is not None:
+            raise self._err
+        if self._kind == "err":
+            raise RemoteSegmentError(
+                f"segment failed on host {self._payload['host']}: "
+                f"{self._payload['error']}\n--- remote traceback ---\n"
+                f"{self._payload['traceback']}"
+            )
+        return self._payload
+
+
+class HostWorker:
+    """Dispatcher-side handle for one host: transport + pump thread + the
+    in-flight request table. A dead worker fails all in-flight requests with
+    :class:`WorkerDied`; the dispatcher then spawns a *new* ``HostWorker``
+    for the host (the handle itself is never resurrected)."""
+
+    def __init__(self, host_id: int, n_devices: int, transport):
+        self.host_id = host_id
+        self.n_devices = n_devices
+        self.transport = transport
+        self.ready = threading.Event()
+        self.fatal: Optional[Dict[str, Any]] = None
+        self.init_version = -1
+        self.dead = False
+        self._lock = threading.Lock()
+        self._pending: Dict[int, _Reply] = {}
+        self._pump = threading.Thread(
+            target=self._pump_loop, name=f"pump-host-{host_id}", daemon=True
+        )
+        self._pump.start()
+
+    # -- request lifecycle --------------------------------------------------
+
+    def request(self, rid: int, msg) -> _Reply:
+        reply = _Reply()
+        with self._lock:
+            if self.dead:
+                raise WorkerDied(f"host {self.host_id} worker is dead")
+            self._pending[rid] = reply
+        try:
+            self.transport.send(msg)
+        except Exception as e:  # queue to a dead process
+            with self._lock:
+                self._pending.pop(rid, None)
+            raise WorkerDied(f"host {self.host_id} send failed: {e!r}") from e
+        return reply
+
+    def in_flight(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def wait_ready(self, timeout: float) -> None:
+        if not self.ready.wait(timeout):
+            raise TransportError(
+                f"host {self.host_id} worker not ready after {timeout:.0f}s"
+            )
+        if self.fatal is not None:
+            # the worker reported a startup exception: deterministic, so a
+            # respawn would just fail the same way — no retry
+            raise TransportError(
+                f"host {self.host_id} worker failed to start: "
+                f"{self.fatal['error']}\n{self.fatal['traceback']}"
+            )
+        if self.dead:
+            # hard-died before 'ready' (SIGKILL / OOM / segfault during
+            # startup): possibly transient, so surface it as WorkerDied —
+            # the segment retry loop respawns, bounded by max_restarts
+            raise WorkerDied(
+                f"host {self.host_id} worker died during startup"
+            )
+
+    # -- pump ---------------------------------------------------------------
+
+    def _fail_all(self) -> None:
+        with self._lock:
+            self.dead = True
+            pending = list(self._pending.values())
+            self._pending.clear()
+        err = WorkerDied(f"host {self.host_id} worker died")
+        for reply in pending:
+            reply.fail(err)
+        self.ready.set()  # unblock wait_ready; fatal/dead is checked there
+
+    def _pump_loop(self) -> None:
+        while True:
+            try:
+                msg = self.transport.recv(timeout=0.2)
+            except Empty:
+                if not self.transport.alive():
+                    self._fail_all()
+                    return
+                continue
+            except Exception:  # truncated pickle from a killed writer, EOF
+                self._fail_all()
+                return
+            kind, payload = msg
+            if kind == "ready":
+                self.ready.set()
+            elif kind == "fatal":
+                self.fatal = payload
+                self._fail_all()
+                return
+            else:  # "done" / "err"
+                with self._lock:
+                    reply = self._pending.pop(payload["req"], None)
+                if reply is not None:
+                    reply.resolve(kind, payload)
+
+
+class DispatchExecutor:
+    """`SliceExecutor`-shaped facade that executes segments *remotely*.
+
+    ``run_segment`` ships the segment (plus any resumed adapter state read
+    from the central pool) to the worker owning the slice's host, blocks on
+    the reply, applies the returned checkpoint writes to the central pool,
+    and returns a ``JobRecord`` — so ``ClusterRunner``'s dispatch loop and
+    the engine's adaptive loop drive multi-host execution without changes.
+    A :class:`WorkerDied` mid-segment restarts the host (bounded by the
+    dispatcher's ``max_restarts``) and re-dispatches: the segment's inputs
+    are still in the pool (writes are success-atomic), so the retry is the
+    existing preempt/resume path and no step is lost or double-counted."""
+
+    def __init__(self, dispatcher: "HostDispatcher"):
+        self.disp = dispatcher
+
+    def pack_template(self, cfg, configs, seed: int = 0):
+        """Pre-warm hook: templates are built inside each worker (their
+        cache lives with the devices), so the dispatcher side is a no-op."""
+        return None
+
+    def run_segment(
+        self,
+        seg,
+        configs_by_cid: Dict,
+        total_steps: Dict[int, int],
+        cfg,
+        base_params,
+        *,
+        seq: int,
+        pool,
+        data_iter_fn: Optional[Callable] = None,
+        seed: int = 0,
+        slice_=None,
+    ):
+        d = self.disp
+        if slice_ is None:
+            raise ValueError(
+                "multi-host dispatch needs an explicit mesh slice "
+                "(unplanned segments have no host)"
+            )
+        hosts = {dev.host for dev in slice_.devices}
+        if len(hosts) != 1:
+            raise RuntimeError(
+                f"segment units {slice_.units} span hosts {sorted(hosts)}; "
+                "plan with ExecutionEngine(..., host_size=...) so every "
+                "job's units stay on one host"
+            )
+        host = hosts.pop()
+        local_units = tuple(sorted(dev.local for dev in slice_.devices))
+        d._prepare(
+            cfg, configs_by_cid, total_steps, base_params, seq, seed,
+            data_iter_fn,
+        )
+        states: Dict[str, Tuple[dict, dict]] = {}
+        for cid, st0 in zip(seg.config_ids, seg.start_steps):
+            if st0 > 0 and pool is not None:
+                aid = f"{cid:04d}"
+                if pool.has_adapter_state(aid):
+                    tree, meta = pool.load_adapter_state(aid)
+                    states[aid] = (encode_tree(tree), dict(meta))
+        base_payload = {
+            "seg": encode_segment(seg),
+            "units": local_units,
+            "states": states,
+            "has_pool": pool is not None,
+        }
+        t_start = time.perf_counter()
+        last_died: Optional[WorkerDied] = None
+        for _attempt in range(d.max_restarts + 1):
+            rid = next(d._rid)
+            try:
+                worker = d._ensure_host(host)
+                reply = worker.request(
+                    rid, ("run", dict(base_payload, req=rid))
+                )
+                out = reply.wait()
+            except WorkerDied as e:
+                last_died = e
+                continue  # respawn + re-dispatch: the preempt/resume path
+            rec = decode_record(out["record"])
+            if pool is not None:
+                for kind, aid, tree, meta in out["writes"]:
+                    if kind == "adapter":
+                        pool.save_adapter(aid, tree, meta)
+                    else:
+                        pool.save_adapter_state(aid, tree, meta)
+            # dispatcher-clock interval (worker clocks aren't comparable);
+            # ClusterRunner/_run_adaptive re-base these against their t0
+            rec.real_start = t_start
+            rec.real_end = time.perf_counter()
+            return rec
+        raise WorkerDied(
+            f"host {host} died {d.max_restarts + 1} times executing job "
+            f"{seg.job_id} (segment of configs {seg.config_ids})"
+        ) from last_died
+
+
+class HostDispatcher:
+    """Process-per-host execution of planned segments.
+
+    Duck-types as a :class:`~repro.cluster.runner.ClusterRunner`: ``run``
+    executes a batch of segments (via an internal ``ClusterRunner`` whose
+    executor is remote), and ``.executor`` / ``.device_pool`` /
+    ``.concurrent`` plug into ``ExecutionEngine._run_adaptive`` directly.
+
+    ``hosts`` is either a per-host device-count list (``[4, 4]`` = two
+    4-device hosts) or an int paired with ``devices_per_host``. Global unit
+    ``u`` maps to ``(host, local)`` via the cumulative offsets; plans must
+    keep each job on one host (``ExecutionEngine(host_size=...)``).
+
+    ``transport_factory(host_id, n_devices)`` defaults to spawning a real
+    subprocess (:class:`ProcessTransport`); tests inject in-memory fakes.
+    Workers are started lazily, restarted on death (``max_restarts`` per
+    segment), and torn down by ``close()`` / the context manager."""
+
+    def __init__(
+        self,
+        hosts: Union[int, Sequence[int]],
+        devices_per_host: int = 1,
+        *,
+        transport_factory: Optional[Callable] = None,
+        max_restarts: int = 2,
+        start_timeout: float = 300.0,
+    ):
+        if isinstance(hosts, int):
+            hosts = [devices_per_host] * hosts
+        self.hosts: Tuple[int, ...] = tuple(int(n) for n in hosts)
+        if not self.hosts or any(n <= 0 for n in self.hosts):
+            raise ValueError(f"bad host layout {self.hosts}")
+        self.max_restarts = max_restarts
+        self.start_timeout = start_timeout
+        self._transport_factory = transport_factory or ProcessTransport
+        self.n_restarts = 0
+        self._rid = itertools.count()
+        self._workers: List[Optional[HostWorker]] = [None] * len(self.hosts)
+        self._host_locks = [threading.Lock() for _ in self.hosts]
+        self._payload: Optional[Dict[str, Any]] = None
+        self._payload_token = None
+        self._payload_refs: Tuple = ()  # pins id()s used in the memo token
+        self._payload_version = 0
+        self._prep_lock = threading.Lock()
+
+        from repro.cluster.pool import DevicePool
+
+        units = [
+            HostUnit(h, i)
+            for h, n in enumerate(self.hosts)
+            for i in range(n)
+        ]
+        self.device_pool = DevicePool(devices=units)
+        self.executor = DispatchExecutor(self)
+        self.concurrent = True
+        self.last_result = None
+
+    # -- topology -----------------------------------------------------------
+
+    @property
+    def total_units(self) -> int:
+        return sum(self.hosts)
+
+    @property
+    def host_size(self) -> Optional[int]:
+        """Uniform per-host width (what ``ExecutionEngine(host_size=...)``
+        wants), or None when hosts are heterogeneous."""
+        return self.hosts[0] if len(set(self.hosts)) == 1 else None
+
+    def in_flight(self, host: int) -> int:
+        w = self._workers[host]
+        return 0 if w is None else w.in_flight()
+
+    # -- worker lifecycle ---------------------------------------------------
+
+    def _prepare(
+        self, cfg, configs_by_cid, total_steps, base_params, seq, seed,
+        data_iter_fn,
+    ) -> None:
+        """Cache the run-level init payload (model config, base params,
+        budgets) once per workload; (re)started workers receive it before
+        any segment. One dispatcher serves one workload at a time.
+
+        The memo token holds configs/budgets *by value* (LoraConfig is
+        hashable) and pins ``base_params``/``data_iter_fn`` alive on
+        ``_payload_refs`` so their id()s cannot be recycled by a later
+        workload — an id-only token could silently reuse stale state."""
+        with self._prep_lock:
+            token = (
+                cfg, id(base_params), id(data_iter_fn), seq, seed,
+                tuple(sorted(configs_by_cid.items())),
+                tuple(sorted(total_steps.items())),
+            )
+            if token == self._payload_token:
+                return
+            if data_iter_fn is not None:
+                try:
+                    pickle.dumps(data_iter_fn)
+                except Exception as e:
+                    raise ValueError(
+                        "data_iter_fn must be picklable (a module-level "
+                        "callable) to cross the host boundary"
+                    ) from e
+            self._payload = {
+                "cfg": cfg,
+                "configs_by_cid": dict(configs_by_cid),
+                "total_steps": {int(k): int(v) for k, v in total_steps.items()},
+                "base": encode_tree(base_params),
+                "seq": int(seq),
+                "seed": int(seed),
+                "data_iter_fn": data_iter_fn,
+            }
+            self._payload_token = token
+            self._payload_refs = (base_params, data_iter_fn)
+            self._payload_version += 1
+
+    def _ensure_host(self, host: int) -> HostWorker:
+        """Live, initialized worker for ``host`` — spawning or respawning
+        (counted in ``n_restarts``) as needed. Safe to call from concurrent
+        segment threads; only one respawn happens per death."""
+        with self._host_locks[host]:
+            w = self._workers[host]
+            if w is not None and not w.dead and w.transport.alive():
+                if self._payload is not None and (
+                    w.init_version != self._payload_version
+                ):
+                    w.transport.send(("init", self._payload))
+                    w.init_version = self._payload_version
+                return w
+            if w is not None:
+                self.n_restarts += 1
+                try:
+                    w.transport.kill()
+                except Exception:
+                    pass
+            w = HostWorker(
+                host, self.hosts[host],
+                self._transport_factory(host, self.hosts[host]),
+            )
+            self._workers[host] = w
+            w.wait_ready(self.start_timeout)
+            if self._payload is not None:
+                w.transport.send(("init", self._payload))
+                w.init_version = self._payload_version
+            return w
+
+    def kill_host(self, host: int) -> None:
+        """Fault injection / hard teardown: SIGKILL the host's worker. Any
+        in-flight segment fails with :class:`WorkerDied` and is re-dispatched
+        onto a fresh worker by :meth:`DispatchExecutor.run_segment`."""
+        w = self._workers[host]
+        if w is not None:
+            w.transport.kill()
+
+    def close(self) -> None:
+        """Graceful stop of every worker (kill as fallback)."""
+        for w in self._workers:
+            if w is None:
+                continue
+            try:
+                if w.transport.alive():
+                    w.transport.send(("stop", {}))
+                    w.transport.join(timeout=10)
+            except Exception:
+                pass
+            try:
+                w.transport.kill()
+            except Exception:
+                pass
+
+    def __enter__(self) -> "HostDispatcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- ClusterRunner interface --------------------------------------------
+
+    def run(
+        self,
+        segments,
+        configs_by_cid,
+        total_steps,
+        cfg,
+        base_params,
+        *,
+        seq: int,
+        pool=None,
+        data_iter_fn=None,
+        seed: int = 0,
+        estimator=None,
+    ):
+        """Execute planned segments across the hosts — same contract as
+        :meth:`ClusterRunner.run` (dispatch order, resume dependencies,
+        device-free events from real completions, timings feedback), with
+        each segment running in its host's worker process."""
+        from repro.cluster.runner import ClusterRunner
+
+        runner = ClusterRunner(
+            self.executor, self.device_pool, concurrent=True
+        )
+        result = runner.run(
+            segments,
+            configs_by_cid,
+            total_steps,
+            cfg,
+            base_params,
+            seq=seq,
+            pool=pool,
+            data_iter_fn=data_iter_fn,
+            seed=seed,
+            estimator=estimator,
+        )
+        self.last_result = result
+        return result

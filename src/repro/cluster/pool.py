@@ -16,6 +16,7 @@ device-free events into wall-clock ones.
 from __future__ import annotations
 
 import threading
+from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -123,6 +124,44 @@ class DevicePool:
             self._free -= set(want)
             return self._make_slice(want)
 
+    # ---------------- leases: acquisition as a context manager ----------------
+    #
+    # A bare ``acquire`` + ``release`` pair leaks units whenever the code
+    # between them dies (an executor crash, a killed worker, an exception in
+    # the dispatch loop) — the unit is then gone for the lifetime of the
+    # pool and later segments planned on it hang forever. The context
+    # managers below make release structurally unskippable, and
+    # ``ClusterRunner.run`` asserts the pool drained back to empty at exit.
+
+    @contextmanager
+    def lease(self, g: int, timeout: Optional[float] = None):
+        """``acquire`` whose release is guaranteed by ``with``-scoping."""
+        s = self.acquire(g, timeout=timeout)
+        try:
+            yield s
+        finally:
+            self.release(s)
+
+    @contextmanager
+    def lease_units(self, units: Sequence[int], timeout: Optional[float] = None):
+        """``acquire_units`` whose release is guaranteed by ``with``-scoping."""
+        s = self.acquire_units(units, timeout=timeout)
+        try:
+            yield s
+        finally:
+            self.release(s)
+
+    @contextmanager
+    def held(self, s: MeshSlice):
+        """Adopt an *already acquired* slice: release it when the block
+        exits, crash or no crash. Used when acquisition must happen in one
+        thread (the dispatch loop, to preserve dispatch order) while the
+        work — and therefore the crash risk — lives in another."""
+        try:
+            yield s
+        finally:
+            self.release(s)
+
     def release(self, s: MeshSlice) -> None:
         with self._lock:
             dup = set(s.units) & self._free
@@ -144,14 +183,44 @@ class DevicePool:
         return tuple(sorted({u % self.total for u in units}))
 
 
+def pick_host_units(
+    free: Sequence[int], degree: int, host_size: Optional[int]
+) -> Optional[Tuple[int, ...]]:
+    """Pick ``degree`` units from ``free`` (sorted unit ids) such that they
+    all live on one host (``unit // host_size``): a packed job's mesh slice
+    can never span hosts. ``host_size=None`` is the single-host case —
+    lowest-numbered free units, exactly the pre-multihost behavior. With
+    hosts, best-fit: the feasible host with the fewest free units (ties to
+    the lowest host id), so wide jobs keep finding whole hosts. Returns None
+    when no single host currently has ``degree`` free units — callers hold
+    the job and retry at the next device-free event."""
+    if len(free) < degree:
+        return None
+    if host_size is None:
+        return tuple(free[:degree])
+    by_host: Dict[int, List[int]] = {}
+    for u in free:
+        by_host.setdefault(u // host_size, []).append(u)
+    fitting = [(len(us), h) for h, us in by_host.items() if len(us) >= degree]
+    if not fitting:
+        return None
+    _, h = min(fitting)
+    return tuple(sorted(by_host[h])[:degree])
+
+
 def assign_units(
-    intervals: Sequence[Tuple[float, float, int]], g: int
+    intervals: Sequence[Tuple[float, float, int]],
+    g: int,
+    host_size: Optional[int] = None,
 ) -> List[Tuple[int, ...]]:
     """Static unit assignment: replay ``(start, end, degree)`` intervals
     through a ``g``-unit allocator (releases before acquires at equal
     timestamps, lowest-numbered free units first) and return each interval's
     unit tuple. Deterministic; raises if the intervals oversubscribe ``g`` —
-    the same feasibility contract as ``OnlineSchedule.validate``."""
+    the same feasibility contract as ``OnlineSchedule.validate``. With
+    ``host_size`` the allocator additionally keeps every interval's units on
+    a single host (see :func:`pick_host_units`) and raises if a planned
+    interval cannot be placed host-disjointly."""
     events = []  # (time, kind, idx)  kind 0=release first, 1=acquire
     for i, (start, end, degree) in enumerate(intervals):
         events.append((start, 1, i))
@@ -159,7 +228,17 @@ def assign_units(
     free = set(range(g))
     held: Dict[int, Tuple[int, ...]] = {}
     out: List[Optional[Tuple[int, ...]]] = [None] * len(intervals)
-    for t, kind, i in sorted(events, key=lambda e: (e[0], e[1])):
+    if host_size is None:
+        order = sorted(events, key=lambda e: (e[0], e[1]))
+    else:
+        # at equal (time, kind), place wider intervals first: power-of-2
+        # degrees then pack hosts without fragmentation (first-fit-
+        # decreasing). Only with hosts — the single-host allocator keeps
+        # its historical interval order, byte-for-byte.
+        order = sorted(
+            events, key=lambda e: (e[0], e[1], -intervals[e[2]][2], e[2])
+        )
+    for t, kind, i in order:
         if kind == 0:
             free |= set(held.pop(i, ()))
         else:
@@ -168,7 +247,13 @@ def assign_units(
                 raise RuntimeError(
                     f"intervals oversubscribe {g} units at t={t:.2f}"
                 )
-            units = tuple(sorted(free)[:degree])
+            units = pick_host_units(sorted(free), degree, host_size)
+            if units is None:
+                raise RuntimeError(
+                    f"no single host of {host_size} units can hold a "
+                    f"degree-{degree} interval at t={t:.2f} "
+                    f"({len(free)}/{g} units free but fragmented)"
+                )
             free -= set(units)
             held[i] = units
             out[i] = units

@@ -164,31 +164,34 @@ class ClusterRunner:
         errors: List[BaseException] = []
 
         def worker(idx: int, seg, slice_: MeshSlice):
+            # the slice was acquired by the dispatch loop (to preserve
+            # dispatch order); `held` guarantees this thread gives it back
+            # no matter how the executor dies
             try:
-                rec = self.executor.run_segment(
-                    seg,
-                    configs_by_cid,
-                    total_steps,
-                    cfg,
-                    base_params,
-                    seq=seq,
-                    pool=pool,
-                    data_iter_fn=data_iter_fn,
-                    seed=seed,
-                    slice_=slice_,
-                )
-                results[idx] = rec
-                if estimator is not None and seg.run_steps > 0:
-                    estimator.observe(
-                        [configs_by_cid[cid] for cid in seg.config_ids],
-                        seg.degree,
-                        seq,
-                        rec.wall_seconds / seg.run_steps,
+                with self.device_pool.held(slice_):
+                    rec = self.executor.run_segment(
+                        seg,
+                        configs_by_cid,
+                        total_steps,
+                        cfg,
+                        base_params,
+                        seq=seq,
+                        pool=pool,
+                        data_iter_fn=data_iter_fn,
+                        seed=seed,
+                        slice_=slice_,
                     )
+                    results[idx] = rec
+                    if estimator is not None and seg.run_steps > 0:
+                        estimator.observe(
+                            [configs_by_cid[cid] for cid in seg.config_ids],
+                            seg.degree,
+                            seq,
+                            rec.wall_seconds / seg.run_steps,
+                        )
             except BaseException as e:  # noqa: BLE001 — re-raised by run()
                 errors.append(e)
             finally:
-                self.device_pool.release(slice_)
                 done_events[idx].set()
 
         # Pre-warm the pack-state template of every distinct pack shape in
@@ -229,15 +232,28 @@ class ClusterRunner:
                     slice_ = self.device_pool.acquire(
                         min(seg.degree, self.device_pool.total)
                     )
-                if tpe is not None:
-                    tpe.submit(worker, idx, seg, slice_)
-                else:
-                    worker(idx, seg, slice_)
+                try:
+                    if tpe is not None:
+                        tpe.submit(worker, idx, seg, slice_)
+                    else:
+                        worker(idx, seg, slice_)
+                except RuntimeError:
+                    # submit refused (executor already shutting down): the
+                    # worker never ran, so give the slice back here
+                    self.device_pool.release(slice_)
+                    done_events[idx].set()
+                    raise
         finally:
             if tpe is not None:
                 tpe.shutdown(wait=True)
         if errors:
             raise errors[0]
+        leaked = self.device_pool.total - self.device_pool.free
+        if leaked:
+            raise RuntimeError(
+                f"device pool leaked {leaked} unit(s) at run exit — a "
+                "segment path released without going through a lease"
+            )
 
         timeline = []
         timings = []

@@ -29,6 +29,73 @@ from repro.models.model import init_model
 from repro.train.checkpoint import CheckpointPool
 
 
+def _estimator(args, cfg):
+    """Profiled estimator shared by the single- and multi-host paths:
+    analytic prior for the selected hardware + (optionally pre-seeded)
+    observation store."""
+    from repro.sched.cost_model import A10_24G, A100_40G, TPU_V5E, CostModel
+    from repro.sched.profile import ObservationStore, ProfiledCostModel
+
+    hw = {"a100-40g": A100_40G, "a10-24g": A10_24G, "tpu-v5e": TPU_V5E}[args.hw]
+    store = (
+        ObservationStore.load(args.profile_in) if args.profile_in
+        else ObservationStore()
+    )
+    return ProfiledCostModel(CostModel(cfg, hw), store), store
+
+
+def _run_multihost(args, cfg, configs):
+    """--hosts N: plan host-aware, execute process-per-host.
+
+    Each simulated host is a subprocess that forces its own
+    ``--devices-per-host`` CPU devices, so this runs on any machine without
+    touching the parent's XLA_FLAGS. The plan caps per-job parallelism at
+    the host width and keeps every job's device units on one host; the
+    dispatch tier then overlaps jobs across hosts for real."""
+    import time
+
+    from repro.cluster import HostDispatcher
+    from repro.sched.engine import ExecutionEngine
+    from repro.sched.planner import plan
+
+    per = args.devices_per_host
+    g = args.hosts * per
+    est, store = _estimator(args, cfg)
+    sched = plan(est, configs, g, args.seq, args.steps, max_degree=per)
+    print(f"multi-host plan: {len(sched.jobs)} job(s) on {args.hosts} hosts "
+          f"x {per} device(s), virtual makespan {sched.makespan:.1f}s")
+    meta = pack_meta(configs)
+    base, _ = init_model(jax.random.PRNGKey(0), cfg, meta)
+    pool = CheckpointPool(args.pool) if args.pool else None
+    eng = ExecutionEngine(est, g, host_size=per)
+    with HostDispatcher(args.hosts, per) as disp:
+        t0 = time.perf_counter()
+        records, makespan = eng.run_local(
+            sched, configs, cfg, base, n_steps=args.steps, seq=args.seq,
+            pool=pool, runner=disp,
+        )
+        elapsed = time.perf_counter() - t0
+    result = disp.last_result
+    print(f"{len(records)} job(s) in {elapsed:.1f}s wall "
+          f"(makespan {makespan:.1f}s, peak overlap "
+          f"{result.max_overlap()}, {disp.n_restarts} worker restart(s))")
+    for rec, seg_timing in zip(records, result.timings):
+        per_adapter = (
+            np.round(np.asarray(rec.final_losses), 3)
+            if rec.final_losses is not None else None
+        )
+        drift = seg_timing.drift
+        drift_s = f"{100 * drift:+.1f}%" if drift == drift else "n/a"
+        print(f"  job cids={rec.job.config_ids} deg={rec.job.degree} "
+              f"{1e3 * seg_timing.measured_iter:8.1f} ms/step "
+              f"(plan drift {drift_s})  losses={per_adapter}")
+    if args.profile_out:
+        store.save(args.profile_out)
+        print(f"saved profile to {args.profile_out}")
+    if pool is not None:
+        print(f"saved {len(pool.list())} adapters to {args.pool}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen25-7b", choices=list_archs())
@@ -41,6 +108,16 @@ def main():
     ap.add_argument("--alphas", default=None, help="default: 2*rank")
     ap.add_argument("--batch-sizes", default=None, help="default: 1 each")
     ap.add_argument("--mesh", default=None, help="e.g. 4x2 (data x model)")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="run through the multi-host dispatch tier: N "
+                         "simulated hosts (one subprocess each, self-forcing "
+                         "--devices-per-host CPU devices via XLA_FLAGS); the "
+                         "configs are planned host-aware and executed "
+                         "process-per-host")
+    ap.add_argument("--devices-per-host", type=int, default=1,
+                    help="device units per simulated host; values > 1 route "
+                         "through the dispatch tier even with --hosts 1 "
+                         "(one subprocess host of that width)")
     ap.add_argument("--fsdp", action="store_true")
     ap.add_argument("--seq-parallel", action="store_true")
     ap.add_argument("--pool", default=None, help="checkpoint pool dir")
@@ -93,6 +170,16 @@ def main():
     print(f"arch={cfg.name} pack N={meta.n} r_bucket={meta.r_bucket} "
           f"steps={args.steps} seq={args.seq}")
 
+    if args.hosts > 1 or args.devices_per_host > 1:
+        if (args.mesh or args.fsdp or args.seq_parallel or args.save_state
+                or args.resume_state):
+            ap.error("--hosts is incompatible with --mesh/--fsdp/"
+                     "--seq-parallel/--save-state/--resume-state (per-job "
+                     "parallelism comes from the planner; use "
+                     "--devices-per-host for host width)")
+        _run_multihost(args, cfg, configs)
+        return
+
     mesh_shape = None
     width = 1
     if args.mesh:
@@ -134,15 +221,7 @@ def main():
                   f"per-adapter={np.round(per, 3)}")
 
     # profile feedback loop: prior + (optionally pre-seeded) observations
-    from repro.sched.cost_model import A10_24G, A100_40G, TPU_V5E, CostModel
-    from repro.sched.profile import ObservationStore, ProfiledCostModel
-
-    hw = {"a100-40g": A100_40G, "a10-24g": A10_24G, "tpu-v5e": TPU_V5E}[args.hw]
-    store = (
-        ObservationStore.load(args.profile_in) if args.profile_in
-        else ObservationStore()
-    )
-    est = ProfiledCostModel(CostModel(cfg, hw), store)
+    est, store = _estimator(args, cfg)
     degree = max(width, 1)
     pred_prior = est.prior.iter_time(configs, degree, args.seq)
     pred_profiled = est.iter_time(configs, degree, args.seq)  # before observing
@@ -180,7 +259,7 @@ def main():
 
         print(f"\nplan-vs-measured  key={est.key(configs, degree, args.seq)}")
         print(f"  {'measured':<22} {1e3 * measured:9.2f} ms/step")
-        _row(f"prior ({hw.name})", pred_prior)
+        _row(f"prior ({est.hw.name})", pred_prior)
         if args.profile_in:
             _row("profiled (loaded)", pred_profiled)
         print(f"  store: {len(store)} key(s), "

@@ -41,6 +41,7 @@ def dtm(
     *,
     residual_steps: Optional[Sequence[int]] = None,
     max_policies: int = 4096,
+    max_degree: Optional[int] = None,
 ) -> DTMResult:
     """Best set of concurrent jobs for `g` free device units.
 
@@ -49,6 +50,11 @@ def dtm(
     than fresh arrivals. A packed job's est_time is then
     ``cm.job_time_residual`` (setup + max residual * iter_time). ``None``
     means every config runs the uniform ``n_steps``.
+
+    ``max_degree`` caps the parallelism degree of any single job — the
+    multi-host engine passes its per-host device count here, because a
+    packed job's mesh slice cannot span hosts even when the *total* free
+    unit count is larger.
     """
     all_ids = frozenset(range(len(configs)))
     steps = (
@@ -99,6 +105,8 @@ def dtm(
             policies.append(list(acc))
             return
         gp = 1 << (g_rem.bit_length() - 1)  # round down to power of 2
+        if max_degree is not None:
+            gp = min(gp, 1 << (max_degree.bit_length() - 1))
         d = gp
         expanded = False
         while d >= 1:

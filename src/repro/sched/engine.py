@@ -46,6 +46,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.cluster.pool import pick_host_units
 from repro.configs.base import LoraConfig, ModelConfig
 from repro.sched.cost_model import CostEstimator
 from repro.sched.planner import Schedule, ScheduledJob, replan
@@ -181,10 +182,12 @@ class OnlineSchedule:
         busy = sum(s.duration * s.degree for s in self.segments)
         return busy / (self.g * self.makespan)
 
-    def validate(self):
+    def validate(self, host_size: Optional[int] = None):
         """Raise if any instant oversubscribes the device pool, or if the
         planned device groups (``units``) are malformed: wrong width, out of
-        range, or shared between time-overlapping segments."""
+        range, shared between time-overlapping segments, or — when
+        ``host_size`` is given — spanning more than one host (a mesh slice
+        lives inside one host's device pool)."""
         _validate_intervals(
             [(s.start, s.end, s.degree) for s in self.segments], self.g
         )
@@ -196,6 +199,13 @@ class OnlineSchedule:
                 raise RuntimeError(
                     f"segment {s.job_id} has units {s.units} for degree "
                     f"{s.degree} on a {self.g}-unit pool"
+                )
+            if host_size is not None and len(
+                {u // host_size for u in s.units}
+            ) > 1:
+                raise RuntimeError(
+                    f"segment {s.job_id} units {s.units} span hosts "
+                    f"(host_size={host_size})"
                 )
         for i, a in enumerate(timed):
             for b in timed[i + 1:]:
@@ -275,9 +285,55 @@ class ExecutionEngine:
     (:meth:`_run_adaptive`): re-planning against live measurements on every
     device-free event and re-assigning device units on drift."""
 
-    def __init__(self, cm: CostEstimator, g: int):
+    def __init__(self, cm: CostEstimator, g: int, *, host_size: Optional[int] = None):
+        """``host_size`` makes unit assignment host-aware: the ``g`` units
+        are grouped into hosts of ``host_size`` (unit ``u`` lives on host
+        ``u // host_size``), a single job's parallelism degree is capped at
+        the host width (a mesh slice cannot span hosts), and every planned
+        unit group stays within one host — which is what lets the
+        :class:`repro.cluster.multihost.HostDispatcher` execute the plan
+        process-per-host. ``None`` (default) is the single-host engine,
+        byte-identical to the pre-multihost behavior."""
+        if host_size is not None:
+            if host_size <= 0 or g % host_size:
+                raise ValueError(
+                    f"host_size {host_size} must evenly divide g={g}"
+                )
+            if host_size & (host_size - 1):
+                raise ValueError(
+                    f"host_size {host_size} must be a power of two (planned "
+                    "degrees are powers of two; other host widths strand "
+                    "units that no job can ever use)"
+                )
         self.cm = cm
+        self.host_size = host_size
         self.monitor = ResourceMonitor(g)
+
+    def _unschedulable(self, n_pending: int) -> RuntimeError:
+        g = self.monitor.total
+        host = (
+            f", or exceeds the {self.host_size}-unit host width?)"
+            if self.host_size is not None
+            else "?)"
+        )
+        return RuntimeError(
+            f"{n_pending} configs can never be scheduled on {g} free "
+            f"device units (min degree exceeds the pool" + host
+        )
+
+    def _take_units(
+        self, free_units: List[int], degree: int
+    ) -> Optional[Tuple[int, ...]]:
+        """Claim ``degree`` units from the sorted free list — all on one
+        host when ``host_size`` is set (see ``pick_host_units``). Returns
+        None (claiming nothing) when no single host can currently hold the
+        job; the caller holds it for the next device-free event."""
+        units = pick_host_units(free_units, degree, self.host_size)
+        if units is None:
+            return None
+        for u in units:
+            free_units.remove(u)
+        return units
 
     # ---------------- static entry points (no-arrivals special case) -------
 
@@ -315,6 +371,7 @@ class ExecutionEngine:
         units = assign_units(
             [(j.start, j.end, j.degree) for j in schedule.jobs],
             self.monitor.total,
+            host_size=self.host_size,
         )
         segments = [
             JobSegment(
@@ -460,7 +517,10 @@ class ExecutionEngine:
             pending.sort(key=lambda e: e.cid)
             cfgs = [e.config for e in pending]
             resid = [e.residual for e in pending]
-            res = replan(cm, cfgs, free, seq, n_steps, residual_steps=resid)
+            res = replan(
+                cm, cfgs, free, seq, n_steps, residual_steps=resid,
+                max_degree=self.host_size,
+            )
             n_repacks += 1
             n_f += res.n_f_calls
             if not res.jobs:
@@ -475,7 +535,8 @@ class ExecutionEngine:
                     if r.est_end <= t_next + _EPS
                 )
                 res_wait = replan(
-                    cm, cfgs, freed, seq, n_steps, residual_steps=resid
+                    cm, cfgs, freed, seq, n_steps, residual_steps=resid,
+                    max_degree=self.host_size,
                 )
                 n_f += res_wait.n_f_calls
                 covered_now = sum(len(j.config_ids) for j in res.jobs)
@@ -489,11 +550,20 @@ class ExecutionEngine:
                 if covered_wait >= covered_now and finish_wait <= finish_now:
                     return  # hold: the next device-free event re-evaluates
             launched = set()
-            for jp in res.jobs:
+            jobs = res.jobs
+            if self.host_size is not None:
+                # place wider jobs first (first-fit-decreasing): power-of-2
+                # degrees then pack hosts without fragmentation
+                jobs = sorted(jobs, key=lambda j: -j.degree)
+            for jp in jobs:
                 entries = [pending[i] for i in jp.config_ids]
                 sel = [e.config for e in entries]
-                units = tuple(free_units[: jp.degree])
-                del free_units[: jp.degree]
+                units = self._take_units(free_units, jp.degree)
+                if units is None:
+                    # no single host currently has jp.degree free units
+                    # (fragmentation across hosts): hold this job; the next
+                    # device-free event re-plans and retries
+                    continue
                 r = _Running(
                     job_id=next(next_job),
                     cids=tuple(e.cid for e in entries),
@@ -567,7 +637,8 @@ class ExecutionEngine:
                 s for _, s in unfinished
             ]
             res_m = replan(
-                cm, merged, avail, seq, n_steps, residual_steps=merged_resid
+                cm, merged, avail, seq, n_steps, residual_steps=merged_resid,
+                max_degree=self.host_size,
             )
             miss_m = len(merged) - sum(len(j.config_ids) for j in res_m.jobs)
             fin_m = (
@@ -589,7 +660,7 @@ class ExecutionEngine:
                 )
                 res_i = replan(
                     cm, pend_cfgs, avail_i, seq, n_steps,
-                    residual_steps=pend_resid,
+                    residual_steps=pend_resid, max_degree=self.host_size,
                 )
                 if res_i.jobs:
                     cand = (
@@ -658,10 +729,7 @@ class ExecutionEngine:
                 do_repack(t)
 
         if pending:
-            raise RuntimeError(
-                f"{len(pending)} configs can never be scheduled on "
-                f"{g} free device units (min degree exceeds the pool?)"
-            )
+            raise self._unschedulable(len(pending))
         makespan = max(
             (s.end for s in segments),
             default=0.0,
@@ -676,7 +744,7 @@ class ExecutionEngine:
             n_migrations=n_migrations,
             n_f_calls=n_f,
         )
-        sched.validate()
+        sched.validate(host_size=self.host_size)
         return sched
 
     # ``simulate`` for the online mode is just the event loop itself.
@@ -879,22 +947,21 @@ class ExecutionEngine:
             def work():
                 rec = err = None
                 try:
-                    rec = executor.run_segment(
-                        seg,
-                        configs_by_cid,
-                        total_steps,
-                        cfg,
-                        base_params,
-                        seq=seq,
-                        pool=pool,
-                        data_iter_fn=data_iter_fn,
-                        seed=seed,
-                        slice_=slice_,
-                    )
+                    with dpool.held(slice_):
+                        rec = executor.run_segment(
+                            seg,
+                            configs_by_cid,
+                            total_steps,
+                            cfg,
+                            base_params,
+                            seq=seq,
+                            pool=pool,
+                            data_iter_fn=data_iter_fn,
+                            seed=seed,
+                            slice_=slice_,
+                        )
                 except BaseException as e:  # noqa: BLE001 — re-raised below
                     err = e
-                finally:
-                    dpool.release(slice_)
                 events.put((seg.job_id, rec, err))
 
             if tpe is not None:
@@ -912,6 +979,7 @@ class ExecutionEngine:
                 seq,
                 n_steps,
                 residual_steps=[e.residual for e in pending],
+                max_degree=self.host_size,
             )
             n_repacks += 1
             n_f += res.n_f_calls
@@ -920,14 +988,18 @@ class ExecutionEngine:
             picked = [
                 (jp, [pending[i] for i in jp.config_ids]) for jp in res.jobs
             ]
+            if self.host_size is not None:
+                # wider jobs first: FFD keeps power-of-2 degrees host-packable
+                picked.sort(key=lambda pe: -pe[0].degree)
             launched = set()
             for jp, entries in picked:
-                units = tuple(free_units[: jp.degree])
-                del free_units[: jp.degree]
+                units = self._take_units(free_units, jp.degree)
+                if units is None:
+                    continue  # fragmented across hosts: retry on next event
                 submit(entries, jp.degree, units)
                 launched |= {e.cid for e in entries}
             pending[:] = [e for e in pending if e.cid not in launched]
-            return True
+            return bool(launched)
 
         def on_completion(jid: int, rec):
             nonlocal n_reassign
@@ -1017,11 +1089,7 @@ class ExecutionEngine:
                         raise err
                     on_completion(jid, rec)
                 elif pending and not launched:
-                    raise RuntimeError(
-                        f"{len(pending)} configs can never be scheduled on "
-                        f"{g} free device units (min degree exceeds the "
-                        f"pool?)"
-                    )
+                    raise self._unschedulable(len(pending))
                 elif not pending and next_arr < len(order):
                     _time.sleep(
                         max(trace[order[next_arr]].time - now(), 0.0)

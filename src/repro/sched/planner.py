@@ -77,13 +77,16 @@ def replan(
     *,
     residual_steps: Optional[Sequence[int]] = None,
     max_policies: int = 4096,
+    max_degree: Optional[int] = None,
 ) -> DTMResult:
     """Incremental replanning API (online engine hook): one DTM invocation
     over the *currently pending* configs and the *currently free* device
     units. The event-driven engine calls this on every admission and
     device-free event instead of draining a frozen queue; ``residual_steps``
     carries the remaining iteration counts of adapters preempted out of
-    running jobs (paper §4 dynamic task migration)."""
+    running jobs (paper §4 dynamic task migration). ``max_degree`` caps a
+    single job's parallelism (multi-host engines pass the per-host device
+    count: a mesh slice cannot span hosts)."""
     return dtm(
         cm,
         configs,
@@ -92,6 +95,7 @@ def replan(
         n_steps,
         residual_steps=residual_steps,
         max_policies=max_policies,
+        max_degree=max_degree,
     )
 
 
@@ -101,6 +105,8 @@ def plan(
     g: int,
     seq: int,
     n_steps: int,
+    *,
+    max_degree: Optional[int] = None,
 ) -> Schedule:
     """Algorithm 2: the offline special case of online replanning — every
     config is known at t=0, so the loop below is exactly `replan` on each
@@ -115,7 +121,8 @@ def plan(
         launched = False
         if remaining and free > 0:
             res: DTMResult = replan(
-                cm, [configs[i] for i in sorted(remaining)], free, seq, n_steps
+                cm, [configs[i] for i in sorted(remaining)], free, seq,
+                n_steps, max_degree=max_degree,
             )
             n_calls += res.n_f_calls
             idx_map = sorted(remaining)

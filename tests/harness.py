@@ -1,0 +1,306 @@
+"""Shared fault-injection test harness for the scheduler/cluster/multihost
+stack (ISSUE 4 satellite).
+
+Conventions (also documented in ROADMAP.md):
+
+  * ``ScriptedExecutor`` — a ``SliceExecutor.run_segment`` stand-in that
+    returns *fabricated* wall times (``slow`` x the analytic prior, or an
+    explicit ``durations`` callable). No jax, no checkpoints: pure
+    scheduling. Inject faults with ``crash_on(call_idx, seg) -> bool``
+    (raises :class:`InjectedCrash`) and latency with ``delay`` seconds
+    (real, or instant via a :class:`FakeClock`).
+  * ``FakeRunner`` — wraps a ScriptedExecutor + an N-unit token
+    ``DevicePool`` so engine code paths (``_run_adaptive``,
+    ``ClusterRunner``) run deterministically inline.
+  * ``NoPool`` — placeholder checkpoint pool for fakes that never touch it.
+  * ``FakeClock`` — manual virtual time; pass as ``clock=`` so injected
+    delays advance it instead of sleeping.
+  * ``FakeHostTransport`` — an in-memory stand-in for the multihost
+    :class:`~repro.cluster.multihost.ProcessTransport`: a scripted worker
+    thread that speaks the real wire protocol (every message round-trips
+    through ``pickle``), fabricates ``done`` records, honors the
+    checkpoint-write contract for preempted segments, and supports
+    ``kill()`` plus scripted mid-segment death (``die_on``) — so
+    dispatcher-level fault paths are testable in milliseconds, without
+    subprocesses or jax.
+
+Keep fakes here, not in individual test modules: every new scheduler or
+dispatch feature gets its fault cases from one toolbox.
+"""
+from __future__ import annotations
+
+import pickle
+import queue
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.cluster.pool import DevicePool
+from repro.sched.engine import JobRecord
+from repro.sched.planner import ScheduledJob
+
+
+class InjectedCrash(RuntimeError):
+    """Raised by ScriptedExecutor when a scripted crash triggers."""
+
+
+class FakeClock:
+    """Manually advanced virtual time (thread-safe)."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = start
+        self._lock = threading.Lock()
+
+    def now(self) -> float:
+        with self._lock:
+            return self._t
+
+    def advance(self, dt: float) -> None:
+        with self._lock:
+            self._t += dt
+
+    def sleep(self, dt: float) -> None:
+        self.advance(dt)
+
+
+class NoPool:
+    """Placeholder checkpoint pool (fakes never touch it)."""
+
+
+class ScriptedExecutor:
+    """``run_segment`` stand-in with scripted durations + fault injection.
+
+    Wall time per step is ``slow * prior.iter_time(sel, degree, seq)``
+    unless ``durations(seg, sel, seq)`` is given. Every call is recorded on
+    ``.calls`` as ``(config_ids, units, run_steps)``.
+    """
+
+    def __init__(
+        self,
+        prior,
+        slow: float = 1.0,
+        *,
+        durations: Optional[Callable] = None,
+        crash_on: Optional[Callable] = None,
+        delay: float = 0.0,
+        clock: Optional[FakeClock] = None,
+    ):
+        self.prior = prior
+        self.slow = slow
+        self.durations = durations
+        self.crash_on = crash_on
+        self.delay = delay
+        self.clock = clock
+        self.calls: List[Tuple[Tuple[int, ...], Tuple[int, ...], int]] = []
+
+    def pack_template(self, cfg, configs, seed: int = 0):
+        return None  # ClusterRunner pre-warm hook: nothing to warm
+
+    def run_segment(self, seg, configs_by_cid, total_steps, cfg, base, *,
+                    seq, pool, data_iter_fn, seed, slice_):
+        idx = len(self.calls)
+        sel = [configs_by_cid[c] for c in seg.config_ids]
+        self.calls.append((seg.config_ids, seg.units, seg.run_steps))
+        if self.crash_on is not None and self.crash_on(idx, seg):
+            raise InjectedCrash(f"injected crash at call {idx}")
+        if self.delay:
+            (self.clock.sleep if self.clock else time.sleep)(self.delay)
+        if self.durations is not None:
+            per_step = self.durations(seg, sel, seq)
+        else:
+            per_step = self.slow * self.prior.iter_time(sel, seg.degree, seq)
+        return JobRecord(
+            ScheduledJob(seg.config_ids, seg.degree, seg.start, seg.end),
+            per_step * seg.run_steps,
+        )
+
+
+def fake_pool(n: int) -> DevicePool:
+    """N-unit DevicePool over plain tokens (accounting needs no jax devs)."""
+    return DevicePool(devices=[f"fake{i}" for i in range(n)])
+
+
+class FakeRunner:
+    """ClusterRunner-shaped wrapper: ScriptedExecutor + token pool, inline
+    (non-concurrent) execution — fully deterministic engine tests."""
+
+    def __init__(self, executor, n_units: int):
+        self.executor = executor
+        self.device_pool = fake_pool(n_units)
+        self.concurrent = False
+
+
+# ---------------------------------------------------------------------------
+# Multihost: in-memory transport with scripted worker + death injection
+# ---------------------------------------------------------------------------
+
+
+class FakeHostTransport:
+    """In-memory ``ProcessTransport`` stand-in speaking the real protocol.
+
+    A worker thread answers ``init``/``run``/``stop``; every message is
+    forced through ``pickle`` both ways, so anything that would not survive
+    the real process boundary fails here too. Fabricated results honor the
+    executor's checkpoint contract: ``done_ids`` produce ``adapter`` writes,
+    unfinished resumable adapters produce ``state`` writes with exact
+    ``steps_done`` accounting, and resumed cids *must* have had their state
+    shipped in ``states`` (asserted — recorded on ``.resumed``).
+
+    Death injection: ``die_on(run_idx, payload) -> bool`` makes the worker
+    drop the request and go silent (exactly what SIGKILL looks like from the
+    dispatcher); ``kill()`` does the same from the outside.
+    """
+
+    def __init__(
+        self,
+        host_id: int,
+        n_devices: int,
+        *,
+        die_on: Optional[Callable] = None,
+        iter_scale: float = 1e-3,
+        on_run: Optional[Callable] = None,
+    ):
+        self.host_id = host_id
+        self.n_devices = n_devices
+        self.die_on = die_on
+        self.iter_scale = iter_scale
+        self.on_run = on_run
+        self.runs: List[dict] = []
+        self.resumed: List[Tuple[int, str]] = []
+        self.error: Optional[BaseException] = None
+        self._in: "queue.Queue" = queue.Queue()
+        self._out: "queue.Queue" = queue.Queue()
+        self._alive = True
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    # -- transport interface -------------------------------------------------
+
+    def send(self, msg) -> None:
+        self._in.put(pickle.dumps(msg))
+
+    def recv(self, timeout: Optional[float] = None):
+        return pickle.loads(self._out.get(timeout=timeout))
+
+    def alive(self) -> bool:
+        return self._alive
+
+    def kill(self) -> None:
+        self._alive = False
+        self._in.put(None)  # wake the loop so it exits
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        self._thread.join(timeout)
+
+    # -- scripted worker -----------------------------------------------------
+
+    def _reply(self, msg) -> None:
+        self._out.put(pickle.dumps(msg))
+
+    def _loop(self) -> None:
+        # any exit — scripted death, stop, or an unexpected exception (e.g.
+        # a contract assert below) — must leave alive()==False, or the
+        # dispatcher pump would wait forever instead of failing crisply
+        try:
+            self._run_loop()
+        except BaseException as e:  # noqa: BLE001 — surfaced via .error
+            self.error = e
+            raise
+        finally:
+            self._alive = False
+
+    def _run_loop(self) -> None:
+        self._reply(("ready", {"host": self.host_id,
+                               "devices": self.n_devices}))
+        state: Dict = {}
+        while True:
+            raw = self._in.get()
+            if raw is None or not self._alive:
+                return
+            kind, payload = pickle.loads(raw)
+            if kind == "stop":
+                self._alive = False
+                return
+            if kind == "init":
+                state = payload
+                continue
+            assert kind == "run", kind
+            run_idx = len(self.runs)
+            self.runs.append(payload)
+            if self.die_on is not None and self.die_on(run_idx, payload):
+                self._alive = False  # died mid-segment: no reply, ever
+                return
+            if self.on_run is not None:
+                self.on_run(run_idx, payload)
+            seg = payload["seg"]
+            cids = tuple(seg["config_ids"])
+            total = state["total_steps"]
+            for cid, st0 in zip(cids, seg["start_steps"]):
+                if st0 > 0:
+                    aid = f"{cid:04d}"
+                    assert aid in payload["states"], (
+                        f"resume of cid {cid} without shipped state"
+                    )
+                    tree, meta = payload["states"][aid]
+                    assert int(meta["steps_done"]) == st0, (meta, st0)
+                    self.resumed.append((run_idx, aid))
+            writes = []
+            if payload["has_pool"]:
+                done = set(seg["done_ids"])
+                for slot, (cid, st0) in enumerate(
+                    zip(cids, seg["start_steps"])
+                ):
+                    if cid in done:
+                        writes.append(
+                            ("adapter", f"adapter_{cid:04d}",
+                             {"w": np.float32(cid)},
+                             {"final_loss": 1.0,
+                              "total_steps": int(total[cid])})
+                        )
+                    else:
+                        writes.append(
+                            ("state", f"{cid:04d}",
+                             {"w": np.float32(cid),
+                              "m": np.float32(0), "v": np.float32(0)},
+                             {"steps_done": int(st0 + seg["run_steps"]),
+                              "total_steps": int(total[cid])})
+                        )
+            wall = self.iter_scale * seg["run_steps"]
+            self._reply(
+                ("done", {
+                    "req": payload["req"],
+                    "host": self.host_id,
+                    "record": {
+                        "config_ids": cids,
+                        "degree": seg["degree"],
+                        "start": seg["start"],
+                        "end": seg["end"],
+                        "wall_seconds": wall,
+                        "losses": np.full(len(cids), 1.0, np.float32),
+                    },
+                    "writes": writes,
+                })
+            )
+
+
+class DictPool:
+    """Minimal in-memory CheckpointPool double for dispatcher-level tests:
+    implements exactly the four methods the segment protocol uses."""
+
+    def __init__(self):
+        self.adapters: Dict[str, Tuple[dict, dict]] = {}
+        self.states: Dict[str, Tuple[dict, dict]] = {}
+
+    def has_adapter_state(self, aid: str) -> bool:
+        return aid in self.states
+
+    def load_adapter_state(self, aid: str):
+        return self.states[aid]
+
+    def save_adapter_state(self, aid: str, tree, meta: dict):
+        self.states[aid] = (tree, dict(meta))
+
+    def save_adapter(self, aid: str, tree, meta: dict):
+        self.adapters[aid] = (tree, dict(meta))

@@ -9,6 +9,7 @@ the concurrent path is exercised on every PR.
 import jax
 import numpy as np
 import pytest
+from harness import InjectedCrash, ScriptedExecutor, fake_pool
 
 from repro.cluster import (
     ClusterRunner,
@@ -16,6 +17,7 @@ from repro.cluster import (
     SliceExecutor,
     assign_units,
     peak_overlap,
+    pick_host_units,
 )
 from repro.configs.base import LoraConfig, default_search_space, get_config, reduced
 from repro.core.adapter import pack_meta
@@ -34,7 +36,7 @@ MULTIDEV = jax.device_count() >= 4
 
 
 def test_pool_acquire_release_accounting():
-    pool = DevicePool(devices=list("abcdefgh"))  # accounting needs no jax devs
+    pool = fake_pool(8)  # accounting needs no jax devs
     assert pool.total == 8 and pool.free == 8
     s1 = pool.acquire(3)
     assert s1.units == (0, 1, 2) and s1.width == 3
@@ -52,7 +54,7 @@ def test_pool_acquire_release_accounting():
 
 
 def test_pool_exhaustion_and_errors():
-    pool = DevicePool(devices=list("abcd"))
+    pool = fake_pool(4)
     with pytest.raises(ValueError, match="only 4"):
         pool.acquire(5)
     s = pool.acquire(4)
@@ -64,18 +66,78 @@ def test_pool_exhaustion_and_errors():
 
 
 def test_pool_acquire_specific_units():
-    pool = DevicePool(devices=list("abcd"))
+    pool = fake_pool(4)
     s = pool.acquire_units((1, 3))
-    assert s.units == (1, 3) and s.devices == ("b", "d")
+    assert s.units == (1, 3) and s.devices == ("fake1", "fake3")
     with pytest.raises(TimeoutError, match=r"\[1\]"):
         pool.acquire_units((0, 1), timeout=0.01)
     pool.release(s)
     assert pool.free == 4
 
 
+def test_pool_lease_releases_on_crash():
+    """Acquisition as a context manager (ISSUE 4 satellite): the unit comes
+    back even when the body dies — no release-after-crash leak."""
+    pool = fake_pool(4)
+    with pytest.raises(InjectedCrash):
+        with pool.lease(2):
+            assert pool.free == 2
+            raise InjectedCrash("boom")
+    assert pool.free == 4
+    with pytest.raises(InjectedCrash):
+        with pool.lease_units((0, 3)):
+            raise InjectedCrash("boom")
+    assert pool.free == 4
+    s = pool.acquire(1)  # adopt-an-acquired-slice variant
+    with pytest.raises(InjectedCrash):
+        with pool.held(s):
+            raise InjectedCrash("boom")
+    assert pool.free == 4
+
+
 def test_pool_map_units_wraps_degenerate():
-    pool = DevicePool(devices=["only"])
+    pool = fake_pool(1)
     assert pool.map_units((0, 3, 5)) == (0,)  # everything folds onto dev 0
+
+
+def test_runner_crash_releases_units_and_raises():
+    """Regression (ISSUE 4): a segment whose executor dies mid-run must not
+    leak its device units — the run raises the crash AND the pool drains
+    back to fully free (ClusterRunner asserts this itself on the success
+    path; here we check the crash path)."""
+    from repro.sched.engine import JobSegment
+
+    prior = CostModel(get_config("qwen25-7b"), A100_40G)
+    cfgs = {
+        0: LoraConfig(rank=8, alpha=8.0, learning_rate=1e-3, batch_size=1, seq_len=16),
+        1: LoraConfig(rank=8, alpha=16.0, learning_rate=1e-3, batch_size=1, seq_len=16),
+    }
+    segs = [
+        JobSegment(
+            job_id=i, config_ids=(i,), degree=1, start=float(i), end=i + 1.0,
+            start_steps=(0,), run_steps=2, done_ids=(i,), units=(i,),
+        )
+        for i in range(2)
+    ]
+    for concurrent in (False, True):
+        pool = fake_pool(4)
+        ex = ScriptedExecutor(prior, crash_on=lambda idx, seg: idx == 0)
+        runner = ClusterRunner(ex, pool, concurrent=concurrent)
+        with pytest.raises(InjectedCrash):
+            runner.run(segs, cfgs, {0: 2, 1: 2}, None, None, seq=16)
+        assert pool.free == pool.total, (concurrent, pool.free)
+
+
+def test_pick_host_units_host_disjoint_and_best_fit():
+    free = [0, 1, 4, 5, 6, 7]
+    # host_size None: plain lowest-first (single-host behavior)
+    assert pick_host_units(free, 3, None) == (0, 1, 4)
+    # degree 2 fits host 0 (2 free) better than host 1 (4 free): best-fit
+    assert pick_host_units(free, 2, 4) == (0, 1)
+    assert pick_host_units(free, 4, 4) == (4, 5, 6, 7)
+    # no single host has 3 free units on host_size=2 pools
+    assert pick_host_units([0, 3, 4, 7], 2, 2) is None
+    assert pick_host_units([0, 1], 4, 4) is None
 
 
 # ---------------------------------------------------------------------------
@@ -93,6 +155,24 @@ def test_assign_units_disjoint_and_reusing():
     assert units[3] == (0, 1, 2, 3)
     with pytest.raises(RuntimeError, match="oversubscribe"):
         assign_units([(0.0, 1.0, 3), (0.0, 1.0, 2)], 4)
+
+
+def test_assign_units_host_aware():
+    units = assign_units(
+        [(0.0, 1.0, 2), (0.0, 1.0, 1), (0.0, 1.0, 1)], 4, host_size=2
+    )
+    # the degree-2 job gets a whole host; the singles share the other
+    assert units[0] in ((0, 1), (2, 3))
+    for u in units:
+        assert len({x // 2 for x in u}) == 1  # host-disjoint
+    assert sorted(x for u in units for x in u) == [0, 1, 2, 3]
+    # a degree-2 interval that only fits by spanning hosts must raise
+    with pytest.raises(RuntimeError, match="host"):
+        assign_units(
+            [(0.0, 2.0, 1), (0.0, 1.0, 1), (1.0, 2.0, 2), (0.0, 2.0, 1)],
+            4,
+            host_size=2,
+        )
 
 
 def test_plan_online_assigns_disjoint_units():

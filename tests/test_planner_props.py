@@ -1,0 +1,173 @@
+"""Scheduler invariants as properties (ISSUE 4 satellite).
+
+Hypothesis-driven where available (guarded via tests/_hyp.py — minimal
+installs degrade these to skips, never collection errors), with deterministic
+example-based twins underneath so the invariant checkers themselves are
+always exercised:
+
+  * planned units are host-disjoint (a mesh slice never spans hosts);
+  * residual steps are conserved across replan / preempt / split — every
+    adapter executes exactly its step budget, no more, no fewer;
+  * ``OnlineSchedule.validate`` rejects overlapping unit assignments.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.configs.base import LoraConfig, get_config
+from repro.sched.cost_model import A100_40G, CostModel
+from repro.sched.engine import ExecutionEngine, JobSegment, poisson_trace
+
+G = 8
+
+
+def _space(ranks, bss):
+    return [
+        LoraConfig(
+            rank=r, alpha=2.0 * r, learning_rate=1e-4, batch_size=b,
+            seq_len=1024,
+        )
+        for r, b in zip(ranks, bss)
+    ]
+
+
+def _plan(ranks, bss, seed, host_size, migration_budget=2):
+    cm = CostModel(get_config("command-r-35b"), A100_40G)
+    eng = ExecutionEngine(cm, G, host_size=host_size)
+    configs = _space(ranks, bss)
+    steps = np.random.RandomState(seed).choice([200, 500, 1000], len(configs))
+    trace = poisson_trace(configs, 600.0, seed=seed, steps=steps)
+    return eng.plan_online(
+        trace, 1024, 1000, migration_budget=migration_budget
+    )
+
+
+def check_invariants(sched, host_size):
+    """The three properties every plan must satisfy."""
+    sched.validate(host_size=host_size)  # oversubscription + unit overlap
+    for s in sched.segments:
+        assert len(s.units) == s.degree
+        if host_size is not None:
+            assert len({u // host_size for u in s.units}) == 1, (
+                f"segment {s.job_id} spans hosts: {s.units}"
+            )
+    # residual conservation: executed steps per config == its exact budget,
+    # across however many replan/preempt/split segments it was cut into
+    executed = {cid: 0 for cid in sched.total_steps}
+    for s in sched.segments:
+        for i, cid in enumerate(s.config_ids):
+            executed[cid] += min(
+                sched.total_steps[cid] - s.start_steps[i], s.run_steps
+            )
+    assert executed == sched.total_steps, executed
+    # split segments chain exactly: a resume starts where a preempt stopped
+    progress = {cid: 0 for cid in sched.total_steps}
+    for s in sorted(sched.segments, key=lambda s: (s.start, s.job_id)):
+        for i, cid in enumerate(s.config_ids):
+            assert s.start_steps[i] == progress[cid], (cid, s)
+            progress[cid] += min(
+                sched.total_steps[cid] - s.start_steps[i], s.run_steps
+            )
+
+
+# ---------------------------------------------------------------------------
+# Deterministic twins (always run, hypothesis or not)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("host_size", [None, 2, 4])
+def test_invariants_hold_example(host_size):
+    sched = _plan(
+        ranks=[8, 16, 32, 8, 64, 16], bss=[1, 2, 1, 4, 1, 2], seed=3,
+        host_size=host_size,
+    )
+    assert sched.segments
+    check_invariants(sched, host_size)
+
+
+def test_validate_rejects_overlapping_units_example():
+    sched = _plan(ranks=[8, 16, 32, 8], bss=[1, 1, 1, 1], seed=1,
+                  host_size=None, migration_budget=0)
+    overlapping = [
+        (i, j)
+        for i, a in enumerate(sched.segments)
+        for j, b in enumerate(sched.segments)
+        if i < j and a.start < b.end - 1e-9 and b.start < a.end - 1e-9
+    ]
+    if not overlapping:
+        pytest.skip("plan produced no time-overlapping segments")
+    i, j = overlapping[0]
+    sched.segments[j] = dataclasses.replace(
+        sched.segments[j],
+        degree=sched.segments[i].degree,
+        units=sched.segments[i].units,
+    )
+    with pytest.raises(RuntimeError, match="share device units|oversubscribes"):
+        sched.validate()
+
+
+def test_validate_rejects_host_spanning_units_example():
+    seg = JobSegment(
+        job_id=0, config_ids=(0,), degree=2, start=0.0, end=1.0,
+        start_steps=(0,), run_steps=5, done_ids=(0,), units=(1, 2),
+    )
+    from repro.sched.engine import OnlineSchedule
+
+    sched = OnlineSchedule(
+        segments=[seg], makespan=1.0, g=4, completed={0: 1.0},
+        total_steps={0: 5},
+    )
+    sched.validate()  # fine without host structure
+    with pytest.raises(RuntimeError, match="span hosts"):
+        sched.validate(host_size=2)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis properties (skipped gracefully on minimal installs)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    ranks=st.lists(st.sampled_from([8, 16, 32, 64]), min_size=1, max_size=7),
+    seed=st.integers(min_value=0, max_value=2**16),
+    host_size=st.sampled_from([None, 2, 4, 8]),
+    migration_budget=st.integers(min_value=0, max_value=3),
+)
+def test_planned_schedules_satisfy_invariants(
+    ranks, seed, host_size, migration_budget
+):
+    bss = [1 + (i % 2) for i in range(len(ranks))]
+    sched = _plan(ranks, bss, seed, host_size, migration_budget)
+    assert sched.segments
+    check_invariants(sched, host_size)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    ranks=st.lists(st.sampled_from([8, 16, 32]), min_size=2, max_size=6),
+    seed=st.integers(min_value=0, max_value=2**16),
+    victim=st.integers(min_value=0, max_value=10**6),
+)
+def test_validate_rejects_corrupted_unit_assignments(ranks, seed, victim):
+    """Any corruption that makes two time-overlapping segments share a unit
+    (or puts a unit out of range) must be caught by validate()."""
+    bss = [1] * len(ranks)
+    sched = _plan(ranks, bss, seed, host_size=None, migration_budget=1)
+    if not sched.segments:
+        return
+    s = sched.segments[victim % len(sched.segments)]
+    sched.segments[victim % len(sched.segments)] = dataclasses.replace(
+        s, units=(G + 1,) * s.degree  # out-of-range units
+    )
+    with pytest.raises(RuntimeError):
+        sched.validate()
+
+
+if HAVE_HYPOTHESIS:
+    # the property suite only counts when it can actually draw examples;
+    # keep a breadcrumb in -v output either way
+    def test_hypothesis_available():
+        assert HAVE_HYPOTHESIS

@@ -1,14 +1,14 @@
 """Profile-guided cost estimation: EWMA math, JSON round-trip, fallback
 ladder, drift thresholds, step-offset data streams, and the engine-level
-adaptive loop (probe / continue-in-place / drift re-assignment) against a
-fake executor with controlled slowdowns."""
+adaptive loop (probe / continue-in-place / drift re-assignment) against the
+shared scripted executor (tests/harness.py) with controlled slowdowns."""
 import numpy as np
 import pytest
+from harness import FakeRunner, NoPool, ScriptedExecutor
 
 from repro.configs.base import LoraConfig, get_config, reduced
 from repro.sched.cost_model import A100_40G, CostModel
-from repro.sched.engine import Arrival, ExecutionEngine, JobRecord
-from repro.sched.planner import ScheduledJob
+from repro.sched.engine import Arrival, ExecutionEngine
 from repro.sched.profile import (
     ObservationStore,
     ProfiledCostModel,
@@ -166,47 +166,15 @@ def test_packed_batch_iterator_start_steps_offsets():
 
 
 # ---------------------------------------------------------------------------
-# Engine-level adaptive loop with a fake executor
+# Engine-level adaptive loop with the shared scripted executor
+# (ScriptedExecutor / FakeRunner / NoPool live in tests/harness.py now)
 # ---------------------------------------------------------------------------
-
-
-class _FakeExecutor:
-    """run_segment stand-in returning fabricated wall times: ``slow`` x the
-    pure prior's prediction. No jax, no checkpoints — pure scheduling."""
-
-    def __init__(self, prior, slow=1.0):
-        self.prior = prior
-        self.slow = slow
-        self.calls = []
-
-    def run_segment(self, seg, configs_by_cid, total_steps, cfg, base, *,
-                    seq, pool, data_iter_fn, seed, slice_):
-        sel = [configs_by_cid[c] for c in seg.config_ids]
-        wall = self.slow * self.prior.iter_time(sel, seg.degree, seq)
-        self.calls.append((seg.config_ids, seg.units, seg.run_steps))
-        return JobRecord(
-            ScheduledJob(seg.config_ids, seg.degree, seg.start, seg.end),
-            wall * seg.run_steps,
-        )
-
-
-class _FakeRunner:
-    def __init__(self, executor, n_units):
-        from repro.cluster.pool import DevicePool
-
-        self.executor = executor
-        self.device_pool = DevicePool(devices=list(range(n_units)))
-        self.concurrent = False  # inline execution: fully deterministic
-
-
-class _NoPool:
-    """Placeholder checkpoint pool (the fake executor never touches it)."""
 
 
 def _adaptive_run(prior_factory, slow, steps=20, probe_steps=4, g=1):
     est = ProfiledCostModel(prior_factory(), drift_threshold=0.5)
     eng = ExecutionEngine(est, g)
-    fake = _FakeExecutor(prior_factory(), slow=slow)
+    fake = ScriptedExecutor(prior_factory(), slow=slow)
     trace = [Arrival(0.0, _cfg(), steps)]
     records, sched = eng.run_online_local(
         trace,
@@ -214,8 +182,8 @@ def _adaptive_run(prior_factory, slow, steps=20, probe_steps=4, g=1):
         None,
         n_steps=steps,
         seq=SEQ,
-        pool=_NoPool(),
-        runner=_FakeRunner(fake, g),
+        pool=NoPool(),
+        runner=FakeRunner(fake, g),
         probe_steps=probe_steps,
     )
     return records, sched
@@ -271,7 +239,7 @@ def test_adaptive_observed_key_skips_probe():
     dispatch their full residual in one segment."""
     est = ProfiledCostModel(_make_prior(), drift_threshold=0.5)
     eng = ExecutionEngine(est, 1)
-    fake = _FakeExecutor(_make_prior(), slow=1.0)
+    fake = ScriptedExecutor(_make_prior(), slow=1.0)
     # second job arrives (in real time) after the first finished, so the
     # planner sees them separately instead of packing them into one job
     trace = [Arrival(0.0, _cfg(), 20), Arrival(0.1, _cfg(alpha=9.0), 20)]
@@ -281,8 +249,8 @@ def test_adaptive_observed_key_skips_probe():
         None,
         n_steps=20,
         seq=SEQ,
-        pool=_NoPool(),
-        runner=_FakeRunner(fake, 1),
+        pool=NoPool(),
+        runner=FakeRunner(fake, 1),
         probe_steps=4,
     )
     # same obs key (alpha is not part of the shape): one probe total
@@ -298,7 +266,7 @@ def test_adaptive_unschedulable_raises():
     cm = CostModel(get_config("command-r-35b"), A100_40G)  # won't fit 1 unit
     est = ProfiledCostModel(cm)
     eng = ExecutionEngine(est, 1)
-    fake = _FakeExecutor(cm)
+    fake = ScriptedExecutor(cm)
     trace = [Arrival(0.0, LoraConfig(rank=8, alpha=8.0, seq_len=1024), 5)]
     with pytest.raises(RuntimeError, match="never be scheduled"):
         eng.run_online_local(
@@ -307,8 +275,8 @@ def test_adaptive_unschedulable_raises():
             None,
             n_steps=5,
             seq=1024,
-            pool=_NoPool(),
-            runner=_FakeRunner(fake, 1),
+            pool=NoPool(),
+            runner=FakeRunner(fake, 1),
         )
 
 
