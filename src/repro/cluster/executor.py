@@ -127,20 +127,32 @@ class SliceExecutor:
         mesh_shape: Optional[Tuple[int, int]] = None,
         fsdp: bool = False,
         seq_parallel: bool = False,
+        impl: Optional[str] = None,
+        remat: Optional[str] = None,
+        ranks: Optional[Tuple[int, ...]] = None,
+        blocks: Optional[Tuple[int, int, int]] = None,
     ) -> Tuple[Callable, Optional[Any]]:
         """Jitted packed step for this (config, pack width, slice shape).
 
         Returns ``(step, dist)``; ``dist`` is None for width-1 slices. The
         Python-level cache is the subsystem's compile cache: same-shape packs
         hit the same jitted callable (and, through jax's executable cache,
-        the same XLA compilation when placed identically)."""
+        the same XLA compilation when placed identically). The kernel policy
+        (``impl``/``remat``/the pack's static ``ranks`` tuple, which drives
+        ragged same-rank segmentation) is part of the trace, so it is part
+        of the key."""
         width = 1 if slice_ is None else slice_.width
+        # homogeneous rank tuples normalize to None (trace-identical: ragged
+        # segmentation only engages on mixed ranks) so same-width packs keep
+        # sharing one compiled step across uniform rank buckets
+        ranks = tuple(ranks) if ranks and len(set(ranks)) > 1 else None
+        kkey = (impl, remat, ranks, blocks)
         if width == 1:
-            key: Tuple = (cfg, n_pack, 1)
+            key: Tuple = (cfg, n_pack, 1, kkey)
         else:
             key = (
                 cfg, n_pack, width, slice_.devices, nb,
-                mesh_shape, fsdp, seq_parallel,
+                mesh_shape, fsdp, seq_parallel, kkey,
             )
         with self._lock:
             hit = self._steps.get(key)
@@ -159,7 +171,10 @@ class SliceExecutor:
                     mesh, nb or None, fsdp=fsdp,
                     seq_sharded_residuals=seq_parallel,
                 )
-            step = make_packed_step(cfg, n_pack, dist=dist)
+            step = make_packed_step(
+                cfg, n_pack, dist=dist, impl=impl, remat=remat, ranks=ranks,
+                blocks=blocks,
+            )
             self._steps[key] = (step, dist)
             self.n_builds += 1
             return step, dist
@@ -230,6 +245,9 @@ class SliceExecutor:
         fsdp: bool = False,
         seq_parallel: bool = False,
         step_callback: Optional[Callable] = None,
+        impl: Optional[str] = None,
+        remat: Optional[str] = None,
+        blocks: Optional[Tuple[int, int, int]] = None,
     ) -> PackResult:
         """Train one pack for ``n_steps`` on ``slice_`` (default device when
         None). ``lora``/``opt`` may carry resumed state; ``budgets`` is the
@@ -256,6 +274,7 @@ class SliceExecutor:
         step, dist = self.step_fn(
             cfg, meta.n, slice_, nb=nb, mesh_shape=mesh_shape,
             fsdp=fsdp, seq_parallel=seq_parallel,
+            impl=impl, remat=remat, ranks=meta.ranks, blocks=blocks,
         )
         vecs = (
             meta.scales(),
@@ -308,7 +327,7 @@ class SliceExecutor:
             # (probe / preempt / resume) would otherwise pay one throwaway
             # iteration per segment for a compile that is already cached.
             wkey = (
-                cfg, meta.n, meta.r_bucket,
+                cfg, meta.n, meta.r_bucket, meta.ranks, impl, remat, blocks,
                 None if slice_ is None else slice_.devices,
                 nb, mesh_shape, fsdp, seq_parallel,
                 tuple(sorted(
@@ -369,6 +388,8 @@ class SliceExecutor:
         data_iter_fn: Optional[Callable] = None,
         seed: int = 0,
         slice_: Optional[MeshSlice] = None,
+        impl: Optional[str] = None,
+        remat: Optional[str] = None,
     ):
         """Execute one planned segment on ``slice_``: resume preempted
         adapters from the checkpoint pool, train ``seg.run_steps`` packed
@@ -410,6 +431,8 @@ class SliceExecutor:
             budgets=budgets,
             data_iter_fn=data_iter_fn,
             data_start_steps=seg.start_steps,
+            impl=impl,
+            remat=remat,
         )
         lora, opt, losses = res.lora, res.opt, res.losses
         done = set(seg.done_ids)

@@ -489,7 +489,19 @@ class DispatchExecutor:
         data_iter_fn: Optional[Callable] = None,
         seed: int = 0,
         slice_=None,
+        impl: Optional[str] = None,
+        remat: Optional[str] = None,
     ):
+        # the kernel policy is not shipped over the wire yet (ROADMAP open
+        # item): host workers always run the default tier. A non-default
+        # request must fail loudly here, not silently execute a different
+        # kernel than the caller (and their autotuned cost model) expect.
+        if impl not in (None, "auto") or remat is not None:
+            raise NotImplementedError(
+                f"multi-host dispatch cannot ship kernel policy impl={impl!r}"
+                f"/remat={remat!r} to host workers yet; run with the default "
+                "tier or use a single-host runner"
+            )
         d = self.disp
         if slice_ is None:
             raise ValueError(

@@ -150,12 +150,23 @@ class ClusterRunner:
         data_iter_fn: Optional[Callable] = None,
         seed: int = 0,
         estimator=None,  # Optional[repro.sched.cost_model.CostEstimator]
+        impl: Optional[str] = None,
     ) -> ClusterResult:
         """Execute planned segments. With an ``estimator``, each segment's
         predicted per-iteration time is captured at dispatch and its measured
         time is fed back via ``estimator.observe(...)`` on completion (a
         no-op for the pure analytic prior) — the measured/predicted pairs are
-        surfaced on ``ClusterResult.timings`` either way."""
+        surfaced on ``ClusterResult.timings`` either way.
+
+        ``impl`` selects the kernel backend for every segment; when None the
+        *caller's* context-local default (``ops.default_impl()``) is captured
+        here — worker threads never see the caller's contextvars, so the
+        policy must cross the thread boundary as an explicit argument."""
+        if impl is None:
+            from repro.kernels.ops import default_impl
+
+            impl = default_impl()
+        impl = None if impl == "auto" else impl
         order = sorted(segments, key=lambda s: (s.start, s.job_id))
         done_events = [threading.Event() for _ in order]
         deps = resume_deps(order)
@@ -180,6 +191,7 @@ class ClusterRunner:
                         data_iter_fn=data_iter_fn,
                         seed=seed,
                         slice_=slice_,
+                        impl=impl,
                     )
                     results[idx] = rec
                     if estimator is not None and seg.run_steps > 0:

@@ -60,6 +60,17 @@ class PackMeta:
         iota = jnp.arange(r)[None, :]
         return (iota < jnp.asarray(self.ranks)[:, None]).astype(jnp.float32)
 
+    def kernel_config(self, impl=None, remat=None, blocks=None):
+        """Static kernel policy for this pack: carries the per-adapter rank
+        vector down to the kernels so heterogeneous-rank packs run as ragged
+        same-rank grid segments instead of computing every adapter at
+        ``r_bucket`` (see ``repro.kernels.ops.KernelConfig``)."""
+        from repro.kernels.ops import KernelConfig
+
+        return KernelConfig(
+            impl=impl, remat=remat, ranks=self.ranks, blocks=blocks
+        )
+
 
 def pack_meta(configs: Sequence[LoraConfig]) -> PackMeta:
     return PackMeta(

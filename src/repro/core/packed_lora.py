@@ -15,7 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ops import packed_lora_delta
+from repro.kernels.ops import KernelConfig, fused_lora_linear, packed_lora_delta
 
 
 def lora_linear(
@@ -26,6 +26,7 @@ def lora_linear(
     n_pack: int = 1,
     *,
     impl: Optional[str] = None,
+    kcfg: Optional[KernelConfig] = None,
 ) -> jnp.ndarray:
     """y = x @ W (+ bias) + packed-LoRA delta.
 
@@ -33,8 +34,34 @@ def lora_linear(
     params: {"w": (d_in, d_out)[, "b": (d_out,)]} — frozen base weights.
     lora: {"a": (N, d_in, r), "b": (N, r, d_out)} or None.
     scales: (N,) effective alpha/r multipliers.
+    kcfg: static kernel policy (impl / remat / pack rank vector / Pallas
+    blocks) threaded from the trainer; ``impl=`` overrides its backend.
+    With a fused impl the frozen base projection and the packed delta run as
+    ONE grid pass (kernels/fused.py) instead of two passes over x; the bias
+    (when present) is then added after the fused result — the only float
+    reassociation versus the two-pass path, which adds it before the delta.
     """
+    kc = kcfg or KernelConfig()
+    impl_r = kc.resolved_impl() if impl is None else KernelConfig(impl=impl).resolved_impl()
     w = params["w"]
+    if lora is not None and impl_r in ("fused_pallas", "fused_xla"):
+        lead = x.shape[:-1]
+        d_in, d_out = w.shape
+        xp = x.reshape(n_pack, x.shape[0] // n_pack, *x.shape[1:-1], d_in)
+        y = fused_lora_linear(
+            xp,
+            w,
+            lora["a"].astype(x.dtype),
+            lora["b"].astype(x.dtype),
+            scales,
+            impl=impl_r,
+            remat=kc.remat,
+            ranks=kc.ranks,
+            blocks=kc.blocks,
+        ).reshape(*lead, d_out)
+        if "b" in params:
+            y = y + params["b"].astype(x.dtype)
+        return y
     y = x @ w.astype(x.dtype)
     if "b" in params:
         y = y + params["b"].astype(x.dtype)
@@ -52,7 +79,9 @@ def lora_linear(
             lora["a"].astype(x.dtype),
             lora["b"].astype(x.dtype),
             scales,
-            impl=impl,
+            impl=impl_r,
+            remat=kc.remat,
+            ranks=kc.ranks,
         )
         y = y + delta.reshape(*lead, d_out)
     return y

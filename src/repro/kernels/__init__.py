@@ -1,1 +1,4 @@
-"""Pallas TPU kernels for packed-LoRA grouped GEMMs (paper §5)."""
+"""Packed-LoRA kernel tier (paper §5): grouped GEMMs (packed_matmul), the
+fused base+delta megakernel (fused), backend dispatch / ragged-rank
+segmentation / remat policy (ops), and the block-size autotuner whose
+measured rates feed the cost model (autotune)."""

@@ -13,18 +13,42 @@ All four are the grouped-GEMM primitive with transposed operands; on TPU the
 rank-dim reduction of case 4 is a single K-step inside the tile (rank <= 128),
 avoiding the scratch-buffer bookkeeping the paper describes on GPU.
 
-Backend selection:
-  impl="pallas"  : the Pallas kernel (interpret=True automatically off-TPU)
-  impl="xla"     : batched einsum (same packed semantics, XLA-fused GEMMs)
-  impl="auto"    : pallas on TPU, xla elsewhere (default — CPU tests/benches
-                   measure real XLA wall-clock, TPU gets the custom kernel)
+Backend selection (``KernelConfig.impl`` / the ``impl=`` kwarg):
+  impl="pallas"       : two-pass Pallas grouped kernel (interpret off-TPU)
+  impl="xla"          : two-pass batched einsum (XLA-fused GEMMs)
+  impl="fused"        : base+delta megakernel (kernels/fused.py) — resolves
+                        to fused_pallas on TPU, fused_xla elsewhere
+  impl="fused_pallas" : the Pallas megakernel explicitly
+  impl="fused_xla"    : the one-custom_vjp XLA formulation explicitly
+  impl="auto"         : pallas on TPU, xla elsewhere (default — CPU tests/
+                        benches measure real XLA wall-clock, TPU gets the
+                        custom kernel)
+
+The process default is a ``contextvars.ContextVar`` (NOT a mutable global):
+``set_default_impl`` only affects the calling context, so the thread-per-
+slice ``ClusterRunner`` can never race it. New threads do NOT inherit the
+calling thread's value — cross-thread executors must capture
+``default_impl()`` at dispatch time and plumb it explicitly (the trainer /
+cluster executor take ``impl=`` for exactly this reason).
+
+Heterogeneous-rank packs: pass ``ranks=`` (the pack's static per-adapter
+rank tuple, carried by ``core.adapter.PackMeta``) and same-rank adapters are
+grouped into grid *segments* — each segment computes at its own rank, so a
+rank-8 adapter packed with a rank-128 one stops paying the bucket-padding
+FLOPs (``(r_bucket - r) / r_bucket`` of the delta work). The padded weight
+columns are sliced off before the kernel ever sees them, so their gradient
+is *structurally* zero (stronger than the numerically-zero padding
+invariant the bucket path relies on).
 
 ``alpha`` is a hyperparameter, not a trainable weight: its cotangent is zero.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import functools
-from typing import Optional
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,20 +56,132 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.packed_matmul import packed_matmul as _pallas_matmul
 
-_IMPL_DEFAULT = "auto"
+IMPLS = ("auto", "pallas", "xla", "fused", "fused_pallas", "fused_xla")
+
+# Backward xA policy: "recompute" re-derives the (N, ..., r<=128) xA
+# intermediate in the backward (one extra GEMM over the full d_in), "save"
+# stores it as a residual. Both are bit-identical (same op on the same
+# inputs). Measured crossover (bench_kernels remat rows, d=2048..18944,
+# N=8..32, seq=16): "save" wins the backward by 1.2-1.5x on typical runs and
+# stays within CPU timing noise on the rest — the recomputed GEMM contracts
+# over the LARGE d_in, while the saved residual is only (N, T, r<=128).
+# Under the jax.checkpoint'd block stacks every model here trains with, the
+# residual is block-local (saved during the block's backward re-forward,
+# freed at the block boundary), so the memory cost is one projection's xA,
+# not the whole stack's. Hence "save" is the default.
+DEFAULT_REMAT = "save"
+
+_IMPL_VAR: contextvars.ContextVar = contextvars.ContextVar(
+    "plora_impl", default="auto"
+)
 
 
 def set_default_impl(impl: str) -> None:
-    global _IMPL_DEFAULT
-    assert impl in ("auto", "pallas", "xla")
-    _IMPL_DEFAULT = impl
+    """Set the *context-local* default impl (see module docstring)."""
+    assert impl in IMPLS, impl
+    _IMPL_VAR.set(impl)
+
+
+def default_impl() -> str:
+    return _IMPL_VAR.get()
+
+
+@contextlib.contextmanager
+def use_impl(impl: str):
+    """Scoped impl override: ``with use_impl("fused"): ...``."""
+    assert impl in IMPLS, impl
+    token = _IMPL_VAR.set(impl)
+    try:
+        yield
+    finally:
+        _IMPL_VAR.reset(token)
 
 
 def _resolve(impl: Optional[str]) -> str:
-    impl = impl or _IMPL_DEFAULT
+    impl = impl or _IMPL_VAR.get()
+    on_tpu = jax.default_backend() == "tpu"
     if impl == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "xla"
+        return "pallas" if on_tpu else "xla"
+    if impl == "fused":
+        return "fused_pallas" if on_tpu else "fused_xla"
     return impl
+
+
+def _unfused(impl: str) -> str:
+    """The two-pass backend implied by a resolved impl (the grouped delta
+    primitive underlying a fused variant's auxiliary contractions)."""
+    return {"fused_pallas": "pallas", "fused_xla": "xla"}.get(impl, impl)
+
+
+@dataclass(frozen=True)
+class KernelConfig:
+    """Static kernel policy threaded from the trainer down to every
+    ``lora_linear`` call site (hashable: safe as a jit-static argument).
+
+    impl   : backend name from ``IMPLS`` (None -> context default)
+    remat  : backward xA policy "recompute" | "save" (None -> DEFAULT_REMAT)
+    ranks  : the pack's per-adapter rank tuple; heterogeneous tuples switch
+             the delta to ragged same-rank grid segments (None -> treat the
+             pack as rank-homogeneous at the bucket rank)
+    blocks : Pallas (block_m, block_l, block_k) override (autotuner hook)
+    """
+
+    impl: Optional[str] = None
+    remat: Optional[str] = None
+    ranks: Optional[Tuple[int, ...]] = None
+    blocks: Optional[Tuple[int, int, int]] = None
+
+    def resolved_impl(self) -> str:
+        return _resolve(self.impl)
+
+    def resolved_remat(self) -> str:
+        return self.remat or DEFAULT_REMAT
+
+    @property
+    def ragged(self) -> bool:
+        return self.ranks is not None and len(set(self.ranks)) > 1
+
+
+def rank_segments(
+    ranks: Sequence[int],
+) -> Tuple[Tuple[int, ...], Tuple[int, ...], List[Tuple[int, int, int]]]:
+    """Group a pack's adapters into same-rank segments.
+
+    Returns ``(order, inv, segments)``: ``order`` is a static permutation
+    sorting adapters by rank (stable, so same-rank adapters keep their
+    relative slot order), ``inv`` undoes it, and each segment ``(lo, hi, r)``
+    is a contiguous run of rank-``r`` adapters in the sorted view.
+    """
+    n = len(ranks)
+    order = tuple(sorted(range(n), key=lambda i: (ranks[i], i)))
+    inv = tuple(
+        int(i) for i in sorted(range(n), key=lambda i: order[i])
+    )
+    segments: List[Tuple[int, int, int]] = []
+    lo = 0
+    for hi in range(1, n + 1):
+        if hi == n or ranks[order[hi]] != ranks[order[lo]]:
+            segments.append((lo, hi, int(ranks[order[lo]])))
+            lo = hi
+    return order, inv, segments
+
+
+def delta_flops(
+    ranks: Sequence[int], d_in: int, d_out: int, tokens: int, *,
+    ragged: bool,
+) -> float:
+    """Forward delta FLOPs of one projection for a pack — the structural
+    metric ``bench_kernels`` reports: bucket-padded packs compute every
+    adapter at ``r_bucket`` (max rank rounded up to 8); ragged segments
+    compute each adapter at its own rank."""
+    if not ranks:
+        return 0.0
+    bucket = max(8, (max(ranks) + 7) // 8 * 8)
+    total = 0.0
+    for r in ranks:
+        r_eff = r if ragged else bucket
+        total += 2.0 * tokens * r_eff * (d_in + d_out)
+    return total
 
 
 def grouped_matmul(x, w, scale=None, *, impl: Optional[str] = None):
@@ -54,7 +190,7 @@ def grouped_matmul(x, w, scale=None, *, impl: Optional[str] = None):
     x may carry extra token dims (N, ..., K). The Pallas kernel is a 3D
     grouped GEMM, so those dims are flattened around the call; the xla path
     keeps them (sharding-friendly under pjit — see packed_matmul_ref)."""
-    if _resolve(impl) == "pallas":
+    if _unfused(_resolve(impl)) == "pallas":
         lead = x.shape[1:-1]
         x3 = x.reshape(x.shape[0], -1, x.shape[-1])
         out = _pallas_matmul(
@@ -64,22 +200,24 @@ def grouped_matmul(x, w, scale=None, *, impl: Optional[str] = None):
     return _ref.packed_matmul_ref(x, w, scale)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
-def _packed_lora_delta(x, a, b, alpha, impl):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _packed_lora_delta(x, a, b, alpha, impl, remat):
     xa = grouped_matmul(x, a, impl=impl)
     return grouped_matmul(xa, b, alpha, impl=impl)
 
 
-def _fwd(x, a, b, alpha, impl):
-    out = _packed_lora_delta(x, a, b, alpha, impl)
-    return out, (x, a, b, alpha)
+def _fwd(x, a, b, alpha, impl, remat):
+    xa = grouped_matmul(x, a, impl=impl)
+    out = grouped_matmul(xa, b, alpha, impl=impl)
+    return out, (x, a, b, alpha, xa if remat == "save" else None)
 
 
-def _bwd(impl, res, g):
-    x, a, b, alpha = res
+def _bwd(impl, remat, res, g):
+    x, a, b, alpha, saved_xa = res
     g = g.astype(x.dtype)
-    # recompute xA (cheap: (N, ..., r<=128)) instead of saving — rematerialize
-    xa = grouped_matmul(x, a, impl=impl)  # (N, ..., r)
+    # xA policy: recompute (cheap: (N, ..., r<=128)) or reuse the residual —
+    # bit-identical either way (same op on the same inputs)
+    xa = saved_xa if saved_xa is not None else grouped_matmul(x, a, impl=impl)
     g_s = g * alpha.reshape(alpha.shape[0], *([1] * (g.ndim - 1))).astype(g.dtype)
     if x.ndim == 3:
         # 3D: all four cases go through the grouped kernel (paper §5.2)
@@ -103,12 +241,104 @@ def _bwd(impl, res, g):
 _packed_lora_delta.defvjp(_fwd, _bwd)
 
 
-def packed_lora_delta(x, a, b, alpha, *, impl: Optional[str] = None):
+def _ragged_call(fn, x, a, b, alpha, ranks):
+    """Run a per-segment delta/fused op over same-rank grid segments.
+
+    ``fn(x_seg, a_seg, b_seg, alpha_seg)`` sees each segment's weights
+    sliced to the segment's true rank; outputs are reassembled in original
+    slot order. The permutation is static (``jnp.take`` with constant
+    indices), so gradients route exactly and the sliced-off padding columns
+    receive no gradient at all.
+    """
+    assert len(ranks) == x.shape[0], (ranks, x.shape)
+    order, inv, segments = rank_segments(ranks)
+    xs = jnp.take(x, jnp.asarray(order), axis=0)
+    a_s = jnp.take(a, jnp.asarray(order), axis=0)
+    b_s = jnp.take(b, jnp.asarray(order), axis=0)
+    al_s = jnp.take(alpha, jnp.asarray(order), axis=0)
+    outs = []
+    for lo, hi, r in segments:
+        outs.append(
+            fn(
+                xs[lo:hi],
+                a_s[lo:hi, :, :r],
+                b_s[lo:hi, :r, :],
+                al_s[lo:hi],
+            )
+        )
+    out = jnp.concatenate(outs, axis=0)
+    return jnp.take(out, jnp.asarray(inv), axis=0)
+
+
+def packed_lora_delta(
+    x,
+    a,
+    b,
+    alpha,
+    *,
+    impl: Optional[str] = None,
+    remat: Optional[str] = None,
+    ranks: Optional[Tuple[int, ...]] = None,
+):
     """alpha_n * (x_n @ A_n) @ B_n for N packed adapters.
 
     x: (N, T, d); a: (N, d, r); b: (N, r, k); alpha: (N,) -> (N, T, k).
     Heterogeneous ranks are zero-padded to the pack's bucket rank by
-    ``repro.core.pack``; padded columns/rows contribute exactly zero to both
-    the output and every gradient.
+    ``repro.core.pack``; with ``ranks=None`` padded columns/rows contribute
+    exactly zero to both the output and every gradient, and with the pack's
+    static rank tuple passed the padding is sliced away entirely (ragged
+    same-rank segments — no wasted FLOPs, structurally zero pad grads).
+    ``remat`` picks the backward xA policy (module docstring).
     """
-    return _packed_lora_delta(x, a, b, alpha.astype(jnp.float32), impl)
+    impl_r = _unfused(_resolve(impl))
+    remat_r = remat or DEFAULT_REMAT
+    assert remat_r in ("recompute", "save"), remat_r
+    alpha = alpha.astype(jnp.float32)
+    if ranks is not None and len(set(ranks)) > 1:
+        return _ragged_call(
+            lambda xs, as_, bs, als: _packed_lora_delta(
+                xs, as_, bs, als, impl_r, remat_r
+            ),
+            x, a, b, alpha, ranks,
+        )
+    return _packed_lora_delta(x, a, b, alpha, impl_r, remat_r)
+
+
+def fused_lora_linear(
+    x,
+    w,
+    a,
+    b,
+    alpha,
+    *,
+    impl: Optional[str] = None,
+    remat: Optional[str] = None,
+    ranks: Optional[Tuple[int, ...]] = None,
+    blocks: Optional[Tuple[int, int, int]] = None,
+):
+    """Fused ``x @ W + alpha_n * (x_n @ A_n) @ B_n`` (kernels/fused.py),
+    with the same ragged-rank segmentation as :func:`packed_lora_delta` —
+    each same-rank segment runs its own fused grid pass (the base GEMM rides
+    along per segment, so a segment never re-reads another segment's rows).
+
+    x: (N, ..., d_in); w: (d_in, d_out); a/b/alpha as usual.
+    """
+    from repro.kernels.fused import fused_lora
+
+    impl_r = _resolve(impl)
+    if impl_r in ("pallas", "xla", "auto"):
+        impl_r = {"pallas": "fused_pallas", "xla": "fused_xla"}.get(
+            impl_r, "fused_xla"
+        )
+    remat_r = remat or DEFAULT_REMAT
+    alpha = alpha.astype(jnp.float32)
+    if ranks is not None and len(set(ranks)) > 1:
+        return _ragged_call(
+            lambda xs, as_, bs, als: fused_lora(
+                xs, w, as_, bs, als, impl=impl_r, remat=remat_r, blocks=blocks
+            ),
+            x, a, b, alpha, ranks,
+        )
+    return fused_lora(
+        x, w, a, b, alpha, impl=impl_r, remat=remat_r, blocks=blocks
+    )

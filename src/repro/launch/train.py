@@ -108,6 +108,22 @@ def main():
     ap.add_argument("--alphas", default=None, help="default: 2*rank")
     ap.add_argument("--batch-sizes", default=None, help="default: 1 each")
     ap.add_argument("--mesh", default=None, help="e.g. 4x2 (data x model)")
+    ap.add_argument("--impl", default=None,
+                    choices=["auto", "pallas", "xla", "fused", "fused_pallas",
+                             "fused_xla"],
+                    help="packed-LoRA kernel backend (kernels/ops.py): "
+                         "'fused' runs base+delta as one megakernel "
+                         "(fused_pallas on TPU, fused_xla elsewhere); "
+                         "default: context default ('auto')")
+    ap.add_argument("--remat", default=None, choices=["recompute", "save"],
+                    help="backward xA policy of the LoRA kernels (default: "
+                         "measured crossover, see bench_kernels)")
+    ap.add_argument("--autotune-cache", default=None,
+                    help="JSON autotune cache (kernels/autotune.py): "
+                         "micro-benchmark fused-kernel block sizes / rates "
+                         "for this arch's projection shapes, persist them "
+                         "here, and calibrate the cost-model prior with the "
+                         "measured rates")
     ap.add_argument("--hosts", type=int, default=1,
                     help="run through the multi-host dispatch tier: N "
                          "simulated hosts (one subprocess each, self-forcing "
@@ -177,6 +193,10 @@ def main():
                      "--seq-parallel/--save-state/--resume-state (per-job "
                      "parallelism comes from the planner; use "
                      "--devices-per-host for host width)")
+        if args.impl not in (None, "auto") or args.remat:
+            ap.error("--impl/--remat are not plumbed over the multi-host "
+                     "wire protocol yet; host workers run the default "
+                     "kernel tier")
         _run_multihost(args, cfg, configs)
         return
 
@@ -222,6 +242,32 @@ def main():
 
     # profile feedback loop: prior + (optionally pre-seeded) observations
     est, store = _estimator(args, cfg)
+    blocks = None
+    if args.autotune_cache:
+        from repro.kernels.autotune import model_shapes, tune_for_model
+
+        # the calibration prices FUSED-kernel rates, so the run must
+        # execute the fused tier — otherwise the planner would predict work
+        # the kernels never do
+        if args.impl in (None, "auto"):
+            args.impl = "fused"
+            print("autotune: --impl not set; running the fused tier the "
+                  "calibration measures")
+        elif args.impl in ("xla", "pallas"):
+            ap.error("--autotune-cache calibrates measured FUSED rates; "
+                     "combine it with --impl fused/fused_xla/fused_pallas")
+        prof = tune_for_model(
+            cfg, configs, seq=args.seq, cache_path=args.autotune_cache,
+            fast=True,
+        )
+        est = type(est)(prof.calibrate(est.prior), est.store)
+        # tuned Pallas tile sizes for this pack's representative projection
+        # (None off-TPU: the XLA path has no block parameter)
+        blocks = prof.best_blocks(*model_shapes(cfg, configs, args.seq)[0])
+        print(f"autotune: {len(prof.entries)} shape bucket(s) in "
+              f"{args.autotune_cache} (backend={prof.backend}); prior "
+              f"calibrated with measured fused rates"
+              + (f", blocks={blocks}" if blocks else ""))
     degree = max(width, 1)
     pred_prior = est.prior.iter_time(configs, degree, args.seq)
     pred_profiled = est.iter_time(configs, degree, args.seq)  # before observing
@@ -240,6 +286,9 @@ def main():
         fsdp=args.fsdp,
         seq_parallel=args.seq_parallel,
         step_callback=log if args.log_every else None,
+        impl=args.impl,
+        remat=args.remat,
+        blocks=blocks,
     )
     device_pool.release(slice_)
     lora, opt = res.lora, res.opt

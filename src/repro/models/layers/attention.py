@@ -176,20 +176,21 @@ def apply_gqa(
     cross_kv: Optional[dict] = None,
     make_cache: bool = False,
     chunk_q: int = 512,
+    kcfg=None,
 ):
     """x: (NB, S, d). Returns (out, new_cache_or_None)."""
     lo = lora or {}
     nb, s, _ = x.shape
     h, kvh, hd = acfg.n_heads, acfg.n_kv_heads, acfg.head_dim
-    q = lora_linear(x, params["q"], lo.get("q"), scales, n_pack).reshape(nb, s, h, hd)
+    q = lora_linear(x, params["q"], lo.get("q"), scales, n_pack, kcfg=kcfg).reshape(nb, s, h, hd)
 
     if cross_kv is not None:
         k, v = cross_kv["k"], cross_kv["v"]
         out = flash_attention(q, k, v, causal=False, chunk_q=chunk_q)
         new_cache = None
     else:
-        k = lora_linear(x, params["k"], lo.get("k"), scales, n_pack)
-        v = lora_linear(x, params["v"], lo.get("v"), scales, n_pack)
+        k = lora_linear(x, params["k"], lo.get("k"), scales, n_pack, kcfg=kcfg)
+        v = lora_linear(x, params["v"], lo.get("v"), scales, n_pack, kcfg=kcfg)
         k = k.reshape(nb, s, kvh, hd)
         v = v.reshape(nb, s, kvh, hd)
         if rope is not None:
@@ -209,7 +210,7 @@ def apply_gqa(
             new_cache = {"k": k, "v": v} if make_cache else None
 
     out = out.reshape(nb, s, h * hd)
-    out = lora_linear(out, params["o"], lo.get("o"), scales, n_pack)
+    out = lora_linear(out, params["o"], lo.get("o"), scales, n_pack, kcfg=kcfg)
     return out, new_cache
 
 
@@ -251,7 +252,7 @@ def init_mla(key, acfg: AttentionConfig, d_model, meta, targets, dtype=jnp.float
     return params, lora
 
 
-def _mla_qkv(params, lo, scales, x, n_pack, acfg, rope):
+def _mla_qkv(params, lo, scales, x, n_pack, acfg, rope, kcfg=None):
     """Shared projections for the MLA train/prefill path."""
     from repro.models.layers.common import apply_norm
 
@@ -259,13 +260,13 @@ def _mla_qkv(params, lo, scales, x, n_pack, acfg, rope):
     h = acfg.n_heads
     dn, dr, dv = acfg.qk_nope_head_dim, acfg.qk_rope_head_dim, acfg.v_head_dim
     cos, sin = rope
-    cq = lora_linear(x, params["q_a"], lo.get("q_a"), scales, n_pack)
+    cq = lora_linear(x, params["q_a"], lo.get("q_a"), scales, n_pack, kcfg=kcfg)
     cq = apply_norm(params["q_norm"], cq, "rmsnorm")
-    q = lora_linear(cq, params["q_b"], None, scales, n_pack).reshape(nb, s, h, dn + dr)
+    q = lora_linear(cq, params["q_b"], None, scales, n_pack, kcfg=kcfg).reshape(nb, s, h, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     q_rope = apply_rope(q_rope, cos, sin)
 
-    ckv_full = lora_linear(x, params["kv_a"], lo.get("kv_a"), scales, n_pack)
+    ckv_full = lora_linear(x, params["kv_a"], lo.get("kv_a"), scales, n_pack, kcfg=kcfg)
     ckv, k_rope = ckv_full[..., : acfg.kv_lora_rank], ckv_full[..., acfg.kv_lora_rank :]
     ckv = apply_norm(params["kv_norm"], ckv, "rmsnorm")
     k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)  # (NB,S,1,dr)
@@ -285,13 +286,14 @@ def apply_mla(
     pos=None,
     make_cache: bool = False,
     chunk_q: int = 512,
+    kcfg=None,
 ):
     lo = lora or {}
     nb, s, _ = x.shape
     h = acfg.n_heads
     dn, dr, dv = acfg.qk_nope_head_dim, acfg.qk_rope_head_dim, acfg.v_head_dim
     scale = (dn + dr) ** -0.5
-    q_nope, q_rope, ckv, k_rope = _mla_qkv(params, lo, scales, x, n_pack, acfg, rope)
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(params, lo, scales, x, n_pack, acfg, rope, kcfg)
 
     if cache is None:
         # train/prefill: expand compressed KV to per-head K/V
@@ -331,7 +333,7 @@ def apply_mla(
         new_cache = {"ckv": ckv_c, "k_rope": kr_c}
 
     out = out.reshape(nb, s, h * dv)
-    out = lora_linear(out, params["o"], lo.get("o"), scales, n_pack)
+    out = lora_linear(out, params["o"], lo.get("o"), scales, n_pack, kcfg=kcfg)
     return out, new_cache
 
 

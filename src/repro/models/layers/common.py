@@ -72,13 +72,13 @@ def init_mlp(
     return params, lora
 
 
-def apply_mlp(params, lora, scales, x, kind: str, n_pack: int = 1):
+def apply_mlp(params, lora, scales, x, kind: str, n_pack: int = 1, kcfg=None):
     lo = lora or {}
     if kind == "gelu2":
-        h = lora_linear(x, params["up"], lo.get("up"), scales, n_pack)
+        h = lora_linear(x, params["up"], lo.get("up"), scales, n_pack, kcfg=kcfg)
         h = jax.nn.gelu(h)
-        return lora_linear(h, params["down"], lo.get("down"), scales, n_pack)
-    g = lora_linear(x, params["gate"], lo.get("gate"), scales, n_pack)
-    u = lora_linear(x, params["up"], lo.get("up"), scales, n_pack)
+        return lora_linear(h, params["down"], lo.get("down"), scales, n_pack, kcfg=kcfg)
+    g = lora_linear(x, params["gate"], lo.get("gate"), scales, n_pack, kcfg=kcfg)
+    u = lora_linear(x, params["up"], lo.get("up"), scales, n_pack, kcfg=kcfg)
     act = jax.nn.gelu(g) if kind == "gelu" else jax.nn.silu(g)
-    return lora_linear(act * u, params["down"], lo.get("down"), scales, n_pack)
+    return lora_linear(act * u, params["down"], lo.get("down"), scales, n_pack, kcfg=kcfg)

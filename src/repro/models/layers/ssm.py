@@ -135,6 +135,7 @@ def apply_ssm(
     scfg: SSMConfig,
     n_pack: int = 1,
     return_state: bool = False,
+    kcfg=None,
 ):
     """Full-sequence SSD block. x: (NB, S, d). Returns (out, cache|None)."""
     lo = lora or {}
@@ -142,7 +143,7 @@ def apply_ssm(
     di = scfg.d_inner(d)
     h = scfg.n_heads(d)
     n = scfg.d_state
-    zx = lora_linear(x, params["zx"], lo.get("zx"), scales, n_pack)
+    zx = lora_linear(x, params["zx"], lo.get("zx"), scales, n_pack, kcfg=kcfg)
     z, xs = zx[..., :di], zx[..., di:]
     bc = x @ params["bc"]["w"].astype(x.dtype)
     dt_raw = x @ params["dt"]["w"].astype(x.dtype) + params["dt_bias"].astype(x.dtype)
@@ -160,7 +161,7 @@ def apply_ssm(
     )
     y = y.reshape(nb, s, di)
     y = apply_norm(params["norm"], y * jax.nn.silu(z), "rmsnorm")
-    out = lora_linear(y, params["out"], lo.get("out"), scales, n_pack)
+    out = lora_linear(y, params["out"], lo.get("out"), scales, n_pack, kcfg=kcfg)
     cache = None
     if return_state:
         cache = {
@@ -170,14 +171,14 @@ def apply_ssm(
     return out, cache
 
 
-def apply_ssm_decode(params, lora, scales, x, cache, *, scfg: SSMConfig, n_pack=1):
+def apply_ssm_decode(params, lora, scales, x, cache, *, scfg: SSMConfig, n_pack=1, kcfg=None):
     """One-token step. x: (NB, 1, d); cache: {conv (NB,K-1,C), state (NB,H,P,N)}."""
     lo = lora or {}
     nb, _, d = x.shape
     di = scfg.d_inner(d)
     h = scfg.n_heads(d)
     n = scfg.d_state
-    zx = lora_linear(x, params["zx"], lo.get("zx"), scales, n_pack)
+    zx = lora_linear(x, params["zx"], lo.get("zx"), scales, n_pack, kcfg=kcfg)
     z, xs = zx[..., :di], zx[..., di:]
     bc = x @ params["bc"]["w"].astype(x.dtype)
     dt_raw = x @ params["dt"]["w"].astype(x.dtype) + params["dt_bias"].astype(x.dtype)
@@ -198,7 +199,7 @@ def apply_ssm_decode(params, lora, scales, x, cache, *, scfg: SSMConfig, n_pack=
     y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
     y = y.reshape(nb, 1, di).astype(x.dtype)
     y = apply_norm(params["norm"], y * jax.nn.silu(z), "rmsnorm")
-    out = lora_linear(y, params["out"], lo.get("out"), scales, n_pack)
+    out = lora_linear(y, params["out"], lo.get("out"), scales, n_pack, kcfg=kcfg)
     return out, {"conv": win[:, 1:], "state": state}
 
 

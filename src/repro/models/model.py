@@ -72,7 +72,7 @@ def _embed(base, tokens, cfg, batch):
     return x
 
 
-def _encode(base, lora, scales, frames, cfg, *, n_pack, dist, chunk_q):
+def _encode(base, lora, scales, frames, cfg, *, n_pack, dist, chunk_q, kcfg=None):
     """Whisper encoder over precomputed frame embeddings (B, S_enc, d)."""
     espec = encoder_specs(cfg)
     pos = jnp.arange(frames.shape[1])
@@ -81,6 +81,7 @@ def _encode(base, lora, scales, frames, cfg, *, n_pack, dist, chunk_q):
         base["encoder"], lora.get("encoder", {"blocks": {}, "rest": {}}),
         scales, frames, cfg, espec,
         n_pack=n_pack, rope_cache=rc, dist=dist, chunk_q=chunk_q, causal=False,
+        kcfg=kcfg,
     )
     return apply_norm(base["enc_norm"], h, cfg.norm_kind)
 
@@ -96,16 +97,19 @@ def forward(
     dist: Optional[DistContext] = None,
     chunk_q: int = 512,
     make_cache: bool = False,
+    kcfg=None,
 ):
     """batch: {"tokens": (NB, S)[, "frames": (NB,Se,d)][, "patches": (NB,P,d)]}.
-    Returns (hidden (NB, S_total, d), caches|None, aux)."""
+    Returns (hidden (NB, S_total, d), caches|None, aux). ``kcfg`` is the
+    static kernel policy (impl / remat / pack rank vector) every
+    ``lora_linear`` below runs under."""
     tokens = batch["tokens"]
     x = _embed(base, tokens, cfg, batch)
     enc_out = None
     if cfg.is_encdec:
         enc_out = _encode(
             base, lora, scales, batch["frames"].astype(x.dtype), cfg,
-            n_pack=n_pack, dist=dist, chunk_q=chunk_q,
+            n_pack=n_pack, dist=dist, chunk_q=chunk_q, kcfg=kcfg,
         )
     s_total = x.shape[1]
     positions = jnp.arange(s_total)
@@ -115,7 +119,7 @@ def forward(
         base["decoder"], lora.get("decoder", {"blocks": {}, "rest": {}}),
         scales, x, cfg, specs,
         n_pack=n_pack, rope_cache=rc, dist=dist, enc_out=enc_out,
-        make_cache=make_cache, chunk_q=chunk_q,
+        make_cache=make_cache, chunk_q=chunk_q, kcfg=kcfg,
     )
     x = apply_norm(base["final_norm"], x, cfg.norm_kind)
     return x, (caches if make_cache else None), aux
@@ -157,6 +161,7 @@ def decode_step(
     n_pack: int = 1,
     dist: Optional[DistContext] = None,
     enc_out=None,
+    kcfg=None,
 ):
     """One serve step: embed token at `pos`, run stack against caches,
     return (logits (NB, 1, V), new_caches). For enc-dec models the cached
@@ -168,7 +173,7 @@ def decode_step(
         base["decoder"], lora.get("decoder", {"blocks": {}, "rest": {}}),
         scales, x, cfg, specs,
         n_pack=n_pack, rope_cache=rc, dist=dist, enc_out=enc_out,
-        caches=caches, pos=pos, remat=False,
+        caches=caches, pos=pos, remat=False, kcfg=kcfg,
     )
     x = apply_norm(base["final_norm"], x, cfg.norm_kind)
     return logits(base, x, cfg), new_caches
@@ -176,13 +181,14 @@ def decode_step(
 
 def prefill(
     base, lora, scales, batch, cfg: ModelConfig, *,
-    n_pack: int = 1, dist=None, chunk_q: int = 512,
+    n_pack: int = 1, dist=None, chunk_q: int = 512, kcfg=None,
 ):
     """Full-sequence forward that also returns the KV caches (inference
     prefill). Returns (last-position logits (NB,1,V), caches)."""
     hidden, caches, _ = forward(
         base, lora, scales, batch, cfg,
         n_pack=n_pack, dist=dist, chunk_q=chunk_q, make_cache=True,
+        kcfg=kcfg,
     )
     lg = logits(base, hidden[:, -1:, :], cfg)
     return lg, caches

@@ -203,6 +203,7 @@ def apply_layer(
     make_cache: bool = False,
     chunk_q: int = 512,
     causal: bool = True,
+    kcfg=None,
 ):
     """Pre-norm residual layer. Returns (x, new_cache, aux_loss)."""
     lo = lora or {}
@@ -213,12 +214,13 @@ def apply_layer(
         if cache is not None:
             y, c = apply_ssm_decode(
                 params["ssm"], lo.get("ssm"), scales, h,
-                cache["ssm"], scfg=cfg.ssm, n_pack=n_pack,
+                cache["ssm"], scfg=cfg.ssm, n_pack=n_pack, kcfg=kcfg,
             )
         else:
             y, c = apply_ssm(
                 params["ssm"], lo.get("ssm"), scales, h,
                 scfg=cfg.ssm, n_pack=n_pack, return_state=make_cache,
+                kcfg=kcfg,
             )
         if c is not None:
             new_cache["ssm"] = c
@@ -230,7 +232,7 @@ def apply_layer(
                 params["attn"], lo.get("attn"), scales, h,
                 acfg=a, n_pack=n_pack, rope=rope,
                 cache=cache.get("attn") if cache else None,
-                pos=pos, make_cache=make_cache, chunk_q=chunk_q,
+                pos=pos, make_cache=make_cache, chunk_q=chunk_q, kcfg=kcfg,
             )
         else:
             y, c = apply_gqa(
@@ -238,7 +240,7 @@ def apply_layer(
                 acfg=a, n_pack=n_pack, rope=rope, window=spec.window,
                 causal=causal,
                 cache=cache.get("attn") if cache else None,
-                pos=pos, make_cache=make_cache, chunk_q=chunk_q,
+                pos=pos, make_cache=make_cache, chunk_q=chunk_q, kcfg=kcfg,
             )
         if c is not None:
             new_cache["attn"] = c
@@ -264,7 +266,7 @@ def apply_layer(
         y, _ = apply_gqa(
             params["cross"], lo.get("cross"), scales, h,
             acfg=cfg.attention, n_pack=n_pack, rope=None,
-            causal=False, cross_kv=ckv, chunk_q=chunk_q,
+            causal=False, cross_kv=ckv, chunk_q=chunk_q, kcfg=kcfg,
         )
         if make_cache or cache is not None:
             new_cache["cross_kv"] = ckv
@@ -272,7 +274,7 @@ def apply_layer(
 
     if spec.ffn == "dense":
         h = apply_norm(params["norm2"], x, cfg.norm_kind)
-        x = x + apply_mlp(params["mlp"], lo.get("mlp"), scales, h, cfg.mlp_kind, n_pack)
+        x = x + apply_mlp(params["mlp"], lo.get("mlp"), scales, h, cfg.mlp_kind, n_pack, kcfg=kcfg)
     elif spec.ffn == "moe":
         h = apply_norm(params["norm2"], x, cfg.norm_kind)
         if dist is not None and dist.model_axis is not None and cfg.moe.impl == "ep":
@@ -365,6 +367,7 @@ def apply_stack(
     chunk_q: int = 512,
     causal: bool = True,
     remat: bool = True,
+    kcfg=None,
 ):
     """Run the whole stack. Returns (x, new_caches, total_aux)."""
     p = find_period(specs)
@@ -372,7 +375,7 @@ def apply_stack(
     n_blocks, n_rest = L // p, L % p
     kw = dict(
         cfg=cfg, n_pack=n_pack, rope_cache=rope_cache, dist=dist,
-        chunk_q=chunk_q, causal=causal,
+        chunk_q=chunk_q, causal=causal, kcfg=kcfg,
     )
 
     def block_body(x, inp):

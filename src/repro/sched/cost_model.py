@@ -268,6 +268,18 @@ class CostModel(CostEstimator):
     # the DTM packer prefer rank-homogeneous packs. False = the paper's
     # padding-naive model (each adapter billed at its own rank).
     pad_aware: bool = True
+    # Ragged-kernel accounting (kernels/ops.py rank segments): the kernels
+    # group same-rank adapters into grid segments and compute each adapter at
+    # its OWN rank (8-aligned), so mixed-rank packs stop paying bucket-
+    # padding FLOPs. The autotuner's ``KernelProfile.calibrate`` sets this —
+    # it supersedes pad_aware for the *time* model (memory stays bucketed:
+    # the pack still allocates padded weights).
+    ragged: bool = False
+    # Measured LoRA-kernel rate scale (autotune feedback): the fused
+    # base+delta megakernel's measured speedup over the two-pass formulation
+    # on this backend. The LoRA compute term is divided by it — 1.0 = the
+    # uncalibrated analytic prior (bit-identical to the pre-autotune model).
+    lora_rate_scale: float = 1.0
 
     @staticmethod
     def bucket_rank(configs: Sequence[LoraConfig]) -> int:
@@ -275,6 +287,8 @@ class CostModel(CostEstimator):
         return max(8, (r + 7) // 8 * 8)
 
     def _eff_rank(self, c: LoraConfig, configs: Sequence[LoraConfig]) -> int:
+        if self.ragged:
+            return max(8, (c.rank + 7) // 8 * 8)
         return self.bucket_rank(configs) if self.pad_aware else c.rank
 
     # ---------------- memory (Appendix A) ----------------
@@ -341,7 +355,10 @@ class CostModel(CostEstimator):
         # split under TP but each device's slice of every GEMM does, so the
         # efficiency argument is tokens/d (penalizes Max-GPU, §7.2.1).
         eff = self.hw.eff(tokens / d)
-        compute_t = (base_flops + lora_flops) / (
+        # lora_rate_scale is the autotuner's measured fused-kernel speedup
+        # (1.0 = uncalibrated; division by 1.0 is bit-exact, so the default
+        # model is unchanged)
+        compute_t = (base_flops + lora_flops / self.lora_rate_scale) / (
             d * self.hw.peak_flops * eff
         )
         # weight traffic: weights read in fwd + bwd; adapters updated

@@ -883,6 +883,14 @@ class ExecutionEngine:
         est = self.cm
         runner = runner or ClusterRunner()
         executor, dpool = runner.executor, runner.device_pool
+        # kernel policy: capture the CALLER's context-local default here —
+        # the submit() workers below run on executor threads that never see
+        # this context's vars, so the impl must cross as an explicit
+        # argument (same contract as ClusterRunner.run)
+        from repro.kernels.ops import default_impl
+
+        impl = default_impl()
+        impl = None if impl == "auto" else impl
         if drift_threshold is None:
             drift_threshold = getattr(est, "drift_threshold", 0.5)
         g = self.monitor.total
@@ -959,6 +967,7 @@ class ExecutionEngine:
                             data_iter_fn=data_iter_fn,
                             seed=seed,
                             slice_=slice_,
+                            impl=impl,
                         )
                 except BaseException as e:  # noqa: BLE001 — re-raised below
                     err = e

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.adapter import PackMeta
+from repro.kernels.ops import KernelConfig
 from repro.models.model import forward, unembed_w
 from repro.models.transformer import DistContext
 from repro.train.losses import chunked_cross_entropy
@@ -35,13 +36,15 @@ def packed_loss_fn(
     chunk_q: int = 512,
     vocab_chunk: int = 512,
     aux_weight: float = 0.01,
+    kcfg: Optional[KernelConfig] = None,
 ):
     """Pack loss with the per-adapter scale vector as a runtime value (a
     traced argument under ``make_packed_step``, a constant under
-    ``make_train_step``)."""
+    ``make_train_step``). ``kcfg`` is the static kernel policy (backend
+    impl, backward remat, the pack's rank vector for ragged grouping)."""
     h, _, aux = forward(
         base, lora, scales, batch, cfg,
-        n_pack=n_pack, dist=dist, chunk_q=chunk_q,
+        n_pack=n_pack, dist=dist, chunk_q=chunk_q, kcfg=kcfg,
     )
     per_adapter, total = chunked_cross_entropy(
         h, unembed_w(base, cfg), batch["labels"], n_pack,
@@ -61,11 +64,13 @@ def loss_fn(
     chunk_q: int = 512,
     vocab_chunk: int = 512,
     aux_weight: float = 0.01,
+    kcfg: Optional[KernelConfig] = None,
 ):
     return packed_loss_fn(
         lora, base, batch, cfg, meta.n, meta.scales(),
         dist=dist, chunk_q=chunk_q, vocab_chunk=vocab_chunk,
         aux_weight=aux_weight,
+        kcfg=kcfg if kcfg is not None else meta.kernel_config(),
     )
 
 
@@ -78,6 +83,10 @@ def make_packed_step(
     vocab_chunk: int = 512,
     weight_decay: float = 0.0,
     jit: bool = True,
+    impl: Optional[str] = None,
+    remat: Optional[str] = None,
+    ranks: Optional[tuple] = None,
+    blocks: Optional[tuple] = None,
 ):
     """Shape-keyed packed train step (cluster executor's compile unit).
 
@@ -88,13 +97,28 @@ def make_packed_step(
     (n, r_bucket, batch, seq) shape regardless of which alphas / learning
     rates / step budgets the pack carries. ``repro.cluster.SliceExecutor``
     caches the returned callable per (model-config, pack-width, slice-shape).
+
+    ``impl``/``remat`` select the kernel backend and backward xA policy
+    (kernels/ops.py) — plumbed *explicitly* because the context-local
+    default does not cross the cluster runner's worker threads; ``ranks``
+    is the pack's static per-adapter rank tuple, which switches
+    heterogeneous-rank packs onto ragged same-rank kernel segments (no
+    bucket-padding FLOPs). All three are part of the executor's cache key.
     """
+    # homogeneous rank tuples normalize to None: they trace identically
+    # (ragged segmentation only engages on mixed ranks), so same-width packs
+    # of different uniform ranks keep sharing one executor cache entry
+    ranks = tuple(ranks) if ranks and len(set(ranks)) > 1 else None
+    kcfg = KernelConfig(
+        impl=impl, remat=remat, ranks=ranks,
+        blocks=tuple(blocks) if blocks is not None else None,
+    )
 
     def train_step(base, lora, opt_state, batch, scales, lr_vec, budgets):
         (total, per_adapter), grads = jax.value_and_grad(
             packed_loss_fn, has_aux=True
         )(lora, base, batch, cfg, n_pack, scales,
-          dist=dist, chunk_q=chunk_q, vocab_chunk=vocab_chunk)
+          dist=dist, chunk_q=chunk_q, vocab_chunk=vocab_chunk, kcfg=kcfg)
         lora_new, opt_state = adamw_update(
             grads, opt_state, lora, lr_vec, weight_decay=weight_decay,
             step_budget=budgets,
@@ -115,17 +139,20 @@ def make_train_step(
     weight_decay: float = 0.0,
     step_budgets=None,  # (N,) per-adapter max step counts (online engine)
     jit: bool = True,
+    impl: Optional[str] = None,
+    remat: Optional[str] = None,
 ):
     lr_vec = meta.lr_vector()
     budgets = (
         jnp.asarray(step_budgets, jnp.int32) if step_budgets is not None else None
     )
+    kcfg = meta.kernel_config(impl=impl, remat=remat)
 
     def train_step(base, lora, opt_state, batch):
         (total, per_adapter), grads = jax.value_and_grad(
             loss_fn, has_aux=True
         )(lora, base, batch, cfg, meta,
-          dist=dist, chunk_q=chunk_q, vocab_chunk=vocab_chunk)
+          dist=dist, chunk_q=chunk_q, vocab_chunk=vocab_chunk, kcfg=kcfg)
         lora_new, opt_state = adamw_update(
             grads, opt_state, lora, lr_vec, weight_decay=weight_decay,
             step_budget=budgets,

@@ -94,15 +94,18 @@ class ScriptedExecutor:
         self.delay = delay
         self.clock = clock
         self.calls: List[Tuple[Tuple[int, ...], Tuple[int, ...], int]] = []
+        self.impls: List = []  # kernel impl received per segment
 
     def pack_template(self, cfg, configs, seed: int = 0):
         return None  # ClusterRunner pre-warm hook: nothing to warm
 
     def run_segment(self, seg, configs_by_cid, total_steps, cfg, base, *,
-                    seq, pool, data_iter_fn, seed, slice_):
+                    seq, pool, data_iter_fn, seed, slice_,
+                    impl=None, remat=None):
         idx = len(self.calls)
         sel = [configs_by_cid[c] for c in seg.config_ids]
         self.calls.append((seg.config_ids, seg.units, seg.run_steps))
+        self.impls.append(impl)
         if self.crash_on is not None and self.crash_on(idx, seg):
             raise InjectedCrash(f"injected crash at call {idx}")
         if self.delay:

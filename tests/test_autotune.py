@@ -1,0 +1,293 @@
+"""Autotuner: cache round-trips, sweep mechanics, and the planner feedback.
+
+The acceptance-critical case is ``test_autotuned_profile_shifts_planner``:
+an autotuned profile (measured fused rates -> ragged FLOP accounting + LoRA
+rate scale on the prior) must measurably change at least one planner
+decision versus the uncalibrated pad-aware prior.
+"""
+import threading
+
+import pytest
+
+from repro.configs.base import LoraConfig, get_config
+from repro.kernels import ops
+from repro.kernels.autotune import (
+    CANDIDATES,
+    KernelProfile,
+    _bucket_key,
+    autotune_shape,
+    fused_flops,
+    shape_bucket,
+    tune,
+)
+from repro.sched.cost_model import A100_40G, CostModel
+from repro.sched.dtm import dtm
+from repro.sched.planner import plan
+from repro.sched.profile import ObservationStore, ProfiledCostModel
+
+
+def _cfgs(ranks, seq=512, bs=1):
+    return [
+        LoraConfig(rank=r, alpha=2.0 * r, learning_rate=1e-4, batch_size=bs,
+                   seq_len=seq)
+        for r in ranks
+    ]
+
+
+def _fake_measure(best=(256, 256, 512), fused_t=1e-3, twopass_t=1.4e-3):
+    """Deterministic measure_fn: candidate `best` is 2x faster than the
+    rest; records calls so cache hits are observable."""
+    calls = []
+
+    def measure(n, m, k, l, r, blocks, backend, twopass=True):
+        calls.append((n, m, k, l, r, blocks, backend))
+        t = fused_t if (blocks is None or tuple(blocks) == best) else 2 * fused_t
+        return t, (twopass_t if twopass else None)
+
+    measure.calls = calls
+    return measure
+
+
+def test_shape_bucket_pow2():
+    assert shape_bucket(3, 200, 2048, 1000, 12) == (4, 256, 2048, 1024, 16)
+    assert shape_bucket(1, 1, 1, 1, 1) == (1, 1, 1, 1, 8)
+
+
+def test_autotune_picks_best_candidate():
+    m = _fake_measure(best=CANDIDATES[2])
+    entry = autotune_shape(4, 256, 512, 512, 64, backend="tpu", measure_fn=m)
+    assert tuple(entry["blocks"]) == CANDIDATES[2]
+    assert entry["speedup_vs_twopass"] == pytest.approx(1.4)
+    assert entry["flops_per_s"] == pytest.approx(
+        fused_flops(4, 256, 512, 512, 64) / entry["seconds"]
+    )
+    assert len(m.calls) == len(CANDIDATES)
+
+
+def test_non_tpu_backend_times_xla_once():
+    m = _fake_measure()
+    entry = autotune_shape(4, 256, 512, 512, 64, backend="cpu", measure_fn=m)
+    assert entry["blocks"] is None
+    assert len(m.calls) == 1
+
+
+def test_cache_roundtrip_and_hit(tmp_path):
+    path = str(tmp_path / "autotune.json")
+    m = _fake_measure()
+    shapes = [(4, 256, 512, 512, 64), (8, 256, 2048, 2048, 64)]
+    prof = tune(shapes, cache_path=path, backend="cpu", measure_fn=m)
+    assert len(prof.entries) == 2
+    n_calls = len(m.calls)
+    # reload: every shape is a cache hit, zero new measurements
+    prof2 = tune(shapes, cache_path=path, backend="cpu", measure_fn=m)
+    assert len(m.calls) == n_calls
+    assert prof2.entries == prof.entries
+    # same bucket, different exact shape -> still a hit
+    tune([(4, 250, 500, 510, 60)], cache_path=path, backend="cpu", measure_fn=m)
+    assert len(m.calls) == n_calls
+    # other backend gets its own namespace in the same file
+    tune(shapes[:1], cache_path=path, backend="tpu", measure_fn=m)
+    assert len(m.calls) == n_calls + len(CANDIDATES)
+    loaded = KernelProfile.load(path, backend="cpu")
+    assert loaded.best_blocks(4, 256, 512, 512, 64) is None
+    assert loaded.rate() is not None
+
+
+def test_profile_lookup_by_bucket():
+    prof = KernelProfile(backend="tpu")
+    prof.entries[_bucket_key("tpu", shape_bucket(4, 256, 512, 512, 64))] = {
+        "blocks": [128, 256, 512], "seconds": 1e-3,
+        "flops_per_s": 1e12, "speedup_vs_twopass": 1.3,
+    }
+    assert prof.best_blocks(4, 250, 500, 500, 60) == (128, 256, 512)
+    assert prof.best_blocks(4, 256, 4096, 512, 64) is None
+    assert prof.lora_speedup() == pytest.approx(1.3)
+
+
+# ---------------------------------------------------------------------------
+# Cost-model / planner feedback
+# ---------------------------------------------------------------------------
+
+
+def _profile(speedup=1.4):
+    prof = KernelProfile(backend="cpu")
+    prof.entries[_bucket_key("cpu", shape_bucket(4, 256, 2048, 2048, 64))] = {
+        "blocks": None, "seconds": 1e-3, "flops_per_s": 1e12,
+        "speedup_vs_twopass": speedup,
+    }
+    return prof
+
+
+def test_calibrate_sets_ragged_and_rate():
+    prior = CostModel(get_config("qwen25-7b"), A100_40G)
+    cal = _profile(1.4).calibrate(prior)
+    assert cal.ragged and cal.lora_rate_scale == pytest.approx(1.4)
+    assert not prior.ragged  # original untouched
+    # mixed-rank pack gets cheaper under ragged accounting + measured rate
+    configs = _cfgs((8, 64))
+    assert cal.iter_time(configs, 1, 512) < prior.iter_time(configs, 1, 512)
+    # memory stays bucketed (the pack still allocates padded weights)
+    assert cal.job_mem_bytes(configs, 1, 512) == prior.job_mem_bytes(configs, 1, 512)
+
+
+def test_uncalibrated_model_bit_identical():
+    """lora_rate_scale=1.0 / ragged=False must not perturb the prior."""
+    cfg = get_config("qwen25-7b")
+    a = CostModel(cfg, A100_40G)
+    b = CostModel(cfg, A100_40G, lora_rate_scale=1.0)
+    configs = _cfgs((8, 64, 128))
+    for d in (1, 2, 4, 8):
+        assert a.iter_time(configs, d, 512) == b.iter_time(configs, d, 512)
+
+
+def test_autotuned_profile_shifts_planner():
+    """THE acceptance assertion: the pad-aware prior keeps a rank-8 and a
+    rank-64 config in separate jobs (padding makes the mixed pack
+    expensive); the autotune-calibrated estimator knows the kernels run
+    ragged segments and packs them into one wider job."""
+    prior = CostModel(get_config("qwen25-7b"), A100_40G)
+    cal = _profile(1.4).calibrate(prior)
+    configs = _cfgs((8, 64))
+    g, seq, steps = 2, 512, 1000
+
+    def decision(cm):
+        return tuple(sorted(
+            (tuple(sorted(j.config_ids)), j.degree)
+            for j in dtm(cm, configs, g, seq, steps).jobs
+        ))
+
+    d_prior, d_cal = decision(prior), decision(cal)
+    assert d_prior != d_cal
+    assert d_prior == (((0,), 1), ((1,), 1))  # split, degree-1 each
+    assert d_cal == (((0, 1), 2),)  # packed together at degree 2
+    # and the full planner sees it too
+    s_prior = plan(prior, configs, g, seq, steps)
+    s_cal = plan(cal, configs, g, seq, steps)
+    assert len(s_prior.jobs) == 2 and len(s_cal.jobs) == 1
+
+
+def test_seed_observations_feed_profiled_model():
+    prior = CostModel(get_config("qwen25-7b"), A100_40G)
+    prof = _profile(1.4)
+    store = ObservationStore()
+    packs = [(_cfgs((8, 64)), 2, 512), (_cfgs((16, 16)), 1, 512)]
+    prof.seed_observations(store, prior, packs)
+    assert len(store) == 2
+    pm = ProfiledCostModel(prior, store)
+    cal = prof.calibrate(prior)
+    for configs, d, seq in packs:
+        # the profiled planner now answers with the fused-rate prediction
+        assert pm.iter_time(configs, d, seq) == pytest.approx(
+            cal.iter_time(configs, d, seq)
+        )
+        assert pm.iter_time(configs, d, seq) < prior.iter_time(configs, d, seq)
+    # simulation contract intact: the virtual model is still the pure prior
+    assert pm.virtual_model() is prior
+
+
+# ---------------------------------------------------------------------------
+# ContextVar impl default (satellite: no cross-thread races)
+# ---------------------------------------------------------------------------
+
+
+def test_default_impl_contextvar_scoped():
+    assert ops.default_impl() == "auto"
+    with ops.use_impl("fused"):
+        assert ops.default_impl() == "fused"
+        with ops.use_impl("xla"):
+            assert ops.default_impl() == "xla"
+        assert ops.default_impl() == "fused"
+    assert ops.default_impl() == "auto"
+
+
+def test_default_impl_does_not_leak_across_threads():
+    """set_default_impl in one thread must never race another thread's
+    resolution — each thread sees its own context (worker threads get the
+    default, which is why the executor plumbs impl explicitly)."""
+    seen = {}
+
+    def worker():
+        seen["worker"] = ops.default_impl()
+        ops.set_default_impl("pallas")
+        seen["worker_after_set"] = ops.default_impl()
+
+    with ops.use_impl("fused"):
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+        seen["main"] = ops.default_impl()
+    assert seen["worker"] == "auto"  # fresh context, not the caller's
+    assert seen["worker_after_set"] == "pallas"
+    assert seen["main"] == "fused"  # worker's set never leaked back
+
+
+def test_adaptive_engine_captures_callers_impl():
+    """_run_adaptive dispatches segments on executor threads that never see
+    the caller's contextvars — the engine must capture the caller's default
+    impl and pass it to every run_segment explicitly (regression: the
+    ContextVar migration would otherwise silently downgrade adaptive runs
+    to the default tier on multi-device hosts)."""
+    from harness import FakeRunner, NoPool, ScriptedExecutor
+
+    from repro.configs.base import get_config, reduced
+    from repro.sched.cost_model import CostModel
+    from repro.sched.engine import Arrival, ExecutionEngine
+    from repro.sched.profile import ProfiledCostModel
+
+    prior = CostModel(get_config("qwen25-7b"), A100_40G)
+    prior.setup_time = 0.0
+    est = ProfiledCostModel(prior, drift_threshold=0.5)
+    eng = ExecutionEngine(est, 1)
+    fake = ScriptedExecutor(prior, slow=1.0)
+    with ops.use_impl("fused"):
+        eng.run_online_local(
+            [Arrival(0.0, _cfgs((8,), seq=128)[0], 8)],
+            reduced(get_config("qwen25-7b")),
+            None,
+            n_steps=8,
+            seq=128,
+            pool=NoPool(),
+            runner=FakeRunner(fake, 1),
+            probe_steps=2,
+        )
+    assert fake.impls and all(i == "fused" for i in fake.impls)
+
+
+def test_runner_captures_callers_impl(monkeypatch):
+    """ClusterRunner.run captures the *calling* context's impl and threads
+    it to run_segment explicitly (workers can't see the contextvar)."""
+    from repro.cluster.runner import ClusterRunner
+
+    captured = {}
+
+    class FakeExecutor:
+        def pack_template(self, *a, **k):
+            return None
+
+        def run_segment(self, seg, *a, **k):
+            captured["impl"] = k.get("impl")
+
+            class R:
+                wall_seconds = 0.0
+                real_start = 0.0
+                real_end = 0.0
+
+            return R()
+
+    runner = ClusterRunner(executor=FakeExecutor(), concurrent=False)
+
+    class Seg:
+        start = 0.0
+        job_id = 0
+        config_ids = (0,)
+        start_steps = (0,)
+        done_ids = (0,)
+        preempted = False
+        run_steps = 1
+        degree = 1
+        units = ()
+
+    cfgs = {0: _cfgs((8,))[0]}
+    with ops.use_impl("fused"):
+        runner.run([Seg()], cfgs, {0: 1}, None, None, seq=8)
+    assert captured["impl"] == "fused"

@@ -11,7 +11,12 @@ import numpy as np
 import pytest
 from _hyp import given, settings, st  # guarded hypothesis import (skips sans hypothesis)
 
-from repro.kernels.ops import packed_lora_delta, grouped_matmul
+from repro.kernels.ops import (
+    delta_flops,
+    grouped_matmul,
+    packed_lora_delta,
+    rank_segments,
+)
 from repro.kernels.packed_matmul import packed_matmul
 from repro.kernels import ref
 
@@ -177,6 +182,68 @@ def test_rank_padding_exact(n, r_real, r_pad):
     )(a_padded, b_padded)
     # gradient w.r.t. padded region of B is exactly 0 (A-pad columns are 0)
     np.testing.assert_allclose(np.asarray(gb_p[:, r_real:, :]), 0.0, atol=1e-6)
+
+
+def test_rank_segments_structure():
+    order, inv, segs = rank_segments((8, 4, 8, 16, 4))
+    assert order == (1, 4, 0, 2, 3)
+    assert segs == [(0, 2, 4), (2, 4, 8), (4, 5, 16)]
+    # inv undoes order
+    assert tuple(order[i] for i in inv) != inv  # non-trivial permutation
+    assert [order[inv[i]] for i in range(5)] == list(range(5))
+    # homogeneous pack: one segment, identity order
+    order, inv, segs = rank_segments((8, 8, 8))
+    assert order == (0, 1, 2) and segs == [(0, 3, 8)]
+
+
+def test_delta_flops_ragged_savings():
+    ranks = (8, 8, 64, 64)
+    padded = delta_flops(ranks, 2048, 2048, 16, ragged=False)
+    ragged = delta_flops(ranks, 2048, 2048, 16, ragged=True)
+    # bucket = 64: the two rank-8 adapters each save (64-8)/64 of their work
+    assert padded == pytest.approx(4 * 2.0 * 16 * 64 * 4096)
+    assert ragged == pytest.approx(2.0 * 16 * 4096 * (8 + 8 + 64 + 64))
+    assert ragged < padded
+    # homogeneous packs save nothing
+    assert delta_flops((16, 16), 64, 64, 8, ragged=True) == delta_flops(
+        (16, 16), 64, 64, 8, ragged=False
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    ranks=st.lists(st.integers(1, 24), min_size=2, max_size=5),
+)
+def test_ragged_segments_match_padded_property(ranks):
+    """Property (ISSUE 5 satellite): for ANY rank mixture, ragged same-rank
+    segments produce the padded pack's values, and the sliced-off padding
+    receives bit-zero gradient — the region where zero-padding used to
+    contribute (numerically) zero now structurally contributes nothing."""
+    ranks = tuple(ranks)
+    n, t, d, k = len(ranks), 6, 20, 16
+    bucket = max(ranks)
+    keys = jax.random.split(jax.random.PRNGKey(sum(ranks)), 3)
+    x = _rand(keys[0], (n, t, d), jnp.float32)
+    a = _rand(keys[1], (n, d, bucket), jnp.float32)
+    b = _rand(keys[2], (n, bucket, k), jnp.float32)
+    mask_a = jnp.arange(bucket)[None, None, :] < jnp.asarray(ranks)[:, None, None]
+    mask_b = jnp.arange(bucket)[None, :, None] < jnp.asarray(ranks)[:, None, None]
+    a, b = a * mask_a, b * mask_b
+    alpha = jnp.ones((n,))
+
+    out_p = packed_lora_delta(x, a, b, alpha)
+    out_r = packed_lora_delta(x, a, b, alpha, ranks=ranks)
+    np.testing.assert_allclose(
+        np.asarray(out_r), np.asarray(out_p), rtol=2e-5, atol=2e-5
+    )
+
+    ga, gb = jax.grad(
+        lambda a, b: (packed_lora_delta(x, a, b, alpha, ranks=ranks) ** 2).sum(),
+        argnums=(0, 1),
+    )(a, b)
+    for i, r in enumerate(ranks):
+        assert (np.asarray(ga)[i, :, r:] == 0.0).all()
+        assert (np.asarray(gb)[i, r:, :] == 0.0).all()
 
 
 def test_grouped_matmul_dispatch():
