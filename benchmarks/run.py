@@ -98,6 +98,7 @@ def main(argv=None):
         bench_planner,
         bench_quality,
         bench_roofline,
+        bench_serve,
     )
 
     benches = {
@@ -107,6 +108,7 @@ def main(argv=None):
         "cluster": ("Cluster executor: concurrent mesh slices vs sequential", bench_cluster.run),
         "adaptive": ("Profile feedback loop: adaptive re-planning vs mis-calibrated prior", bench_adaptive.run),
         "multihost": ("Multi-host dispatch tier: 2x4 hosts vs 1x4 on one workload", bench_multihost.run),
+        "serve": ("Serve tier: continuous multi-LoRA batching vs sequential decode", bench_serve.run),
         "job_throughput": ("Fig. 5: packed-job throughput", bench_job_throughput.run),
         "job_throughput_a10": ("Fig. 7 / §7.5: A10 + QLoRA", lambda fast: bench_job_throughput.run_a10(fast)),
         "breakdown": ("Fig. 6: speedup breakdown", bench_breakdown.run),
@@ -166,6 +168,12 @@ def main(argv=None):
             if sp:
                 checks.append(("multi-host 2x4 vs 1x4 makespan (>=1.1x)", f"{sp[0]['speedup_multihost']:.2f}x"))
                 checks.append(("multi-host per-adapter losses bit-exact vs 1-host", str(all(r["losses_bitexact"] for r in sp))))
+        if name == "serve" and rows:
+            sp = [r for r in rows if r["mode"] == "speedup"]
+            if sp:
+                checks.append(("continuous batching vs sequential decode, tokens/s (>=1.5x)", f"{sp[0]['speedup_serve']:.2f}x"))
+                checks.append(("served tokens bit-exact vs per-request baseline", str(all(r["tokens_bitexact"] for r in sp))))
+                checks.append(("distinct adapters served in one batch", str(sp[0]["adapters_served"])))
         if name == "adaptive" and rows:
             sp = [r for r in rows if r["mode"] == "speedup"]
             if sp:

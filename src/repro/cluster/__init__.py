@@ -6,14 +6,19 @@ model config, pack width), and ``ClusterRunner`` drives planned segments
 onto slices with thread-per-slice dispatch — so concurrent LoRA jobs
 scheduled on different device groups actually overlap in wall-clock time.
 """
+from repro.cluster.api import Runner
 from repro.cluster.executor import NO_BUDGET, PackResult, SliceExecutor
 from repro.cluster.multihost import (
+    CheckpointWrite,
     DispatchExecutor,
     HostDispatcher,
     HostUnit,
     HostWorker,
+    KernelPolicy,
     MemoryPool,
+    RecordMsg,
     RemoteSegmentError,
+    SegmentMsg,
     TransportError,
     WorkerDied,
 )
@@ -32,6 +37,7 @@ from repro.cluster.runner import (
 )
 
 __all__ = [
+    "Runner",
     "NO_BUDGET",
     "PackResult",
     "SliceExecutor",
@@ -44,6 +50,10 @@ __all__ = [
     "SegmentTiming",
     "peak_overlap",
     "resume_deps",
+    "CheckpointWrite",
+    "KernelPolicy",
+    "RecordMsg",
+    "SegmentMsg",
     "DispatchExecutor",
     "HostDispatcher",
     "HostUnit",

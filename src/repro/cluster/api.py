@@ -1,0 +1,81 @@
+"""The runner contract: what it means to execute planned segments.
+
+Before this module the contract was folklore — ``ClusterRunner`` defined it
+implicitly, ``HostDispatcher`` duck-typed it ("duck-types as a
+ClusterRunner"), and the engine's ``_execute_segments``/``_run_adaptive``
+assumed it. Everything that *drives* runners (``ExecutionEngine``,
+benchmarks, launch scripts) now types against :class:`Runner`, and every
+implementation — :class:`~repro.cluster.runner.ClusterRunner` (thread-per-
+slice, one host), :class:`~repro.cluster.multihost.HostDispatcher`
+(process-per-host), :class:`~repro.serve.engine.ServeEngine` (training
+segments sharing a device pool with a live decode loop) and the test fakes
+in ``tests/harness.py`` — conforms to it (asserted by the conformance test
+parametrized over all of them).
+
+The protocol is ``runtime_checkable`` so ``isinstance(x, Runner)`` verifies
+the *surface* (methods + attributes exist); the conformance test exercises
+the semantics (dispatch order, pool accounting, records).
+"""
+from __future__ import annotations
+
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    Optional,
+    Protocol,
+    Sequence,
+    runtime_checkable,
+)
+
+
+@runtime_checkable
+class Runner(Protocol):
+    """Executes planned :class:`~repro.sched.engine.JobSegment`s for real.
+
+    Required surface:
+
+    ``executor``
+        The segment executor (``SliceExecutor``-shaped: ``run_segment`` +
+        ``pack_template``). The engine's adaptive loop calls through it for
+        probe segments.
+    ``device_pool``
+        The :class:`~repro.cluster.pool.DevicePool` backing execution.
+        Device-free events the scheduler plans against come from this pool's
+        real acquire/release traffic.
+    ``concurrent``
+        Whether segments on disjoint slices genuinely overlap in wall time
+        (thread-per-slice / process-per-host) or run serially (the
+        degenerate 1-device mode).
+    ``run(...)``
+        Execute a batch of segments and return a
+        :class:`~repro.cluster.runner.ClusterResult`. Contract: segments
+        dispatch in virtual ``(start, job_id)`` order; a segment blocks on
+        its resume dependencies and then on its *planned* units; the pool
+        must drain back to its entry free count at exit (leases held by
+        others — e.g. a live serve loop — are not the runner's to release); ``estimator.observe`` is fed
+        measured step times; ``impl``/``remat`` select the kernel policy for
+        every segment (``None`` = capture the caller's context default).
+    """
+
+    executor: Any
+    device_pool: Any
+    concurrent: bool
+
+    def run(
+        self,
+        segments: Sequence,  # JobSegment
+        configs_by_cid: Dict,
+        total_steps: Dict[int, int],
+        cfg,
+        base_params,
+        *,
+        seq: int,
+        pool=None,  # CheckpointPool
+        data_iter_fn: Optional[Callable] = None,
+        seed: int = 0,
+        estimator=None,
+        impl: Optional[str] = None,
+        remat: Optional[str] = None,
+    ):
+        ...

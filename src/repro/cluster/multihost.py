@@ -22,12 +22,12 @@ different transport, real) hosts:
     the segment's residual simply re-enters the existing preempt/resume
     path on a fresh worker).
   * :class:`HostDispatcher` — extends :class:`DevicePool` addressing to
-    ``(host, unit)`` pairs (:class:`HostUnit`) and duck-types as a
-    ``ClusterRunner``: ``.run`` executes planned segments process-per-host,
-    and ``.executor``/``.device_pool`` plug straight into
-    ``ExecutionEngine._run_adaptive`` — real device-free and checkpoint-
-    ready events surface back into the engine's online/adaptive loops
-    unchanged, so ``plan_online``, migration, probes, and the
+    ``(host, unit)`` pairs (:class:`HostUnit`) and implements the
+    :class:`~repro.cluster.api.Runner` protocol: ``run`` executes planned
+    segments process-per-host, and ``.executor``/``.device_pool`` plug
+    straight into ``ExecutionEngine._run_adaptive`` — real device-free and
+    checkpoint-ready events surface back into the engine's online/adaptive
+    loops unchanged, so ``plan_online``, migration, probes, and the
     ``ProfiledCostModel`` feedback all work across hosts.
 
 Plan host-aware (``ExecutionEngine(cm, g, host_size=...)``) so every
@@ -56,8 +56,12 @@ import numpy as np
 # Wire protocol
 # ---------------------------------------------------------------------------
 #
-# Every message is ``(kind, payload_dict)`` with plain-python / numpy payloads
-# so the protocol survives pickling across process boundaries bit-exactly.
+# Every message is ``(kind, payload)``; payload *contents* are the typed
+# dataclasses below (:class:`SegmentMsg`, :class:`RecordMsg`,
+# :class:`CheckpointWrite`, :class:`KernelPolicy`) plus plain-python / numpy
+# scalars and ``encode_tree``'d arrays, so the protocol survives pickling
+# across process boundaries bit-exactly AND a field rename breaks loudly at
+# construction instead of silently at a remote KeyError.
 #
 #   dispatcher -> worker:  ("init", state) ("run", request) ("stop", {})
 #   worker -> dispatcher:  ("ready", info) ("done", result) ("err", failure)
@@ -84,45 +88,98 @@ def encode_tree(tree):
     return np.asarray(tree)
 
 
+@dataclass(frozen=True)
+class SegmentMsg:
+    """One :class:`~repro.sched.engine.JobSegment` on the wire — same
+    fields, but a plain frozen dataclass so the wire format is decoupled
+    from the scheduler's type (and picklable without importing it)."""
+
+    job_id: int
+    config_ids: Tuple[int, ...]
+    degree: int
+    start: float
+    end: float
+    start_steps: Tuple[int, ...]
+    run_steps: int
+    done_ids: Tuple[int, ...]
+    preempted: bool
+    units: Tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class RecordMsg:
+    """A finished segment's :class:`~repro.sched.engine.JobRecord` on the
+    wire (losses as host numpy; wall time measured on the worker clock)."""
+
+    config_ids: Tuple[int, ...]
+    degree: int
+    start: float
+    end: float
+    wall_seconds: float
+    losses: Optional[np.ndarray]
+
+
+@dataclass(frozen=True)
+class CheckpointWrite:
+    """One captured checkpoint-pool write: a finished adapter
+    (``kind="adapter"``) or preempted per-adapter training state
+    (``kind="state"``). ``tree`` is ``encode_tree``'d (host numpy)."""
+
+    kind: str  # "adapter" | "state"
+    adapter_id: str
+    tree: dict
+    meta: dict
+
+
+@dataclass(frozen=True)
+class KernelPolicy:
+    """The kernel policy a segment must run under (``--impl`` / ``--remat``).
+
+    Shipped with every run request so host workers execute the same kernel
+    tier the caller (and their autotuned cost model) selected — previously
+    multi-host dispatch rejected any non-default policy."""
+
+    impl: Optional[str] = None  # None/"auto" = executor default
+    remat: Optional[str] = None  # None = executor default ("save")
+
+
 _SEGMENT_FIELDS = (
     "job_id", "config_ids", "degree", "start", "end",
     "start_steps", "run_steps", "done_ids", "preempted", "units",
 )
 
 
-def encode_segment(seg) -> Dict[str, Any]:
-    return {f: getattr(seg, f) for f in _SEGMENT_FIELDS}
+def encode_segment(seg) -> SegmentMsg:
+    return SegmentMsg(**{f: getattr(seg, f) for f in _SEGMENT_FIELDS})
 
 
-def decode_segment(d: Dict[str, Any]):
+def decode_segment(m: SegmentMsg):
     from repro.sched.engine import JobSegment
 
-    return JobSegment(**d)
+    return JobSegment(**{f: getattr(m, f) for f in _SEGMENT_FIELDS})
 
 
-def encode_record(rec) -> Dict[str, Any]:
-    return {
-        "config_ids": tuple(rec.job.config_ids),
-        "degree": rec.job.degree,
-        "start": rec.job.start,
-        "end": rec.job.end,
-        "wall_seconds": rec.wall_seconds,
-        "losses": (
+def encode_record(rec) -> RecordMsg:
+    return RecordMsg(
+        config_ids=tuple(rec.job.config_ids),
+        degree=rec.job.degree,
+        start=rec.job.start,
+        end=rec.job.end,
+        wall_seconds=rec.wall_seconds,
+        losses=(
             None if rec.final_losses is None else np.asarray(rec.final_losses)
         ),
-    }
+    )
 
 
-def decode_record(d: Dict[str, Any]):
+def decode_record(m: RecordMsg):
     from repro.sched.engine import JobRecord
     from repro.sched.planner import ScheduledJob
 
     return JobRecord(
-        ScheduledJob(
-            tuple(d["config_ids"]), d["degree"], d["start"], d["end"]
-        ),
-        d["wall_seconds"],
-        d["losses"],
+        ScheduledJob(tuple(m.config_ids), m.degree, m.start, m.end),
+        m.wall_seconds,
+        m.losses,
     )
 
 
@@ -137,7 +194,7 @@ class MemoryPool:
 
     def __init__(self, states: Optional[Dict[str, Tuple[dict, dict]]] = None):
         self.states = dict(states or {})
-        self.writes: List[Tuple[str, str, dict, dict]] = []
+        self.writes: List[CheckpointWrite] = []
 
     def has_adapter_state(self, adapter_id: str) -> bool:
         return adapter_id in self.states
@@ -147,11 +204,15 @@ class MemoryPool:
         return tree, meta
 
     def save_adapter_state(self, adapter_id: str, state_tree, meta: dict):
-        self.writes.append(("state", adapter_id, encode_tree(state_tree), meta))
+        self.writes.append(
+            CheckpointWrite("state", adapter_id, encode_tree(state_tree), meta)
+        )
 
     def save_adapter(self, adapter_id: str, adapter_tree, meta: dict):
         self.writes.append(
-            ("adapter", adapter_id, encode_tree(adapter_tree), meta)
+            CheckpointWrite(
+                "adapter", adapter_id, encode_tree(adapter_tree), meta
+            )
         )
 
 
@@ -199,6 +260,7 @@ def _worker_main(host_id: int, n_devices: int, inbox, outbox) -> None:
         rid = payload["req"]
         try:
             seg = decode_segment(payload["seg"])
+            policy = payload.get("policy") or KernelPolicy()
             mempool = (
                 MemoryPool(payload["states"]) if payload["has_pool"] else None
             )
@@ -214,6 +276,8 @@ def _worker_main(host_id: int, n_devices: int, inbox, outbox) -> None:
                     data_iter_fn=state["data_iter_fn"],
                     seed=state["seed"],
                     slice_=slice_,
+                    impl=policy.impl,
+                    remat=policy.remat,
                 )
             outbox.put(
                 ("done", {
@@ -492,16 +556,6 @@ class DispatchExecutor:
         impl: Optional[str] = None,
         remat: Optional[str] = None,
     ):
-        # the kernel policy is not shipped over the wire yet (ROADMAP open
-        # item): host workers always run the default tier. A non-default
-        # request must fail loudly here, not silently execute a different
-        # kernel than the caller (and their autotuned cost model) expect.
-        if impl not in (None, "auto") or remat is not None:
-            raise NotImplementedError(
-                f"multi-host dispatch cannot ship kernel policy impl={impl!r}"
-                f"/remat={remat!r} to host workers yet; run with the default "
-                "tier or use a single-host runner"
-            )
         d = self.disp
         if slice_ is None:
             raise ValueError(
@@ -533,6 +587,11 @@ class DispatchExecutor:
             "units": local_units,
             "states": states,
             "has_pool": pool is not None,
+            # the caller's kernel policy rides with every segment: workers
+            # run exactly the tier the dispatcher-side planner selected
+            "policy": KernelPolicy(
+                impl=None if impl == "auto" else impl, remat=remat
+            ),
         }
         t_start = time.perf_counter()
         last_died: Optional[WorkerDied] = None
@@ -549,11 +608,11 @@ class DispatchExecutor:
                 continue  # respawn + re-dispatch: the preempt/resume path
             rec = decode_record(out["record"])
             if pool is not None:
-                for kind, aid, tree, meta in out["writes"]:
-                    if kind == "adapter":
-                        pool.save_adapter(aid, tree, meta)
+                for w in out["writes"]:
+                    if w.kind == "adapter":
+                        pool.save_adapter(w.adapter_id, w.tree, w.meta)
                     else:
-                        pool.save_adapter_state(aid, tree, meta)
+                        pool.save_adapter_state(w.adapter_id, w.tree, w.meta)
             # dispatcher-clock interval (worker clocks aren't comparable);
             # ClusterRunner/_run_adaptive re-base these against their t0
             rec.real_start = t_start
@@ -568,7 +627,7 @@ class DispatchExecutor:
 class HostDispatcher:
     """Process-per-host execution of planned segments.
 
-    Duck-types as a :class:`~repro.cluster.runner.ClusterRunner`: ``run``
+    Implements the :class:`~repro.cluster.api.Runner` protocol: ``run``
     executes a batch of segments (via an internal ``ClusterRunner`` whose
     executor is remote), and ``.executor`` / ``.device_pool`` /
     ``.concurrent`` plug into ``ExecutionEngine._run_adaptive`` directly.
@@ -741,7 +800,7 @@ class HostDispatcher:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    # -- ClusterRunner interface --------------------------------------------
+    # -- Runner protocol ----------------------------------------------------
 
     def run(
         self,
@@ -756,11 +815,14 @@ class HostDispatcher:
         data_iter_fn=None,
         seed: int = 0,
         estimator=None,
+        impl: Optional[str] = None,
+        remat: Optional[str] = None,
     ):
         """Execute planned segments across the hosts — same contract as
         :meth:`ClusterRunner.run` (dispatch order, resume dependencies,
         device-free events from real completions, timings feedback), with
-        each segment running in its host's worker process."""
+        each segment running in its host's worker process. ``impl``/``remat``
+        ship to the workers as a :class:`KernelPolicy` with every segment."""
         from repro.cluster.runner import ClusterRunner
 
         runner = ClusterRunner(
@@ -777,6 +839,8 @@ class HostDispatcher:
             data_iter_fn=data_iter_fn,
             seed=seed,
             estimator=estimator,
+            impl=impl,
+            remat=remat,
         )
         self.last_result = result
         return result

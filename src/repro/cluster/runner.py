@@ -119,6 +119,7 @@ def peak_overlap(intervals: Sequence[Tuple[float, float]]) -> int:
 class ClusterRunner:
     """Drives planned segments onto a :class:`DevicePool`.
 
+    The reference :class:`~repro.cluster.api.Runner` implementation.
     ``concurrent=None`` (default) auto-selects: concurrent when the pool
     holds more than one device, else the degenerate sequential mode — which
     is bit-for-bit the old single-host execution path."""
@@ -151,6 +152,7 @@ class ClusterRunner:
         seed: int = 0,
         estimator=None,  # Optional[repro.sched.cost_model.CostEstimator]
         impl: Optional[str] = None,
+        remat: Optional[str] = None,
     ) -> ClusterResult:
         """Execute planned segments. With an ``estimator``, each segment's
         predicted per-iteration time is captured at dispatch and its measured
@@ -158,15 +160,20 @@ class ClusterRunner:
         no-op for the pure analytic prior) — the measured/predicted pairs are
         surfaced on ``ClusterResult.timings`` either way.
 
-        ``impl`` selects the kernel backend for every segment; when None the
-        *caller's* context-local default (``ops.default_impl()``) is captured
-        here — worker threads never see the caller's contextvars, so the
-        policy must cross the thread boundary as an explicit argument."""
+        ``impl``/``remat`` select the kernel policy for every segment; when
+        ``impl`` is None the *caller's* context-local default
+        (``ops.default_impl()``) is captured here — worker threads never see
+        the caller's contextvars, so the policy must cross the thread
+        boundary as an explicit argument."""
         if impl is None:
             from repro.kernels.ops import default_impl
 
             impl = default_impl()
         impl = None if impl == "auto" else impl
+        # the pool may be shared with a live serve loop holding its own
+        # lease: the drain invariant is "free count returns to what it was
+        # at entry", not "fully free"
+        free0 = self.device_pool.free
         order = sorted(segments, key=lambda s: (s.start, s.job_id))
         done_events = [threading.Event() for _ in order]
         deps = resume_deps(order)
@@ -192,6 +199,7 @@ class ClusterRunner:
                         seed=seed,
                         slice_=slice_,
                         impl=impl,
+                        remat=remat,
                     )
                     results[idx] = rec
                     if estimator is not None and seg.run_steps > 0:
@@ -260,8 +268,11 @@ class ClusterRunner:
                 tpe.shutdown(wait=True)
         if errors:
             raise errors[0]
-        leaked = self.device_pool.total - self.device_pool.free
-        if leaked:
+        # free dropping below its entry level means a segment path here
+        # released without a lease; a *rise* just means some foreign lease
+        # (e.g. a serve loop's) was returned while we ran — not ours to flag
+        leaked = free0 - self.device_pool.free
+        if leaked > 0:
             raise RuntimeError(
                 f"device pool leaked {leaked} unit(s) at run exit — a "
                 "segment path released without going through a lease"

@@ -70,9 +70,11 @@ def _run_multihost(args, cfg, configs):
     eng = ExecutionEngine(est, g, host_size=per)
     with HostDispatcher(args.hosts, per) as disp:
         t0 = time.perf_counter()
+        # --impl/--remat ride the wire as a KernelPolicy with every
+        # segment, so each host worker runs the tier selected here
         records, makespan = eng.run_local(
             sched, configs, cfg, base, n_steps=args.steps, seq=args.seq,
-            pool=pool, runner=disp,
+            pool=pool, runner=disp, impl=args.impl, remat=args.remat,
         )
         elapsed = time.perf_counter() - t0
     result = disp.last_result
@@ -193,10 +195,6 @@ def main():
                      "--seq-parallel/--save-state/--resume-state (per-job "
                      "parallelism comes from the planner; use "
                      "--devices-per-host for host width)")
-        if args.impl not in (None, "auto") or args.remat:
-            ap.error("--impl/--remat are not plumbed over the multi-host "
-                     "wire protocol yet; host workers run the default "
-                     "kernel tier")
         _run_multihost(args, cfg, configs)
         return
 

@@ -118,7 +118,9 @@ def flash_attention(
 
 def decode_attention(q, k, v, pos, *, window: int = 0, scale=None):
     """Single-step attention against a cache. q: (B, 1, H, D);
-    k/v: (B, Smax, KV, D*); pos: () current position (entries > pos masked)."""
+    k/v: (B, Smax, KV, D*); pos: () shared position, or (B,) per-row
+    positions (continuous batching — each row is its own request). Cache
+    entries beyond a row's position are masked."""
     b, _, h, d = q.shape
     kv = k.shape[2]
     g = h // kv
@@ -128,10 +130,16 @@ def decode_attention(q, k, v, pos, *, window: int = 0, scale=None):
     scores = jnp.einsum(
         "bhgd,bkhd->bhgk", qg, k, preferred_element_type=jnp.float32
     ) * scale
-    mask = kpos <= pos
-    if window:
-        mask &= (pos - kpos) < window
-    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    if jnp.ndim(pos) > 0:
+        mask = kpos[None, :] <= pos[:, None]  # (B, Smax)
+        if window:
+            mask &= (pos[:, None] - kpos[None, :]) < window
+        scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    else:
+        mask = kpos <= pos
+        if window:
+            mask &= (pos - kpos) < window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v.dtype), v)
     return out.reshape(b, 1, h, v.shape[-1])
@@ -198,9 +206,17 @@ def apply_gqa(
             q = apply_rope(q, cos, sin)
             k = apply_rope(k, cos, sin)
         if cache is not None:
-            # decode: write this step's k/v at `pos`, attend to <= pos
-            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            # decode: write this step's k/v at `pos`, attend to <= pos.
+            # Vector pos = per-row positions: each row writes at its own slot.
+            if jnp.ndim(pos) > 0:
+                row_upd = jax.vmap(
+                    lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0, 0))
+                )
+                ck = row_upd(cache["k"], k.astype(cache["k"].dtype), pos)
+                cv = row_upd(cache["v"], v.astype(cache["v"].dtype), pos)
+            else:
+                ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
             out = decode_attention(q, ck, cv, pos, window=window)
             new_cache = {"k": ck, "v": cv}
         else:
@@ -304,13 +320,24 @@ def apply_mla(
         out = flash_attention(q, k, v, causal=True, chunk_q=chunk_q, scale=scale)
         new_cache = {"ckv": ckv, "k_rope": k_rope[:, :, 0, :]} if make_cache else None
     else:
-        # absorbed decode: score against the compressed cache directly
-        ckv_c = jax.lax.dynamic_update_slice(
-            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0)
-        )
-        kr_c = jax.lax.dynamic_update_slice(
-            cache["k_rope"], k_rope[:, :, 0, :].astype(cache["k_rope"].dtype), (0, pos, 0)
-        )
+        # absorbed decode: score against the compressed cache directly.
+        # Vector pos = per-row positions (continuous batching).
+        if jnp.ndim(pos) > 0:
+            row_upd = jax.vmap(
+                lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0))
+            )
+            ckv_c = row_upd(cache["ckv"], ckv.astype(cache["ckv"].dtype), pos)
+            kr_c = row_upd(
+                cache["k_rope"],
+                k_rope[:, :, 0, :].astype(cache["k_rope"].dtype), pos,
+            )
+        else:
+            ckv_c = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0)
+            )
+            kr_c = jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope[:, :, 0, :].astype(cache["k_rope"].dtype), (0, pos, 0)
+            )
         wk = params["kv_b_k"]["w"].reshape(acfg.kv_lora_rank, h, dn)
         # absorb W_uk into q: (NB,1,H,dn) x (kvlr,H,dn) -> (NB,H,kvlr)
         q_abs = jnp.einsum("bshd,rhd->bhr", q_nope, wk.astype(q_nope.dtype))
@@ -324,7 +351,12 @@ def apply_mla(
         )
         scores = (s1 + s2) * scale
         kpos = jnp.arange(ckv_c.shape[1])
-        scores = jnp.where((kpos <= pos)[None, None], scores, -1e30)
+        if jnp.ndim(pos) > 0:
+            scores = jnp.where(
+                (kpos[None, :] <= pos[:, None])[:, None, :], scores, -1e30
+            )
+        else:
+            scores = jnp.where((kpos <= pos)[None, None], scores, -1e30)
         p = jax.nn.softmax(scores, axis=-1)
         # attend in compressed space then expand through W_uv
         ctx = jnp.einsum("bhk,bkr->bhr", p.astype(ckv_c.dtype), ckv_c)

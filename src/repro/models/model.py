@@ -155,7 +155,7 @@ def decode_step(
     scales,
     token: jnp.ndarray,  # (NB, 1) int32
     caches,
-    pos,  # () int32 — current write/attend position
+    pos,  # () int32 shared, or (NB,) int32 per-row write/attend positions
     cfg: ModelConfig,
     *,
     n_pack: int = 1,
@@ -167,7 +167,10 @@ def decode_step(
     return (logits (NB, 1, V), new_caches). For enc-dec models the cached
     cross-KV is used unless `enc_out` is passed explicitly."""
     x = jnp.take(base["embed"]["w"], token, axis=0)
-    rc = make_rope_cache(cfg, pos[None] if jnp.ndim(pos) == 0 else pos)
+    # scalar pos -> shared (1, D/2) tables; vector pos (NB,) -> per-row
+    # (NB, 1, D/2) tables (apply_rope's per-example decode layout). A flat
+    # (NB,) argument would build (NB, D/2) tables that broadcast wrongly.
+    rc = make_rope_cache(cfg, pos[None] if jnp.ndim(pos) == 0 else pos[:, None])
     specs = layer_specs(cfg)
     x, new_caches, _ = apply_stack(
         base["decoder"], lora.get("decoder", {"blocks": {}, "rest": {}}),

@@ -359,13 +359,20 @@ class ExecutionEngine:
         data_iter_fn: Optional[Callable] = None,
         seed: int = 0,
         runner=None,  # Optional[repro.cluster.ClusterRunner]
+        impl: Optional[str] = None,
+        remat: Optional[str] = None,
     ) -> Tuple[List[JobRecord], float]:
         """Execute every job of a static schedule on this host through the
         cluster subsystem. Concurrent runners (multi-device hosts) return
         the *real* wall-clock makespan — overlapping groups genuinely
         overlap; the degenerate sequential runner returns the what-if
         makespan (each job's simulated duration replaced by its measured
-        wall time, replayed through the resource timeline)."""
+        wall time, replayed through the resource timeline).
+
+        ``impl``/``remat`` select the kernel policy for every job; the
+        runner carries them to each segment (over the wire, for multi-host
+        runners). ``impl=None`` falls back to the caller's context-local
+        default inside :meth:`Runner.run`."""
         from repro.cluster import assign_units
 
         units = assign_units(
@@ -398,6 +405,8 @@ class ExecutionEngine:
             data_iter_fn=data_iter_fn,
             seed=seed,
             runner=runner,
+            impl=impl,
+            remat=remat,
         )
         if result.concurrent:
             makespan = result.makespan
@@ -1137,6 +1146,8 @@ class ExecutionEngine:
         data_iter_fn: Optional[Callable],
         seed: int,
         runner=None,  # Optional[repro.cluster.ClusterRunner]
+        impl: Optional[str] = None,
+        remat: Optional[str] = None,
     ):
         """Execute planned segments through ``repro.cluster``: each segment
         runs on the mesh slice backing its planned device units, thread-per-
@@ -1162,6 +1173,8 @@ class ExecutionEngine:
             data_iter_fn=data_iter_fn,
             seed=seed,
             estimator=self.cm,
+            impl=impl,
+            remat=remat,
         )
 
 

@@ -1,3 +1,28 @@
 from repro.serve.decode import generate, make_prefill, make_serve_step, pad_caches
+from repro.serve.engine import (
+    AdapterSlotCache,
+    ServeEngine,
+    ServeExecutor,
+    ServeRequest,
+    ServeResult,
+    ServeStats,
+    default_executor,
+    poisson_requests,
+    write_row_caches,
+)
 
-__all__ = ["generate", "make_prefill", "make_serve_step", "pad_caches"]
+__all__ = [
+    "generate",
+    "make_prefill",
+    "make_serve_step",
+    "pad_caches",
+    "AdapterSlotCache",
+    "ServeEngine",
+    "ServeExecutor",
+    "ServeRequest",
+    "ServeResult",
+    "ServeStats",
+    "default_executor",
+    "poisson_requests",
+    "write_row_caches",
+]

@@ -98,22 +98,34 @@ def generate(
     *,
     dist=None,
     batch_extra=None,
+    executor=None,
 ):
-    """Greedy generation: prefill the prompt, then decode n_new tokens."""
+    """Greedy generation: prefill the prompt, then decode n_new tokens.
+
+    Compilation goes through a :class:`~repro.serve.engine.ServeExecutor`
+    (the process-default one unless ``executor`` is given), so repeated
+    calls with the same config/pack shape reuse the jitted prefill/step
+    instead of rebuilding and re-tracing the closures every invocation."""
+    from repro.serve.engine import default_executor
+
+    ex = executor if executor is not None else default_executor()
+    scales = meta.scales() if meta else jnp.ones((1,), jnp.float32)
+    n_pack = meta.n if meta else 1
     s_prompt = prompt_tokens.shape[1]
     # VLM prefixes extend the cached sequence by the patch count
     s_total = s_prompt + (cfg.n_patch_tokens if cfg.n_patch_tokens else 0)
     batch = {"tokens": prompt_tokens}
     if batch_extra:
         batch.update(batch_extra)
-    prefill_fn = make_prefill(cfg, meta, dist=dist)
-    lg, caches = prefill_fn(base, lora, batch)
+    lg, caches = ex.prefill_fn(cfg, n_pack, dist=dist)(base, lora, scales, batch)
     caches = pad_caches(caches, s_total + n_new)
-    step_fn = make_serve_step(cfg, meta, dist=dist)
+    step_fn = ex.step_fn(cfg, n_pack, dist=dist)
     tok = jnp.argmax(lg[:, -1, :], -1).astype(jnp.int32)
     out = [tok]
     pos0 = s_total
     for i in range(n_new - 1):
-        tok, lg, caches = step_fn(base, lora, caches, tok[:, None], jnp.int32(pos0 + i))
+        tok, lg, caches = step_fn(
+            base, lora, scales, caches, tok[:, None], jnp.int32(pos0 + i)
+        )
         out.append(tok)
     return jnp.stack(out, axis=1)  # (NB, n_new)

@@ -1,0 +1,716 @@
+"""Continuous-batching multi-LoRA serving engine (train-to-serve tier).
+
+The decode batch has a fixed width of ``rows`` independent slots. Each row
+carries its *own* adapter — the packed-LoRA delta dispatch that accelerates
+tuning (``lora_linear`` over ``n_pack`` adapters) runs here at row
+granularity: ``n_pack == rows`` with a per-row batch of 1, per-row scales,
+and per-row decode positions (the vector-``pos`` path of
+``models.model.decode_step``). Admission and retirement are per *token
+step*: when a row finishes its request, the next queued request is prefilled
+into that row on the following step — the batch never drains.
+
+Three pieces:
+
+``AdapterSlotCache``
+    Fixed-capacity host-side staging for adapter weights, LRU-evicted.
+    Misses load from a :class:`~repro.train.checkpoint.CheckpointPool`;
+    ``publish()`` injects an adapter straight from a finished training job
+    (the tune-then-serve handoff — no disk round trip). Adapters referenced
+    by active rows are pinned and never evicted.
+
+``ServeExecutor``
+    The compile cache for serving, mirroring ``SliceExecutor``'s keyed-
+    closure idiom: one jitted prefill and one jitted decode step per
+    ``(cfg, n_rows, dist, ...)`` key, with ``scales`` as a *runtime*
+    argument so admission never recompiles. ``serve.decode.generate`` routes
+    through the process-default instance (``default_executor()``) instead of
+    rebuilding its closures per call.
+
+``ServeEngine``
+    The event loop. It also implements the
+    :class:`~repro.cluster.api.Runner` protocol: ``run()`` executes planned
+    *training* segments through an inner
+    :class:`~repro.cluster.runner.ClusterRunner` on the engine's own
+    ``DevicePool``, so a live decode loop (holding ``serve_lease()``) and a
+    training schedule share one pool — training blocks at planned-unit
+    acquisition when serving holds capacity (serve priority), and rebalances
+    at the budget-capped preemption boundaries the planner already emits.
+
+Bit-exactness: decode rows are computed independently (batched einsums), so
+a row served in a width-``rows`` continuous batch emits exactly the tokens
+the same request emits under width-1 sequential decode — for dense models.
+MoE capacity couples rows; serve bit-exactness claims use non-MoE configs.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict, deque
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LoraConfig, ModelConfig
+from repro.core.adapter import PackMeta, pack_meta
+from repro.core.packed_lora import extract_adapter, inject_adapter
+from repro.models.model import decode_step, init_model, prefill
+from repro.serve.decode import pad_caches
+
+
+# ---------------------------------------------------------------------------
+# Request / result / stats surface
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ServeRequest:
+    """One decode request against one adapter.
+
+    ``arrival`` is in virtual time (decode steps since trace start) so
+    admission order is deterministic and replayable; wall-clock SLO numbers
+    are measured separately on the result. ``rank``/``alpha`` override the
+    adapter checkpoint's own metadata when that lacks them."""
+
+    request_id: int
+    adapter_id: str
+    prompt: np.ndarray  # (S,) int32 token ids
+    max_new_tokens: int = 16
+    arrival: float = 0.0
+    rank: Optional[int] = None
+    alpha: Optional[float] = None
+    extra: Optional[dict] = None  # extra prefill batch fields (VLM frames..)
+
+
+@dataclass
+class ServeResult:
+    """Emitted tokens + admission/latency accounting for one request."""
+
+    request_id: int
+    adapter_id: str
+    tokens: np.ndarray  # (max_new_tokens,) int32, greedy
+    n_prompt: int
+    arrival: float  # virtual steps (copied from the request)
+    admitted_step: int  # virtual step at admission
+    finished_step: int  # virtual step when the last token was emitted
+    admitted_wall: float  # seconds since serve() start
+    finished_wall: float
+
+    @property
+    def queue_steps(self) -> float:
+        """Admission delay in decode steps (the virtual-time SLO)."""
+        return self.admitted_step - self.arrival
+
+    @property
+    def latency_wall(self) -> float:
+        return self.finished_wall - self.admitted_wall
+
+
+@dataclass
+class ServeStats:
+    """Aggregate outcome of one ``ServeEngine.serve`` drain."""
+
+    results: List[ServeResult] = field(default_factory=list)
+    steps: int = 0  # decode steps executed
+    tokens_emitted: int = 0
+    occupancy_sum: int = 0  # sum over steps of active rows
+    wall_seconds: float = 0.0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_evictions: int = 0
+
+    @property
+    def adapters_served(self) -> int:
+        return len({r.adapter_id for r in self.results})
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_emitted / self.wall_seconds if self.wall_seconds else 0.0
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / self.steps if self.steps else 0.0
+
+
+def poisson_requests(
+    adapter_ids: Sequence[str],
+    prompts: Sequence[np.ndarray],
+    mean_interarrival: float,
+    *,
+    max_new_tokens: int = 16,
+    seed: int = 0,
+) -> List[ServeRequest]:
+    """A Poisson request trace (arrival gaps ~ Exp(mean_interarrival), in
+    decode steps) — the serving analogue of ``sched.engine.poisson_trace``,
+    shifted so the first request arrives at t=0."""
+    assert len(adapter_ids) == len(prompts)
+    rng = np.random.RandomState(seed)
+    gaps = rng.exponential(mean_interarrival, size=len(adapter_ids))
+    times = np.cumsum(gaps) - gaps[0]
+    return [
+        ServeRequest(
+            request_id=i,
+            adapter_id=aid,
+            prompt=np.asarray(p, np.int32),
+            max_new_tokens=max_new_tokens,
+            arrival=float(t),
+        )
+        for i, (aid, p, t) in enumerate(zip(adapter_ids, prompts, times))
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Adapter slot cache
+# ---------------------------------------------------------------------------
+
+
+class AdapterSlotCache:
+    """Fixed-capacity LRU cache of host-side adapter weights.
+
+    ``get`` loads from the checkpoint pool on miss; ``publish`` inserts an
+    in-memory adapter directly (tune-then-serve: the training job's final
+    weights go straight into a serve slot, no disk round trip). ``pin``ned
+    adapters (referenced by active decode rows) are never evicted; if every
+    slot is pinned the cache refuses a new insert rather than silently
+    growing past capacity."""
+
+    def __init__(self, capacity: int, pool=None):
+        assert capacity >= 1
+        self.capacity = capacity
+        self.pool = pool
+        self._slots: "OrderedDict[str, Tuple[dict, dict]]" = OrderedDict()
+        self._pins: Dict[str, int] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __contains__(self, adapter_id: str) -> bool:
+        return adapter_id in self._slots
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    def ids(self) -> List[str]:
+        """Slot ids in LRU order (least-recently-used first)."""
+        return list(self._slots)
+
+    def pin(self, adapter_id: str) -> None:
+        self._pins[adapter_id] = self._pins.get(adapter_id, 0) + 1
+
+    def unpin(self, adapter_id: str) -> None:
+        n = self._pins.get(adapter_id, 0) - 1
+        if n <= 0:
+            self._pins.pop(adapter_id, None)
+        else:
+            self._pins[adapter_id] = n
+
+    def _evict_to_fit(self) -> None:
+        while len(self._slots) >= self.capacity:
+            victim = next(
+                (aid for aid in self._slots if aid not in self._pins), None
+            )
+            if victim is None:
+                raise RuntimeError(
+                    f"all {self.capacity} adapter slots are pinned by active "
+                    "rows; cannot admit a new adapter (raise slot_capacity "
+                    "or lower rows)"
+                )
+            self._slots.pop(victim)
+            self.evictions += 1
+
+    def publish(self, adapter_id: str, adapter_tree: dict, meta: dict) -> None:
+        """Insert (or refresh) an adapter from memory — no pool involved."""
+        if adapter_id in self._slots:
+            self._slots.pop(adapter_id)
+        else:
+            self._evict_to_fit()
+        self._slots[adapter_id] = (adapter_tree, dict(meta))
+
+    def get(self, adapter_id: str) -> Tuple[dict, dict]:
+        if adapter_id in self._slots:
+            self.hits += 1
+            self._slots.move_to_end(adapter_id)
+            return self._slots[adapter_id]
+        self.misses += 1
+        if self.pool is None or not self.pool.has(adapter_id):
+            raise KeyError(
+                f"adapter {adapter_id!r} is neither staged nor in the "
+                "checkpoint pool"
+            )
+        tree = self.pool.load_adapter(adapter_id)
+        meta = self.pool.load_meta(adapter_id)
+        self._evict_to_fit()
+        self._slots[adapter_id] = (tree, dict(meta))
+        return self._slots[adapter_id]
+
+
+# ---------------------------------------------------------------------------
+# Compile-cached serve executor
+# ---------------------------------------------------------------------------
+
+
+class ServeExecutor:
+    """Keyed compile cache for serving (the ``SliceExecutor`` idiom).
+
+    ``scales`` is a runtime argument of both closures, so adapter churn
+    (admission changes a row's effective alpha/r) never recompiles; jax's
+    own shape specialization inside each jitted callable handles scalar- vs
+    vector-``pos`` and varying prompt lengths."""
+
+    def __init__(self):
+        self._fns: Dict[Tuple, Callable] = {}
+
+    @property
+    def cache_size(self) -> int:
+        return len(self._fns)
+
+    def step_fn(self, cfg: ModelConfig, n_rows: int, *, dist=None, kcfg=None):
+        """Jitted one-token decode: ``(base, lora, scales, caches, token
+        (R,1), pos () or (R,)) -> (next_tok (R,), logits, caches)``."""
+        key = ("step", cfg, n_rows, dist, kcfg)
+        if key not in self._fns:
+
+            def step(base, lora, scales, caches, token, pos):
+                lg, caches = decode_step(
+                    base, lora, scales, token, caches, pos, cfg,
+                    n_pack=n_rows, dist=dist, kcfg=kcfg,
+                )
+                next_tok = jnp.argmax(lg[:, -1, :], axis=-1).astype(jnp.int32)
+                return next_tok, lg, caches
+
+            self._fns[key] = jax.jit(step, donate_argnums=(3,))
+        return self._fns[key]
+
+    def prefill_fn(
+        self, cfg: ModelConfig, n_rows: int, *, dist=None,
+        chunk_q: int = 512, kcfg=None,
+    ):
+        """Jitted prefill: ``(base, lora, scales, batch) -> (last-pos logits
+        (R,1,V), caches)``."""
+        key = ("prefill", cfg, n_rows, dist, chunk_q, kcfg)
+        if key not in self._fns:
+
+            def prefill_(base, lora, scales, batch):
+                return prefill(
+                    base, lora, scales, batch, cfg,
+                    n_pack=n_rows, dist=dist, chunk_q=chunk_q, kcfg=kcfg,
+                )
+
+            self._fns[key] = jax.jit(prefill_)
+        return self._fns[key]
+
+
+_DEFAULT_EXECUTOR: Optional[ServeExecutor] = None
+
+
+def default_executor() -> ServeExecutor:
+    """Process-wide ServeExecutor — ``generate()`` and every engine that
+    doesn't bring its own share one compile cache."""
+    global _DEFAULT_EXECUTOR
+    if _DEFAULT_EXECUTOR is None:
+        _DEFAULT_EXECUTOR = ServeExecutor()
+    return _DEFAULT_EXECUTOR
+
+
+# ---------------------------------------------------------------------------
+# Row-granular cache write
+# ---------------------------------------------------------------------------
+
+
+def write_row_caches(caches, row_caches, row):
+    """Write a width-1 tree into row ``row`` of a width-R tree (decode
+    caches *or* packed lora params — both share the layout convention).
+    Under a scan-stacked ``"blocks"`` subtree every leaf carries an extra
+    leading layer axis, shifting the batch/pack axis from 0 to 1; with that
+    one shift a single ``dynamic_update_slice`` at batch-index ``row``
+    (zeros elsewhere) covers every leaf kind — seq-indexed k/v/ckv/k_rope
+    (update spans ``[0, s_prompt)`` of the seq axis, stale tail is masked by
+    the row's position), fixed-size ssm conv/state, cross_kv, and lora a/b.
+    jit-safe with ``row`` traced (the engine jits it with the width-R tree
+    donated, so admission is an in-place device row write, not a host
+    round trip)."""
+
+    def walk(t, s, in_blocks):
+        if isinstance(t, dict):
+            return {
+                k: walk(t[k], s[k], in_blocks or k == "blocks") for k in t
+            }
+        if t is None or s is None:
+            return t
+        start = [0] * t.ndim
+        start[1 if in_blocks else 0] = row
+        return jax.lax.dynamic_update_slice(
+            t, s.astype(t.dtype), tuple(start)
+        )
+
+    return walk(caches, row_caches, False)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _ActiveRow:
+    request: ServeRequest
+    emitted: List[int]
+    admitted_step: int
+    admitted_wall: float
+    n_prompt: int
+
+
+class ServeEngine:
+    """Continuous-batching decode over ``rows`` adapter slots.
+
+    Also a :class:`~repro.cluster.api.Runner`: ``run()`` executes planned
+    training segments through an inner ``ClusterRunner`` on this engine's
+    ``device_pool``, so serving (which reserves capacity via
+    ``serve_lease()``) and training share devices — the tune side of
+    tune-then-serve runs concurrently with the serve side."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        base_params,
+        *,
+        rows: int = 4,
+        smax: int = 64,
+        r_bucket: int = 8,
+        slot_capacity: int = 8,
+        checkpoint_pool=None,
+        device_pool=None,
+        serve_executor: Optional[ServeExecutor] = None,
+        train_executor=None,
+        dist=None,
+        impl: Optional[str] = None,
+        remat: Optional[str] = None,
+        seed: int = 0,
+    ):
+        from repro.cluster.pool import DevicePool
+        from repro.cluster.runner import ClusterRunner
+
+        self.cfg = cfg
+        self.rows = rows
+        self.smax = smax
+        self.dist = dist
+        # uniform engine-wide rank bucket: every admitted adapter is
+        # zero-padded to r_bucket at injection, so the pack shape — and the
+        # compiled step — never changes across admissions
+        self.meta = pack_meta(
+            [LoraConfig(rank=r_bucket, alpha=float(r_bucket))] * rows
+        )
+        self.meta1 = pack_meta([LoraConfig(rank=r_bucket, alpha=float(r_bucket))])
+        # per-adapter delta dispatch at row granularity: the pack's kernel
+        # policy rides into prefill and every decode step
+        self.kcfg = (
+            self.meta.kernel_config(impl=impl, remat=remat)
+            if (impl or remat) else None
+        )
+        self.kcfg1 = (
+            self.meta1.kernel_config(impl=impl, remat=remat)
+            if (impl or remat) else None
+        )
+        self.base = base_params
+        key = jax.random.PRNGKey(seed)
+        _, lora = init_model(key, cfg, self.meta)
+        # device-resident R-row pack + width-1 host template (B = 0: empty
+        # rows contribute exactly zero delta even before their scale is
+        # zeroed). Admission writes one pack row device-side.
+        self._lora = lora
+        _, lora1 = init_model(key, cfg, self.meta1)
+        self._lora1_host = jax.tree.map(np.asarray, lora1)
+        # one jitted row write per tree structure (caches / lora), width-R
+        # argument donated: admission mutates device state in place
+        self._row_write = jax.jit(write_row_caches, donate_argnums=(0,))
+        self._scales = np.zeros((rows,), np.float32)
+        self._caches = None  # allocated lazily on first serve()
+        self._tok = np.zeros((rows, 1), np.int32)
+        self._pos = np.zeros((rows,), np.int32)
+        self._rows: List[Optional[_ActiveRow]] = [None] * rows
+
+        self.slot_cache = AdapterSlotCache(slot_capacity, pool=checkpoint_pool)
+        self.queue: "deque[ServeRequest]" = deque()
+        self.serve_executor = serve_executor or default_executor()
+
+        # Runner surface: training side
+        self.device_pool = device_pool or DevicePool()
+        if train_executor is None:
+            from repro.cluster.executor import SliceExecutor
+
+            train_executor = SliceExecutor()
+        self.executor = train_executor
+        self._runner = ClusterRunner(
+            self.executor, self.device_pool, concurrent=None
+        )
+        self.concurrent = self._runner.concurrent
+
+    # ---------------- Runner protocol (training side) ----------------------
+
+    def run(
+        self,
+        segments: Sequence,
+        configs_by_cid: Dict,
+        total_steps: Dict[int, int],
+        cfg,
+        base_params,
+        *,
+        seq: int,
+        pool=None,
+        data_iter_fn: Optional[Callable] = None,
+        seed: int = 0,
+        estimator=None,
+        impl: Optional[str] = None,
+        remat: Optional[str] = None,
+    ):
+        """Execute planned *training* segments on the shared device pool
+        (delegates to the inner ``ClusterRunner``). A concurrent decode loop
+        holding ``serve_lease()`` keeps its units; training segments planned
+        onto the remaining units proceed in parallel and block — serve
+        priority — if the planner oversubscribes."""
+        return self._runner.run(
+            segments, configs_by_cid, total_steps, cfg, base_params,
+            seq=seq, pool=pool, data_iter_fn=data_iter_fn, seed=seed,
+            estimator=estimator, impl=impl, remat=remat,
+        )
+
+    @contextmanager
+    def serve_lease(self, n: int = 1):
+        """Reserve the *last* ``n`` pool units for decoding. The training
+        planner allocates units from 0 upward, so a schedule planned over
+        ``device_pool.total - n`` units never touches the reserved ones."""
+        total = self.device_pool.total
+        assert 1 <= n <= total
+        sl = self.device_pool.acquire_units(list(range(total - n, total)))
+        try:
+            yield sl
+        finally:
+            self.device_pool.release(sl)
+
+    # ---------------- adapter staging --------------------------------------
+
+    def publish(self, adapter_id: str, adapter_tree: dict, meta: dict) -> None:
+        """Tune-then-serve handoff: stage a finished training job's adapter
+        directly (no disk round trip)."""
+        self.slot_cache.publish(adapter_id, adapter_tree, meta)
+
+    def publish_from_packed_state(
+        self, pool, state_id: str, idx: int, adapter_id: str,
+        *, rank: int, alpha: float,
+    ) -> None:
+        """Stage adapter ``idx`` out of a whole-pack training snapshot
+        (``CheckpointPool.save_packed_state``)."""
+        lora, _opt, _meta = pool.load_packed_state(state_id)
+        adapter = extract_adapter(lora, idx, ranks=None)
+        self.publish(adapter_id, adapter, {"rank": rank, "alpha": alpha})
+
+    # ---------------- admission / retirement --------------------------------
+
+    def submit(self, req: ServeRequest) -> None:
+        self.queue.append(req)
+
+    def _scale_for(self, req: ServeRequest, meta: dict) -> float:
+        rank = req.rank if req.rank is not None else meta.get("rank")
+        alpha = req.alpha if req.alpha is not None else meta.get("alpha")
+        if rank is None or alpha is None:
+            raise ValueError(
+                f"request {req.request_id} for adapter {req.adapter_id!r}: "
+                "rank/alpha neither on the request nor in adapter metadata"
+            )
+        return float(alpha) / float(rank)
+
+    def _admit(self, req: ServeRequest, row: int, step: int, wall: float):
+        adapter, ameta = self.slot_cache.get(req.adapter_id)
+        self.slot_cache.pin(req.adapter_id)
+        prompt = np.asarray(req.prompt, np.int32)
+        n_patch = self.cfg.n_patch_tokens or 0
+        s_total = prompt.shape[0] + n_patch
+        if s_total + req.max_new_tokens > self.smax:
+            self.slot_cache.unpin(req.adapter_id)
+            raise ValueError(
+                f"request {req.request_id}: prompt {s_total} + "
+                f"{req.max_new_tokens} new tokens exceeds smax={self.smax}"
+            )
+        # weights: rank-pad into the width-1 template (prefill — the
+        # bit-identical twin of the sequential baseline's), then write that
+        # row into the device-resident R-row pack; rows are independent
+        # thereafter
+        lora1 = jax.tree.map(
+            jnp.asarray, inject_adapter(self._lora1_host, adapter, 0)
+        )
+        self._lora = self._row_write(self._lora, lora1, row)
+        scale = self._scale_for(req, ameta)
+        batch = {"tokens": jnp.asarray(prompt[None, :])}
+        if req.extra:
+            batch.update(req.extra)
+        pf = self.serve_executor.prefill_fn(
+            self.cfg, 1, dist=self.dist, kcfg=self.kcfg1
+        )
+        lg, c1 = pf(
+            self.base, lora1, jnp.full((1,), scale, jnp.float32), batch
+        )
+        c1 = pad_caches(c1, self.smax)
+        self._caches = self._row_write(self._caches, c1, row)
+        first = int(jnp.argmax(lg[0, -1, :]))
+        self._scales[row] = scale
+        self._tok[row, 0] = first
+        self._pos[row] = s_total
+        self._rows[row] = _ActiveRow(
+            request=req, emitted=[first], admitted_step=step,
+            admitted_wall=wall, n_prompt=prompt.shape[0],
+        )
+
+    def _retire(self, row: int, step: int, wall: float) -> ServeResult:
+        active = self._rows[row]
+        assert active is not None
+        self._rows[row] = None
+        self._scales[row] = 0.0
+        self.slot_cache.unpin(active.request.adapter_id)
+        return ServeResult(
+            request_id=active.request.request_id,
+            adapter_id=active.request.adapter_id,
+            tokens=np.asarray(active.emitted, np.int32),
+            n_prompt=active.n_prompt,
+            arrival=active.request.arrival,
+            admitted_step=active.admitted_step,
+            finished_step=step,
+            admitted_wall=active.admitted_wall,
+            finished_wall=wall,
+        )
+
+    # ---------------- the decode loop ---------------------------------------
+
+    def serve(
+        self,
+        requests: Optional[Sequence[ServeRequest]] = None,
+        *,
+        max_steps: Optional[int] = None,
+    ) -> ServeStats:
+        """Drain a request trace (plus anything already ``submit()``ted).
+
+        Virtual time is the decode-step counter: a request becomes
+        admissible once ``step >= arrival``; freed rows are refilled before
+        the next step, so the batch never drains while work is queued."""
+        from repro.models.model import init_caches
+
+        pending = deque(
+            sorted(requests or (), key=lambda r: (r.arrival, r.request_id))
+        )
+        if self._caches is None:
+            self._caches = init_caches(self.cfg, self.rows, self.smax)
+        stats = ServeStats()
+        t0 = time.perf_counter()
+        step = 0
+        while True:
+            wall = time.perf_counter() - t0
+            while pending and pending[0].arrival <= step:
+                self.queue.append(pending.popleft())
+            for row in range(self.rows):
+                if self._rows[row] is None and self.queue:
+                    req = self.queue.popleft()
+                    self._admit(req, row, step, wall)
+                    # single-token request: prefill already emitted it
+                    if len(self._rows[row].emitted) >= req.max_new_tokens:
+                        stats.tokens_emitted += len(self._rows[row].emitted)
+                        stats.results.append(self._retire(row, step, wall))
+            active = [r for r in range(self.rows) if self._rows[r] is not None]
+            if not active:
+                if self.queue:
+                    continue  # rows freed this pass; admit more
+                if pending:
+                    step = int(np.ceil(pending[0].arrival))
+                    continue
+                break
+            if max_steps is not None and stats.steps >= max_steps:
+                break
+            fn = self.serve_executor.step_fn(
+                self.cfg, self.rows, dist=self.dist, kcfg=self.kcfg
+            )
+            next_tok, _lg, self._caches = fn(
+                self.base, self._lora, jnp.asarray(self._scales),
+                self._caches, jnp.asarray(self._tok),
+                jnp.asarray(self._pos),
+            )
+            next_tok = np.asarray(next_tok)
+            step += 1
+            stats.steps += 1
+            stats.occupancy_sum += len(active)
+            wall = time.perf_counter() - t0
+            for row in active:
+                a = self._rows[row]
+                a.emitted.append(int(next_tok[row]))
+                self._tok[row, 0] = int(next_tok[row])
+                self._pos[row] += 1
+                if len(a.emitted) >= a.request.max_new_tokens:
+                    stats.tokens_emitted += len(a.emitted)
+                    stats.results.append(self._retire(row, step, wall))
+        stats.wall_seconds = time.perf_counter() - t0
+        stats.cache_hits = self.slot_cache.hits
+        stats.cache_misses = self.slot_cache.misses
+        stats.cache_evictions = self.slot_cache.evictions
+        stats.results.sort(key=lambda r: r.request_id)
+        return stats
+
+    # ---------------- sequential baseline -----------------------------------
+
+    def serve_sequential(
+        self, requests: Sequence[ServeRequest]
+    ) -> ServeStats:
+        """One request at a time at batch width 1 — the pre-engine serving
+        path (``generate()`` semantics), through the same compile cache.
+        The benchmark's baseline and the bit-exactness reference."""
+        stats = ServeStats()
+        t0 = time.perf_counter()
+        order = sorted(requests, key=lambda r: (r.arrival, r.request_id))
+        for req in order:
+            adapter, ameta = self.slot_cache.get(req.adapter_id)
+            scale = self._scale_for(req, ameta)
+            lora1 = jax.tree.map(
+                jnp.asarray, inject_adapter(self._lora1_host, adapter, 0)
+            )
+            prompt = np.asarray(req.prompt, np.int32)
+            n_patch = self.cfg.n_patch_tokens or 0
+            s_total = prompt.shape[0] + n_patch
+            batch = {"tokens": jnp.asarray(prompt[None, :])}
+            if req.extra:
+                batch.update(req.extra)
+            scales = jnp.full((1,), scale, jnp.float32)
+            pf = self.serve_executor.prefill_fn(
+                self.cfg, 1, dist=self.dist, kcfg=self.kcfg1
+            )
+            lg, caches = pf(self.base, lora1, scales, batch)
+            caches = pad_caches(caches, s_total + req.max_new_tokens)
+            admitted = time.perf_counter() - t0
+            tok = jnp.argmax(lg[:, -1, :], -1).astype(jnp.int32)
+            out = [int(tok[0])]
+            fn = self.serve_executor.step_fn(
+                self.cfg, 1, dist=self.dist, kcfg=self.kcfg1
+            )
+            for i in range(req.max_new_tokens - 1):
+                tok, _lg, caches = fn(
+                    self.base, lora1, scales, caches, tok[:, None],
+                    jnp.int32(s_total + i),
+                )
+                out.append(int(tok[0]))
+                stats.steps += 1
+                stats.occupancy_sum += 1
+            wall = time.perf_counter() - t0
+            stats.tokens_emitted += len(out)
+            stats.results.append(
+                ServeResult(
+                    request_id=req.request_id,
+                    adapter_id=req.adapter_id,
+                    tokens=np.asarray(out, np.int32),
+                    n_prompt=prompt.shape[0],
+                    arrival=req.arrival,
+                    admitted_step=stats.steps,
+                    finished_step=stats.steps,
+                    admitted_wall=admitted,
+                    finished_wall=wall,
+                )
+            )
+        stats.wall_seconds = time.perf_counter() - t0
+        stats.results.sort(key=lambda r: r.request_id)
+        return stats

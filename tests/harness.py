@@ -126,13 +126,23 @@ def fake_pool(n: int) -> DevicePool:
 
 
 class FakeRunner:
-    """ClusterRunner-shaped wrapper: ScriptedExecutor + token pool, inline
-    (non-concurrent) execution — fully deterministic engine tests."""
+    """A full :class:`~repro.cluster.api.Runner` over fakes: ScriptedExecutor
+    + token pool, inline (non-concurrent) execution — fully deterministic
+    engine tests. ``run`` delegates to a real ``ClusterRunner`` on the fake
+    pool, so the dispatch/lease/record semantics are the production ones."""
 
     def __init__(self, executor, n_units: int):
         self.executor = executor
         self.device_pool = fake_pool(n_units)
         self.concurrent = False
+
+    def run(self, *args, **kwargs):
+        from repro.cluster.runner import ClusterRunner
+
+        inner = ClusterRunner(
+            self.executor, self.device_pool, concurrent=False
+        )
+        return inner.run(*args, **kwargs)
 
 
 # ---------------------------------------------------------------------------
@@ -154,6 +164,9 @@ class FakeHostTransport:
     Death injection: ``die_on(run_idx, payload) -> bool`` makes the worker
     drop the request and go silent (exactly what SIGKILL looks like from the
     dispatcher); ``kill()`` does the same from the outside.
+
+    The kernel policy shipped with each run request is recorded on
+    ``.policies`` (a ``KernelPolicy`` per run, in arrival order).
     """
 
     def __init__(
@@ -171,6 +184,7 @@ class FakeHostTransport:
         self.iter_scale = iter_scale
         self.on_run = on_run
         self.runs: List[dict] = []
+        self.policies: List = []  # KernelPolicy per run request
         self.resumed: List[Tuple[int, str]] = []
         self.error: Optional[BaseException] = None
         self._in: "queue.Queue" = queue.Queue()
@@ -230,17 +244,24 @@ class FakeHostTransport:
                 state = payload
                 continue
             assert kind == "run", kind
+            from repro.cluster.multihost import (
+                CheckpointWrite,
+                KernelPolicy,
+                RecordMsg,
+            )
+
             run_idx = len(self.runs)
             self.runs.append(payload)
+            self.policies.append(payload.get("policy") or KernelPolicy())
             if self.die_on is not None and self.die_on(run_idx, payload):
                 self._alive = False  # died mid-segment: no reply, ever
                 return
             if self.on_run is not None:
                 self.on_run(run_idx, payload)
-            seg = payload["seg"]
-            cids = tuple(seg["config_ids"])
+            seg = payload["seg"]  # SegmentMsg
+            cids = tuple(seg.config_ids)
             total = state["total_steps"]
-            for cid, st0 in zip(cids, seg["start_steps"]):
+            for cid, st0 in zip(cids, seg.start_steps):
                 if st0 > 0:
                     aid = f"{cid:04d}"
                     assert aid in payload["states"], (
@@ -251,38 +272,40 @@ class FakeHostTransport:
                     self.resumed.append((run_idx, aid))
             writes = []
             if payload["has_pool"]:
-                done = set(seg["done_ids"])
+                done = set(seg.done_ids)
                 for slot, (cid, st0) in enumerate(
-                    zip(cids, seg["start_steps"])
+                    zip(cids, seg.start_steps)
                 ):
                     if cid in done:
                         writes.append(
-                            ("adapter", f"adapter_{cid:04d}",
-                             {"w": np.float32(cid)},
-                             {"final_loss": 1.0,
-                              "total_steps": int(total[cid])})
+                            CheckpointWrite(
+                                "adapter", f"adapter_{cid:04d}",
+                                {"w": np.float32(cid)},
+                                {"final_loss": 1.0,
+                                 "total_steps": int(total[cid])})
                         )
                     else:
                         writes.append(
-                            ("state", f"{cid:04d}",
-                             {"w": np.float32(cid),
-                              "m": np.float32(0), "v": np.float32(0)},
-                             {"steps_done": int(st0 + seg["run_steps"]),
-                              "total_steps": int(total[cid])})
+                            CheckpointWrite(
+                                "state", f"{cid:04d}",
+                                {"w": np.float32(cid),
+                                 "m": np.float32(0), "v": np.float32(0)},
+                                {"steps_done": int(st0 + seg.run_steps),
+                                 "total_steps": int(total[cid])})
                         )
-            wall = self.iter_scale * seg["run_steps"]
+            wall = self.iter_scale * seg.run_steps
             self._reply(
                 ("done", {
                     "req": payload["req"],
                     "host": self.host_id,
-                    "record": {
-                        "config_ids": cids,
-                        "degree": seg["degree"],
-                        "start": seg["start"],
-                        "end": seg["end"],
-                        "wall_seconds": wall,
-                        "losses": np.full(len(cids), 1.0, np.float32),
-                    },
+                    "record": RecordMsg(
+                        config_ids=cids,
+                        degree=seg.degree,
+                        start=seg.start,
+                        end=seg.end,
+                        wall_seconds=wall,
+                        losses=np.full(len(cids), 1.0, np.float32),
+                    ),
                     "writes": writes,
                 })
             )

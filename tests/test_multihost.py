@@ -117,8 +117,9 @@ def test_memory_pool_capture_contract():
     assert meta["steps_done"] == 5
     mp_.save_adapter("adapter_0003", {"w": np.zeros(2)}, {"final_loss": 1.0})
     mp_.save_adapter_state("0004", state, {"steps_done": 2})
-    kinds = [w[0] for w in mp_.writes]
+    kinds = [w.kind for w in mp_.writes]
     assert kinds == ["adapter", "state"]
+    assert [w.adapter_id for w in mp_.writes] == ["adapter_0003", "0004"]
 
 
 # ---------------------------------------------------------------------------
@@ -198,8 +199,8 @@ def test_killed_worker_requeues_residual_through_preempt_path():
     assert len(made) == 2  # original + respawn
     # the respawned worker got the SAME residual segment, resumed at step 2
     retry = made[1].runs[0]
-    assert retry["seg"]["start_steps"] == (2,)
-    assert retry["seg"]["run_steps"] == 3
+    assert retry["seg"].start_steps == (2,)
+    assert retry["seg"].run_steps == 3
     assert made[1].resumed == [(0, "0000")]
     assert len(result.records) == 2
     assert sorted(pool.adapters) == ["adapter_0000"]
@@ -219,6 +220,46 @@ def test_worker_dying_forever_raises_not_hangs():
                 seq=SEQ, pool=DictPool(),
             )
     assert len(made) == 2  # initial + one restart
+
+
+def test_kernel_policy_ships_to_workers():
+    """`impl`/`remat` ride the wire as a typed KernelPolicy with every
+    segment (previously multi-host loudly rejected non-default policy)."""
+    from repro.cluster.multihost import KernelPolicy
+
+    made = []
+    segs = [_seg(job_id=i, cids=(i,), units=(0,), start=float(i))
+            for i in range(2)]
+    with HostDispatcher([1], transport_factory=_fake_factory(made)) as disp:
+        disp.run(
+            segs, {i: _cfg() for i in range(2)}, {i: 3 for i in range(2)},
+            None, None, seq=SEQ, pool=DictPool(),
+            impl="fused_xla", remat="recompute",
+        )
+    (tr,) = made
+    assert tr.policies == [KernelPolicy("fused_xla", "recompute")] * 2
+
+
+def test_kernel_policy_defaults_to_context(monkeypatch):
+    """With no explicit impl, the caller's context-local default is captured
+    and shipped ("auto" normalizes to None = worker default)."""
+    from repro.cluster.multihost import KernelPolicy
+    from repro.kernels.ops import use_impl
+
+    made = []
+    with HostDispatcher([1], transport_factory=_fake_factory(made)) as disp:
+        with use_impl("fused"):
+            disp.run(
+                [_seg(units=(0,))], {0: _cfg()}, {0: 3}, None, None,
+                seq=SEQ, pool=DictPool(),
+            )
+        disp.run(
+            [_seg(units=(0,))], {0: _cfg()}, {0: 3}, None, None,
+            seq=SEQ, pool=DictPool(),
+        )
+    (tr,) = made
+    assert tr.policies[0] == KernelPolicy("fused", None)
+    assert tr.policies[1] == KernelPolicy(None, None)  # "auto" -> None
 
 
 def test_payload_reinit_on_new_workload():

@@ -1,0 +1,143 @@
+"""Runner protocol conformance (ISSUE 6 satellite).
+
+One parametrized test drives every :class:`repro.cluster.api.Runner`
+implementation — ``ClusterRunner`` over fakes, ``HostDispatcher`` over the
+in-memory ``FakeHostTransport``, ``ServeEngine`` delegating training to its
+inner runner, and the harness ``FakeRunner`` — through the same segment
+batch and asserts the shared semantics: surface (``isinstance`` against the
+runtime-checkable protocol), records in virtual-start order, and the pool
+draining back to its entry free count.
+"""
+import jax
+import numpy as np
+import pytest
+from harness import DictPool, FakeHostTransport, FakeRunner, ScriptedExecutor, fake_pool
+
+from repro.cluster import ClusterRunner, HostDispatcher, Runner
+from repro.configs.base import LoraConfig, get_config, reduced
+from repro.models.model import init_model
+from repro.sched.cost_model import A100_40G, CostModel
+from repro.sched.engine import JobSegment
+from repro.serve.engine import ServeEngine
+
+SEQ = 16
+
+
+def _cfgs(n):
+    return {
+        i: LoraConfig(rank=8, alpha=8.0 * (i + 1), learning_rate=1e-3,
+                      batch_size=1, seq_len=SEQ)
+        for i in range(n)
+    }
+
+
+def _segs(n):
+    return [
+        JobSegment(
+            job_id=i, config_ids=(i,), degree=1, start=float(i),
+            end=i + 1.0, start_steps=(0,), run_steps=2, done_ids=(i,),
+            units=(0,),
+        )
+        for i in range(n)
+    ]
+
+
+def _prior():
+    return CostModel(get_config("qwen25-7b"), A100_40G)
+
+
+def _cluster_runner():
+    runner = ClusterRunner(ScriptedExecutor(_prior()), fake_pool(2))
+    return runner, (lambda: None)
+
+
+def _fake_runner():
+    return FakeRunner(ScriptedExecutor(_prior()), 2), (lambda: None)
+
+
+def _host_dispatcher():
+    made = []
+
+    def factory(host_id, n_devices):
+        tr = FakeHostTransport(host_id, n_devices)
+        made.append(tr)
+        return tr
+
+    disp = HostDispatcher([2], transport_factory=factory)
+    return disp, disp.close
+
+
+_SERVE_STATE = {}
+
+
+def _serve_engine():
+    # init_model is the expensive part; share one across parametrizations
+    if "init" not in _SERVE_STATE:
+        cfg = reduced(get_config("gemma3-1b"))
+        base, _ = init_model(jax.random.PRNGKey(0), cfg, None)
+        _SERVE_STATE["init"] = (cfg, base)
+    cfg, base = _SERVE_STATE["init"]
+    eng = ServeEngine(
+        cfg, base, rows=1, smax=16, train_executor=ScriptedExecutor(_prior()),
+        device_pool=fake_pool(2),
+    )
+    return eng, (lambda: None)
+
+
+IMPLS = {
+    "cluster_runner": _cluster_runner,
+    "fake_runner": _fake_runner,
+    "host_dispatcher": _host_dispatcher,
+    "serve_engine": _serve_engine,
+}
+
+
+@pytest.mark.parametrize("name", sorted(IMPLS))
+def test_runner_conformance(name):
+    runner, close = IMPLS[name]()
+    try:
+        assert isinstance(runner, Runner), name
+        assert hasattr(runner.executor, "run_segment")
+        free0 = runner.device_pool.free
+        n = 3
+        result = runner.run(
+            _segs(n), _cfgs(n), {i: 2 for i in range(n)}, None, None,
+            seq=SEQ, pool=DictPool() if name == "host_dispatcher" else None,
+        )
+        assert len(result.records) == n
+        # records in virtual-start order, each for its own segment
+        assert [tuple(r.job.config_ids) for r in result.records] == [
+            (i,) for i in range(n)
+        ]
+        assert result.makespan >= 0.0
+        # the pool drained back to its entry free count
+        assert runner.device_pool.free == free0
+    finally:
+        close()
+
+
+def test_serve_engine_run_respects_foreign_lease():
+    """Training through ServeEngine.run while the decode side holds its
+    serve lease: the runner must not treat the held unit as leaked."""
+    eng, _ = _serve_engine()
+    with eng.serve_lease(1):
+        free0 = eng.device_pool.free
+        assert free0 == eng.device_pool.total - 1
+        result = eng.run(
+            _segs(2), _cfgs(2), {i: 2 for i in range(2)}, None, None,
+            seq=SEQ,
+        )
+        assert len(result.records) == 2
+        assert eng.device_pool.free == free0  # lease still held, no leak
+    assert eng.device_pool.free == eng.device_pool.total
+
+
+def test_kernel_policy_reaches_executor_through_any_runner():
+    """impl crosses every runner's thread/process boundary explicitly."""
+    for factory in (_cluster_runner, _fake_runner):
+        runner, _ = factory()
+        runner.run(
+            _segs(1), _cfgs(1), {0: 2}, None, None, seq=SEQ,
+            impl="fused_xla",
+        )
+        assert runner.executor.impls == ["fused_xla"]
