@@ -23,7 +23,7 @@ import time
 from typing import Dict, List
 
 
-def run(fast: bool = False) -> List[Dict]:
+def run(fast: bool = False, trace_out: str = None) -> List[Dict]:
     import jax
     import numpy as np
 
@@ -31,10 +31,13 @@ def run(fast: bool = False) -> List[Dict]:
     from repro.core.adapter import pack_meta
     from repro.core.packed_lora import extract_adapter
     from repro.models.model import init_model
+    from repro.obs import NULL_TRACER, Tracer
     from repro.sched.cost_model import A100_40G, CostModel
     from repro.sched.engine import ExecutionEngine
     from repro.sched.planner import Schedule, ScheduledJob
     from repro.serve.engine import ServeEngine, poisson_requests
+
+    tracer = Tracer() if trace_out else NULL_TRACER
 
     cfg = reduced(get_config("gemma3-1b"))
     seq = 16
@@ -52,7 +55,7 @@ def run(fast: bool = False) -> List[Dict]:
 
     eng = ServeEngine(
         cfg, base, rows=rows, smax=32, r_bucket=rank,
-        slot_capacity=n_adapters + 1,
+        slot_capacity=n_adapters + 1, tracer=tracer,
     )
     for i in range(n_adapters):
         eng.publish(f"ad{i}", extract_adapter(jax.tree.map(np.asarray, lora), i),
@@ -79,7 +82,7 @@ def run(fast: bool = False) -> List[Dict]:
     reserve = 1 if eng.device_pool.total > 1 else 0
     g = max(1, eng.device_pool.total - reserve)
     cm = CostModel(cfg, A100_40G)
-    exec_eng = ExecutionEngine(cm, g)
+    exec_eng = ExecutionEngine(cm, g, tracer=tracer)
     jobs = [
         ScheduledJob((i,), 1, float(i // g), float(i // g) + 1.0)
         for i in range(len(train_cfgs))
@@ -127,6 +130,12 @@ def run(fast: bool = False) -> List[Dict]:
         a, b = measure(mode), measure(mode)  # warm, best-of-2 (noisy boxes)
         stats, train_done = max(a, b, key=lambda r: r[0].tokens_per_s)
         out[mode] = stats
+
+        def _ms(summary, q):
+            v = summary[q]
+            return round(1e3 * v, 3) if v == v else None  # NaN -> null
+
+        lat = stats.latency_summaries()
         rows_out.append(
             {
                 "bench": "serve",
@@ -143,6 +152,15 @@ def run(fast: bool = False) -> List[Dict]:
                 "adapters_served": stats.adapters_served,
                 "train_jobs_concurrent": train_done.get("jobs", 0),
                 "train_wall_s": round(train_done.get("wall", 0.0), 3),
+                "ttft_ms_p50": _ms(lat["ttft"], "p50"),
+                "ttft_ms_p95": _ms(lat["ttft"], "p95"),
+                "ttft_ms_p99": _ms(lat["ttft"], "p99"),
+                "itl_ms_p50": _ms(lat["itl"], "p50"),
+                "itl_ms_p95": _ms(lat["itl"], "p95"),
+                "itl_ms_p99": _ms(lat["itl"], "p99"),
+                "queue_wait_ms_p50": _ms(lat["queue_wait"], "p50"),
+                "queue_wait_ms_p95": _ms(lat["queue_wait"], "p95"),
+                "queue_wait_ms_p99": _ms(lat["queue_wait"], "p99"),
             }
         )
     cont, seqs = out["continuous"], out["sequential"]
@@ -162,6 +180,8 @@ def run(fast: bool = False) -> List[Dict]:
             "tokens_bitexact": bool(bitexact),
         }
     )
+    if trace_out:
+        tracer.export(trace_out)
     return rows_out
 
 
@@ -170,8 +190,12 @@ def main():
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--json", default=None,
                     help="also dump rows to this JSON file")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON of the serve runs "
+                         "(Perfetto-loadable: serve steps, per-row request "
+                         "residency, admissions/prefills)")
     args = ap.parse_args()
-    rows = run(args.fast)
+    rows = run(args.fast, trace_out=args.trace_out)
     for r in rows:
         if r["mode"] == "speedup":
             print(
@@ -184,8 +208,11 @@ def main():
                 f"serve,{r['mode']}: {r['tokens']} tokens in "
                 f"{r['elapsed_s']:.2f}s ({r['tokens_per_s']:.1f} tok/s, "
                 f"occupancy {r['mean_occupancy']}), "
-                f"{r['train_jobs_concurrent']} training jobs concurrent"
+                f"ttft p95 {r['ttft_ms_p95']} ms, itl p50 {r['itl_ms_p50']} "
+                f"ms, {r['train_jobs_concurrent']} training jobs concurrent"
             )
+    if args.trace_out:
+        print(f"saved Chrome trace to {args.trace_out}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"bench": "serve", "rows": rows}, f, indent=1)

@@ -1,0 +1,61 @@
+"""CI gate for Chrome trace-event artifacts (ISSUE 7 satellite).
+
+Parses a trace produced by ``--trace-out`` (launch/train.py or
+benchmarks/bench_serve.py), validates every event against the trace-event
+schema (``repro.obs.validate_chrome_trace``), and requires spans from at
+least ``--min-tiers`` distinct tiers — a trace that silently lost a tier's
+instrumentation fails the build, not just the viewer.
+
+  PYTHONPATH=src python scripts/check_trace.py TRACE.json --min-tiers 3
+"""
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument("--min-tiers", type=int, default=3,
+                    help="require spans from at least this many distinct "
+                         "tiers (engine/runner/executor/dispatch/host/"
+                         "serve/autotune)")
+    ap.add_argument("--min-spans", type=int, default=1,
+                    help="require at least this many complete (ph=X) spans")
+    args = ap.parse_args()
+
+    from repro.obs import validate_chrome_trace, trace_tiers
+
+    try:
+        with open(args.trace) as f:
+            obj = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_trace: cannot parse {args.trace}: {e}")
+        return 1
+
+    problems = validate_chrome_trace(obj)
+    if problems:
+        print(f"check_trace: {args.trace} has {len(problems)} schema "
+              "problem(s):")
+        for p in problems[:20]:
+            print(f"  - {p}")
+        return 1
+
+    events = obj.get("traceEvents", [])
+    n_spans = sum(1 for e in events if e.get("ph") == "X")
+    tiers = trace_tiers(obj)
+    print(f"check_trace: {args.trace}: {len(events)} event(s), "
+          f"{n_spans} span(s), tiers={tiers}")
+    if n_spans < args.min_spans:
+        print(f"check_trace: expected >= {args.min_spans} span(s), "
+              f"got {n_spans}")
+        return 1
+    if len(tiers) < args.min_tiers:
+        print(f"check_trace: expected spans from >= {args.min_tiers} tiers, "
+              f"got {len(tiers)}: {tiers}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,6 +19,7 @@ from repro.cluster.multihost import (
     RecordMsg,
     RemoteSegmentError,
     SegmentMsg,
+    TraceCtx,
     TransportError,
     WorkerDied,
 )
@@ -54,6 +55,7 @@ __all__ = [
     "KernelPolicy",
     "RecordMsg",
     "SegmentMsg",
+    "TraceCtx",
     "DispatchExecutor",
     "HostDispatcher",
     "HostUnit",

@@ -22,6 +22,7 @@ host); chunking keeps resident batch memory O(chunk), not O(n_steps).
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 import time
 from dataclasses import dataclass
@@ -35,6 +36,7 @@ from repro.configs.base import LoraConfig, ModelConfig
 from repro.core.adapter import pack_meta
 from repro.core.packed_lora import extract_adapter, inject_adapter
 from repro.cluster.pool import MeshSlice
+from repro.obs import NULL_TRACER
 
 # per-adapter step cap meaning "no budget": always larger than any real
 # step count, so the budget mask stays 1.0 and the update is bit-identical
@@ -45,6 +47,15 @@ NO_BUDGET = np.int32(2**31 - 1)
 # memory for long runs while keeping GIL-bound data synthesis out of the
 # concurrent step stream for a whole chunk at a time)
 PREGEN_CHUNK = 256
+
+
+def _slice_track(slice_: Optional[MeshSlice]) -> str:
+    """Perfetto track name for a slice: one row per device unit group."""
+    if slice_ is None or not slice_.units:
+        return "device"
+    if len(slice_.units) == 1:
+        return f"unit{slice_.units[0]}"
+    return f"units{min(slice_.units)}-{max(slice_.units)}"
 
 
 def _accepts_start_steps(fn) -> bool:
@@ -75,13 +86,14 @@ class PackResult:
 class SliceExecutor:
     """Compile-cached packed-step execution on device slices (thread-safe)."""
 
-    def __init__(self):
+    def __init__(self, *, tracer=None):
         self._steps: Dict[Tuple, Callable] = {}
         self._templates: Dict[Tuple, Tuple] = {}
         self._warmed: set = set()
         self._lock = threading.Lock()
         self.n_builds = 0
         self.n_hits = 0
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
     # ---------------- pack-state templates ----------------
 
@@ -158,6 +170,7 @@ class SliceExecutor:
             hit = self._steps.get(key)
             if hit is not None:
                 self.n_hits += 1
+                self.tracer.metrics.counter("executor.compile_cache_hits").inc()
                 return hit
             from repro.train.trainer import make_packed_step
 
@@ -177,6 +190,7 @@ class SliceExecutor:
             )
             self._steps[key] = (step, dist)
             self.n_builds += 1
+            self.tracer.metrics.counter("executor.compile_cache_builds").inc()
             return step, dist
 
     # ---------------- placement ----------------
@@ -337,32 +351,41 @@ class SliceExecutor:
             )
             with self._lock:
                 need_warm = wkey not in self._warmed
+            track = _slice_track(slice_)
             if need_warm:
-                lora_w = jax.tree.map(lambda x: x + 0, lora_d)
-                opt_w = jax.tree.map(lambda x: x + 0, opt_d)
-                _, _, warm = step(
-                    base_d, lora_w, opt_w, first[0], scales, lr_vec, budg
-                )
-                jax.block_until_ready(warm["loss"])
+                with self.tracer.span(
+                    "executor.compile", cat="executor", track=track,
+                    n_pack=meta.n, width=1 if slice_ is None else slice_.width,
+                ):
+                    lora_w = jax.tree.map(lambda x: x + 0, lora_d)
+                    opt_w = jax.tree.map(lambda x: x + 0, opt_d)
+                    _, _, warm = step(
+                        base_d, lora_w, opt_w, first[0], scales, lr_vec, budg
+                    )
+                    jax.block_until_ready(warm["loss"])
                 with self._lock:
                     self._warmed.add(wkey)
-            t0 = time.perf_counter()
-            i = 0
-            batches = first
-            while batches:
-                for batch in batches:
-                    lora_d, opt_d, m = step(
-                        base_d, lora_d, opt_d, batch, scales, lr_vec, budg
-                    )
-                    if step_callback is not None:
-                        step_callback(i, m)
-                    i += 1
-                batches = [
-                    put_batch(next(it))
-                    for _ in range(min(n_steps - i, PREGEN_CHUNK))
-                ]
-            jax.block_until_ready(m["loss"])
-            wall = time.perf_counter() - t0
+            with self.tracer.span(
+                "executor.train", cat="executor", track=track,
+                n_pack=meta.n, n_steps=n_steps,
+            ):
+                t0 = time.perf_counter()
+                i = 0
+                batches = first
+                while batches:
+                    for batch in batches:
+                        lora_d, opt_d, m = step(
+                            base_d, lora_d, opt_d, batch, scales, lr_vec, budg
+                        )
+                        if step_callback is not None:
+                            step_callback(i, m)
+                        i += 1
+                    batches = [
+                        put_batch(next(it))
+                        for _ in range(min(n_steps - i, PREGEN_CHUNK))
+                    ]
+                jax.block_until_ready(m["loss"])
+                wall = time.perf_counter() - t0
             losses = np.asarray(m["per_adapter_loss"])
         return PackResult(
             lora=lora_d,
@@ -398,23 +421,55 @@ class SliceExecutor:
         from repro.sched.engine import JobRecord
         from repro.sched.planner import ScheduledJob
 
+        track = _slice_track(slice_)
+        with self.tracer.span(
+            "executor.segment", cat="executor", track=track,
+            job_id=seg.job_id, cids=list(seg.config_ids),
+            degree=seg.degree, units=list(seg.units),
+        ):
+            return self._run_segment_inner(
+                seg, configs_by_cid, total_steps, cfg, base_params,
+                seq=seq, pool=pool, data_iter_fn=data_iter_fn, seed=seed,
+                slice_=slice_, impl=impl, remat=remat, track=track,
+                JobRecord=JobRecord, ScheduledJob=ScheduledJob,
+            )
+
+    def _run_segment_inner(
+        self, seg, configs_by_cid, total_steps, cfg, base_params, *,
+        seq, pool, data_iter_fn, seed, slice_, impl, remat, track,
+        JobRecord, ScheduledJob,
+    ):
         job_cfgs = [configs_by_cid[cid] for cid in seg.config_ids]
         meta = pack_meta(job_cfgs)
         lora, opt = self.pack_template(cfg, job_cfgs, seed)
-        for slot, (cid, st0) in enumerate(zip(seg.config_ids, seg.start_steps)):
-            if st0 == 0:
-                continue
-            if pool is None or not pool.has_adapter_state(f"{cid:04d}"):
-                raise RuntimeError(
-                    f"segment resumes config {cid} at step {st0} but the "
-                    "pool holds no checkpointed state for it"
-                )
-            state, smeta = pool.load_adapter_state(f"{cid:04d}")
-            assert int(smeta["steps_done"]) == st0, (cid, smeta, st0)
-            lora = inject_adapter(lora, state["w"], slot)
-            opt["m"] = inject_adapter(opt["m"], state["m"], slot)
-            opt["v"] = inject_adapter(opt["v"], state["v"], slot)
-            opt["step"] = opt["step"].at[slot].set(st0)
+        resumed_ids = [
+            cid for cid, st0 in zip(seg.config_ids, seg.start_steps) if st0
+        ]
+        resume_cm = (
+            self.tracer.span(
+                "executor.resume_load", cat="executor", track=track,
+                cids=resumed_ids,
+            )
+            if resumed_ids
+            else contextlib.nullcontext()
+        )
+        with resume_cm:
+            for slot, (cid, st0) in enumerate(
+                zip(seg.config_ids, seg.start_steps)
+            ):
+                if st0 == 0:
+                    continue
+                if pool is None or not pool.has_adapter_state(f"{cid:04d}"):
+                    raise RuntimeError(
+                        f"segment resumes config {cid} at step {st0} but the "
+                        "pool holds no checkpointed state for it"
+                    )
+                state, smeta = pool.load_adapter_state(f"{cid:04d}")
+                assert int(smeta["steps_done"]) == st0, (cid, smeta, st0)
+                lora = inject_adapter(lora, state["w"], slot)
+                opt["m"] = inject_adapter(opt["m"], state["m"], slot)
+                opt["v"] = inject_adapter(opt["v"], state["v"], slot)
+                opt["step"] = opt["step"].at[slot].set(st0)
         budgets = np.asarray(
             [total_steps[cid] for cid in seg.config_ids], np.int32
         )
@@ -436,6 +491,29 @@ class SliceExecutor:
         )
         lora, opt, losses = res.lora, res.opt, res.losses
         done = set(seg.done_ids)
+        save_cm = (
+            self.tracer.span(
+                "executor.checkpoint_save", cat="executor", track=track,
+                cids=list(seg.config_ids),
+            )
+            if pool is not None
+            else contextlib.nullcontext()
+        )
+        with save_cm:
+            self._save_segment_state(
+                seg, configs_by_cid, total_steps, meta, pool,
+                lora, opt, losses, done,
+            )
+        return JobRecord(
+            ScheduledJob(seg.config_ids, seg.degree, seg.start, seg.end),
+            res.wall_seconds,
+            losses,
+            real_start=res.real_start,
+            real_end=res.real_end,
+        )
+
+    def _save_segment_state(self, seg, configs_by_cid, total_steps, meta,
+                            pool, lora, opt, losses, done):
         for slot, cid in enumerate(seg.config_ids):
             c = configs_by_cid[cid]
             if cid in done:
@@ -473,10 +551,3 @@ class SliceExecutor:
                         "total_steps": int(total_steps[cid]),
                     },
                 )
-        return JobRecord(
-            ScheduledJob(seg.config_ids, seg.degree, seg.start, seg.end),
-            res.wall_seconds,
-            losses,
-            real_start=res.real_start,
-            real_end=res.real_end,
-        )

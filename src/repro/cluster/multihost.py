@@ -52,20 +52,30 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.obs import NULL_TRACER, TraceCtx
+
 # ---------------------------------------------------------------------------
 # Wire protocol
 # ---------------------------------------------------------------------------
 #
 # Every message is ``(kind, payload)``; payload *contents* are the typed
 # dataclasses below (:class:`SegmentMsg`, :class:`RecordMsg`,
-# :class:`CheckpointWrite`, :class:`KernelPolicy`) plus plain-python / numpy
-# scalars and ``encode_tree``'d arrays, so the protocol survives pickling
-# across process boundaries bit-exactly AND a field rename breaks loudly at
-# construction instead of silently at a remote KeyError.
+# :class:`CheckpointWrite`, :class:`KernelPolicy`,
+# :class:`~repro.obs.TraceCtx`) plus plain-python / numpy scalars and
+# ``encode_tree``'d arrays, so the protocol survives pickling across process
+# boundaries bit-exactly AND a field rename breaks loudly at construction
+# instead of silently at a remote KeyError.
 #
 #   dispatcher -> worker:  ("init", state) ("run", request) ("stop", {})
 #   worker -> dispatcher:  ("ready", info) ("done", result) ("err", failure)
 #                          ("fatal", failure)   # startup / loop death
+#
+# A "run" payload optionally carries ``"trace"``, a :class:`TraceCtx`
+# naming the dispatcher-side parent span; the matching "done" reply then
+# carries ``"spans"`` (the worker's finished span tree, as
+# :meth:`repro.obs.Span.to_dict` dicts) and ``"span_t0"`` (the worker root
+# span's start on the *worker's* monotonic clock) so the dispatcher can
+# rebase and stitch them under its own trace.
 
 
 class TransportError(RuntimeError):
@@ -255,38 +265,70 @@ def _worker_main(host_id: int, n_devices: int, inbox, outbox) -> None:
         return
 
     state: Dict[str, Any] = {}
+    # one worker-side tracer shared by every traced request: span stacks
+    # are thread-local and pop_root flushes one request's tree, so
+    # concurrent do_run threads don't interleave. Created lazily on the
+    # first traced request; untraced runs never pay for it.
+    wtracer_box: List[Any] = [None]
+    wtracer_lock = threading.Lock()
 
     def do_run(payload: Dict[str, Any]) -> None:
         rid = payload["req"]
         try:
             seg = decode_segment(payload["seg"])
             policy = payload.get("policy") or KernelPolicy()
+            trace_ctx = payload.get("trace")
             mempool = (
                 MemoryPool(payload["states"]) if payload["has_pool"] else None
             )
-            with dpool.lease_units(payload["units"]) as slice_:
-                rec = executor.run_segment(
-                    seg,
-                    state["configs_by_cid"],
-                    state["total_steps"],
-                    state["cfg"],
-                    state["base"],
-                    seq=state["seq"],
-                    pool=mempool,
-                    data_iter_fn=state["data_iter_fn"],
-                    seed=state["seed"],
-                    slice_=slice_,
-                    impl=policy.impl,
-                    remat=policy.remat,
+            spans = span_t0 = None
+            if trace_ctx is not None:
+                from repro.obs import Tracer
+
+                with wtracer_lock:
+                    if wtracer_box[0] is None:
+                        wtracer_box[0] = Tracer()
+                        executor.tracer = wtracer_box[0]
+                wtracer = wtracer_box[0]
+                root_cm = wtracer.span(
+                    f"host{host_id}.segment", cat="host",
+                    job_id=seg.job_id, req=rid,
                 )
-            outbox.put(
-                ("done", {
-                    "req": rid,
-                    "host": host_id,
-                    "record": encode_record(rec),
-                    "writes": mempool.writes if mempool is not None else [],
-                })
-            )
+            else:
+                root_cm = None
+            with dpool.lease_units(payload["units"]) as slice_:
+                if root_cm is not None:
+                    root = root_cm.__enter__()
+                try:
+                    rec = executor.run_segment(
+                        seg,
+                        state["configs_by_cid"],
+                        state["total_steps"],
+                        state["cfg"],
+                        state["base"],
+                        seq=state["seq"],
+                        pool=mempool,
+                        data_iter_fn=state["data_iter_fn"],
+                        seed=state["seed"],
+                        slice_=slice_,
+                        impl=policy.impl,
+                        remat=policy.remat,
+                    )
+                finally:
+                    if root_cm is not None:
+                        root_cm.__exit__(None, None, None)
+                        spans = wtracer.pop_root(root.span_id)
+                        span_t0 = root.start
+            done = {
+                "req": rid,
+                "host": host_id,
+                "record": encode_record(rec),
+                "writes": mempool.writes if mempool is not None else [],
+            }
+            if spans is not None:
+                done["spans"] = spans
+                done["span_t0"] = span_t0
+            outbox.put(("done", done))
         except BaseException as e:  # noqa: BLE001 — shipped to the dispatcher
             outbox.put(
                 ("err", {
@@ -534,6 +576,9 @@ class DispatchExecutor:
 
     def __init__(self, dispatcher: "HostDispatcher"):
         self.disp = dispatcher
+        # settable so ClusterRunner's tracer-adoption contract applies to
+        # the remote executor exactly like the local one
+        self.tracer = dispatcher.tracer
 
     def pack_template(self, cfg, configs, seed: int = 0):
         """Pre-warm hook: templates are built inside each worker (their
@@ -593,35 +638,56 @@ class DispatchExecutor:
                 impl=None if impl == "auto" else impl, remat=remat
             ),
         }
-        t_start = time.perf_counter()
-        last_died: Optional[WorkerDied] = None
-        for _attempt in range(d.max_restarts + 1):
-            rid = next(d._rid)
-            try:
-                worker = d._ensure_host(host)
-                reply = worker.request(
-                    rid, ("run", dict(base_payload, req=rid))
-                )
-                out = reply.wait()
-            except WorkerDied as e:
-                last_died = e
-                continue  # respawn + re-dispatch: the preempt/resume path
-            rec = decode_record(out["record"])
-            if pool is not None:
-                for w in out["writes"]:
-                    if w.kind == "adapter":
-                        pool.save_adapter(w.adapter_id, w.tree, w.meta)
-                    else:
-                        pool.save_adapter_state(w.adapter_id, w.tree, w.meta)
-            # dispatcher-clock interval (worker clocks aren't comparable);
-            # ClusterRunner/_run_adaptive re-base these against their t0
-            rec.real_start = t_start
-            rec.real_end = time.perf_counter()
-            return rec
-        raise WorkerDied(
-            f"host {host} died {d.max_restarts + 1} times executing job "
-            f"{seg.job_id} (segment of configs {seg.config_ids})"
-        ) from last_died
+        tracer = self.tracer
+        with tracer.span(
+            "dispatch.segment", cat="dispatch", track=f"host{host}",
+            job_id=seg.job_id, host=host, units=list(slice_.units),
+        ) as dspan:
+            if tracer.enabled:
+                base_payload["trace"] = tracer.context()
+            t_start = time.perf_counter()
+            last_died: Optional[WorkerDied] = None
+            for _attempt in range(d.max_restarts + 1):
+                rid = next(d._rid)
+                try:
+                    worker = d._ensure_host(host)
+                    t_send = time.perf_counter()
+                    reply = worker.request(
+                        rid, ("run", dict(base_payload, req=rid))
+                    )
+                    out = reply.wait()
+                except WorkerDied as e:
+                    last_died = e
+                    continue  # respawn + re-dispatch: preempt/resume path
+                rec = decode_record(out["record"])
+                if pool is not None:
+                    for w in out["writes"]:
+                        if w.kind == "adapter":
+                            pool.save_adapter(w.adapter_id, w.tree, w.meta)
+                        else:
+                            pool.save_adapter_state(
+                                w.adapter_id, w.tree, w.meta
+                            )
+                if tracer.enabled and out.get("spans"):
+                    # worker clocks aren't comparable: rebase so the
+                    # worker's root span starts at the moment this side
+                    # handed the request to the transport
+                    tracer.ingest(
+                        out["spans"],
+                        offset=t_send - out["span_t0"],
+                        parent_id=dspan.span_id,
+                        track_prefix=f"host{host}/",
+                    )
+                # dispatcher-clock interval (worker clocks aren't
+                # comparable); ClusterRunner/_run_adaptive re-base these
+                # against their t0
+                rec.real_start = t_start
+                rec.real_end = time.perf_counter()
+                return rec
+            raise WorkerDied(
+                f"host {host} died {d.max_restarts + 1} times executing job "
+                f"{seg.job_id} (segment of configs {seg.config_ids})"
+            ) from last_died
 
 
 class HostDispatcher:
@@ -650,12 +716,14 @@ class HostDispatcher:
         transport_factory: Optional[Callable] = None,
         max_restarts: int = 2,
         start_timeout: float = 300.0,
+        tracer=None,
     ):
         if isinstance(hosts, int):
             hosts = [devices_per_host] * hosts
         self.hosts: Tuple[int, ...] = tuple(int(n) for n in hosts)
         if not self.hosts or any(n <= 0 for n in self.hosts):
             raise ValueError(f"bad host layout {self.hosts}")
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.max_restarts = max_restarts
         self.start_timeout = start_timeout
         self._transport_factory = transport_factory or ProcessTransport
@@ -826,7 +894,8 @@ class HostDispatcher:
         from repro.cluster.runner import ClusterRunner
 
         runner = ClusterRunner(
-            self.executor, self.device_pool, concurrent=True
+            self.executor, self.device_pool, concurrent=True,
+            tracer=self.tracer,
         )
         result = runner.run(
             segments,

@@ -27,8 +27,9 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.cluster.executor import SliceExecutor
+from repro.cluster.executor import SliceExecutor, _slice_track
 from repro.cluster.pool import DevicePool, MeshSlice
+from repro.obs import NULL_TRACER
 
 
 @dataclass(frozen=True)
@@ -130,8 +131,17 @@ class ClusterRunner:
         pool: Optional[DevicePool] = None,
         *,
         concurrent: Optional[bool] = None,
+        tracer=None,
     ):
-        self.executor = executor or SliceExecutor()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.executor = executor or SliceExecutor(tracer=self.tracer)
+        # a caller-supplied executor without its own tracer adopts ours, so
+        # one `tracer=` at the runner threads through the whole segment path
+        # (executor fakes without a .tracer attribute are left alone)
+        ex_tracer = getattr(self.executor, "tracer", None)
+        if (self.tracer.enabled and ex_tracer is not None
+                and not ex_tracer.enabled):
+            self.executor.tracer = self.tracer
         self.device_pool = pool or DevicePool()
         self.concurrent = (
             self.device_pool.total > 1 if concurrent is None else concurrent
@@ -181,26 +191,37 @@ class ClusterRunner:
         predicted: List[float] = [float("nan")] * len(order)
         errors: List[BaseException] = []
 
+        tracer = self.tracer
+        free_gauge = tracer.metrics.gauge("cluster.free_units")
+        run_parent: List[Optional[int]] = [None]
+
         def worker(idx: int, seg, slice_: MeshSlice):
             # the slice was acquired by the dispatch loop (to preserve
             # dispatch order); `held` guarantees this thread gives it back
-            # no matter how the executor dies
+            # no matter how the executor dies. The explicit ``parent=``
+            # stitches this pool-thread span under the dispatcher-thread
+            # "runner.run" span (thread-local stacks don't cross threads).
             try:
                 with self.device_pool.held(slice_):
-                    rec = self.executor.run_segment(
-                        seg,
-                        configs_by_cid,
-                        total_steps,
-                        cfg,
-                        base_params,
-                        seq=seq,
-                        pool=pool,
-                        data_iter_fn=data_iter_fn,
-                        seed=seed,
-                        slice_=slice_,
-                        impl=impl,
-                        remat=remat,
-                    )
+                    with tracer.span(
+                        "runner.segment", cat="runner",
+                        parent=run_parent[0], track=_slice_track(slice_),
+                        job_id=seg.job_id, units=list(slice_.units),
+                    ):
+                        rec = self.executor.run_segment(
+                            seg,
+                            configs_by_cid,
+                            total_steps,
+                            cfg,
+                            base_params,
+                            seq=seq,
+                            pool=pool,
+                            data_iter_fn=data_iter_fn,
+                            seed=seed,
+                            slice_=slice_,
+                            impl=impl,
+                            remat=remat,
+                        )
                     results[idx] = rec
                     if estimator is not None and seg.run_steps > 0:
                         estimator.observe(
@@ -212,6 +233,7 @@ class ClusterRunner:
             except BaseException as e:  # noqa: BLE001 — re-raised by run()
                 errors.append(e)
             finally:
+                free_gauge.set(self.device_pool.free)
                 done_events[idx].set()
 
         # Pre-warm the pack-state template of every distinct pack shape in
@@ -231,41 +253,52 @@ class ClusterRunner:
             if self.concurrent
             else None
         )
-        try:
-            for idx, seg in enumerate(order):
-                if errors:
-                    break
-                if estimator is not None:
-                    predicted[idx] = estimator.iter_time(
-                        [configs_by_cid[cid] for cid in seg.config_ids],
-                        seg.degree,
-                        seq,
-                    )
-                for dep in deps[idx]:
-                    done_events[dep].wait()
-                units = getattr(seg, "units", ()) or ()
-                if units:
-                    slice_ = self.device_pool.acquire_units(
-                        self.device_pool.map_units(units)
-                    )
-                else:  # unplanned segment: grab whatever fits
-                    slice_ = self.device_pool.acquire(
-                        min(seg.degree, self.device_pool.total)
-                    )
-                try:
-                    if tpe is not None:
-                        tpe.submit(worker, idx, seg, slice_)
-                    else:
-                        worker(idx, seg, slice_)
-                except RuntimeError:
-                    # submit refused (executor already shutting down): the
-                    # worker never ran, so give the slice back here
-                    self.device_pool.release(slice_)
-                    done_events[idx].set()
-                    raise
-        finally:
-            if tpe is not None:
-                tpe.shutdown(wait=True)
+        with tracer.span(
+            "runner.run", cat="runner", n_segments=len(order),
+            concurrent=self.concurrent,
+        ) as run_span:
+            run_parent[0] = run_span.span_id or None
+            try:
+                for idx, seg in enumerate(order):
+                    if errors:
+                        break
+                    if estimator is not None:
+                        predicted[idx] = estimator.iter_time(
+                            [configs_by_cid[cid] for cid in seg.config_ids],
+                            seg.degree,
+                            seq,
+                        )
+                    with tracer.span(
+                        "runner.wait_units", cat="runner",
+                        job_id=seg.job_id,
+                        units=list(getattr(seg, "units", ()) or ()),
+                    ):
+                        for dep in deps[idx]:
+                            done_events[dep].wait()
+                        units = getattr(seg, "units", ()) or ()
+                        if units:
+                            slice_ = self.device_pool.acquire_units(
+                                self.device_pool.map_units(units)
+                            )
+                        else:  # unplanned segment: grab whatever fits
+                            slice_ = self.device_pool.acquire(
+                                min(seg.degree, self.device_pool.total)
+                            )
+                    free_gauge.set(self.device_pool.free)
+                    try:
+                        if tpe is not None:
+                            tpe.submit(worker, idx, seg, slice_)
+                        else:
+                            worker(idx, seg, slice_)
+                    except RuntimeError:
+                        # submit refused (executor already shutting down):
+                        # the worker never ran, so give the slice back here
+                        self.device_pool.release(slice_)
+                        done_events[idx].set()
+                        raise
+            finally:
+                if tpe is not None:
+                    tpe.shutdown(wait=True)
         if errors:
             raise errors[0]
         # free dropping below its entry level means a segment path here

@@ -240,9 +240,13 @@ def autotune_shape(
     backend: Optional[str] = None,
     candidates: Sequence[Tuple[int, int, int]] = CANDIDATES,
     measure_fn: Optional[Callable] = None,
+    tracer=None,
 ) -> Dict:
     """Tune one shape: sweep candidates (TPU) or time the XLA fused path
     (anything else), returning the cache entry dict."""
+    from repro.obs import NULL_TRACER
+
+    tracer = tracer if tracer is not None else NULL_TRACER
     backend = backend or jax.default_backend()
     measure_fn = measure_fn or _default_measure
     sweep: List[Optional[Tuple[int, int, int]]] = (
@@ -252,9 +256,16 @@ def autotune_shape(
     for i, blocks in enumerate(sweep):
         # the two-pass baseline is blocks-independent: time it once per
         # shape (first candidate), not once per candidate
-        fused_t, twopass_t = measure_fn(
-            n, m, k, l, r, blocks, backend, twopass=(i == 0)
-        )
+        with tracer.span(
+            "autotune.measure", cat="autotune", track="autotune",
+            shape=[n, m, k, l, r],
+            blocks=list(blocks) if blocks else None,
+        ) as msp:
+            fused_t, twopass_t = measure_fn(
+                n, m, k, l, r, blocks, backend, twopass=(i == 0)
+            )
+            if tracer.enabled:
+                msp.args["seconds"] = fused_t
         if twopass_t is not None:
             tp_t = min(tp_t, twopass_t)
         if fused_t < best_t:
@@ -276,6 +287,7 @@ def tune(
     force: bool = False,
     candidates: Sequence[Tuple[int, int, int]] = CANDIDATES,
     measure_fn: Optional[Callable] = None,
+    tracer=None,
 ) -> KernelProfile:
     """Tune every ``(n, m, k, l, r)`` shape not already in the cache; merge
     into (and re-save) ``cache_path`` when given."""
@@ -294,6 +306,7 @@ def tune(
         profile.entries[key] = autotune_shape(
             n, m, k, l, r,
             backend=backend, candidates=candidates, measure_fn=measure_fn,
+            tracer=tracer,
         )
         dirty = True
     if cache_path and dirty:
@@ -323,10 +336,12 @@ def tune_for_model(
     cache_path: Optional[str] = None,
     fast: bool = True,
     measure_fn: Optional[Callable] = None,
+    tracer=None,
 ) -> KernelProfile:
     """Launcher hook: tune this pack's representative projection shapes."""
     return tune(
         model_shapes(cfg, configs, seq, fast=fast),
         cache_path=cache_path,
         measure_fn=measure_fn,
+        tracer=tracer,
     )

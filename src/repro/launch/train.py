@@ -44,7 +44,57 @@ def _estimator(args, cfg):
     return ProfiledCostModel(CostModel(cfg, hw), store), store
 
 
-def _run_multihost(args, cfg, configs):
+def _make_tracer(args):
+    """One Tracer for the whole launch when --trace-out/--metrics-out asked
+    for it, else the shared no-op — every tier below receives this object."""
+    from repro.obs import NULL_TRACER, Tracer
+
+    if args.trace_out or args.metrics_out:
+        return Tracer()
+    return NULL_TRACER
+
+
+def _export_obs(args, tracer):
+    if args.trace_out:
+        tracer.export(args.trace_out)
+        print(f"saved Chrome trace to {args.trace_out} "
+              f"({len(tracer.spans())} span(s)) — open in ui.perfetto.dev")
+    if args.metrics_out:
+        tracer.export_metrics(args.metrics_out)
+        print(f"saved metrics to {args.metrics_out}")
+
+
+def _drift_table(records, timings, seq):
+    """Join executed records to their measured timings by (config_ids, seq).
+
+    The two lists are usually parallel, but the runner orders timings by
+    virtual start while records come back in the engine's order — a plain
+    zip mispairs them whenever those differ, so key the join instead."""
+    from collections import deque
+
+    by_key = {}
+    for t in timings:
+        by_key.setdefault((t.config_ids, t.seq), deque()).append(t)
+    for rec in records:
+        key = (tuple(rec.job.config_ids), seq)
+        q = by_key.get(key)
+        seg_timing = q.popleft() if q else None
+        per_adapter = (
+            np.round(np.asarray(rec.final_losses), 3)
+            if rec.final_losses is not None else None
+        )
+        if seg_timing is None:
+            print(f"  job cids={rec.job.config_ids} deg={rec.job.degree} "
+                  f"     (no timing)  losses={per_adapter}")
+            continue
+        drift = seg_timing.drift
+        drift_s = f"{100 * drift:+.1f}%" if drift == drift else "n/a"
+        print(f"  job cids={rec.job.config_ids} deg={rec.job.degree} "
+              f"{1e3 * seg_timing.measured_iter:8.1f} ms/step "
+              f"(plan drift {drift_s})  losses={per_adapter}")
+
+
+def _run_multihost(args, cfg, configs, tracer):
     """--hosts N: plan host-aware, execute process-per-host.
 
     Each simulated host is a subprocess that forces its own
@@ -67,8 +117,8 @@ def _run_multihost(args, cfg, configs):
     meta = pack_meta(configs)
     base, _ = init_model(jax.random.PRNGKey(0), cfg, meta)
     pool = CheckpointPool(args.pool) if args.pool else None
-    eng = ExecutionEngine(est, g, host_size=per)
-    with HostDispatcher(args.hosts, per) as disp:
+    eng = ExecutionEngine(est, g, host_size=per, tracer=tracer)
+    with HostDispatcher(args.hosts, per, tracer=tracer) as disp:
         t0 = time.perf_counter()
         # --impl/--remat ride the wire as a KernelPolicy with every
         # segment, so each host worker runs the tier selected here
@@ -81,21 +131,13 @@ def _run_multihost(args, cfg, configs):
     print(f"{len(records)} job(s) in {elapsed:.1f}s wall "
           f"(makespan {makespan:.1f}s, peak overlap "
           f"{result.max_overlap()}, {disp.n_restarts} worker restart(s))")
-    for rec, seg_timing in zip(records, result.timings):
-        per_adapter = (
-            np.round(np.asarray(rec.final_losses), 3)
-            if rec.final_losses is not None else None
-        )
-        drift = seg_timing.drift
-        drift_s = f"{100 * drift:+.1f}%" if drift == drift else "n/a"
-        print(f"  job cids={rec.job.config_ids} deg={rec.job.degree} "
-              f"{1e3 * seg_timing.measured_iter:8.1f} ms/step "
-              f"(plan drift {drift_s})  losses={per_adapter}")
+    _drift_table(records, result.timings, args.seq)
     if args.profile_out:
         store.save(args.profile_out)
         print(f"saved profile to {args.profile_out}")
     if pool is not None:
         print(f"saved {len(pool.list())} adapters to {args.pool}")
+    _export_obs(args, tracer)
 
 
 def main():
@@ -157,6 +199,14 @@ def main():
                          "(same arch/ranks) instead of initializing fresh")
     ap.add_argument("--state-id", default=None,
                     help="packed-state id in the pool (default: the arch)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON of the run "
+                         "(spans from every tier, one Perfetto track per "
+                         "device unit / host / serve row); load it at "
+                         "ui.perfetto.dev or chrome://tracing")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics registry (counters / gauges / "
+                         "histogram summaries) as JSON")
     ap.add_argument("--log-every", type=int, default=5)
     args = ap.parse_args()
     if (args.save_state or args.resume_state) and not args.pool:
@@ -188,6 +238,7 @@ def main():
     print(f"arch={cfg.name} pack N={meta.n} r_bucket={meta.r_bucket} "
           f"steps={args.steps} seq={args.seq}")
 
+    tracer = _make_tracer(args)
     if args.hosts > 1 or args.devices_per_host > 1:
         if (args.mesh or args.fsdp or args.seq_parallel or args.save_state
                 or args.resume_state):
@@ -195,7 +246,7 @@ def main():
                      "--seq-parallel/--save-state/--resume-state (per-job "
                      "parallelism comes from the planner; use "
                      "--devices-per-host for host width)")
-        _run_multihost(args, cfg, configs)
+        _run_multihost(args, cfg, configs, tracer)
         return
 
     mesh_shape = None
@@ -256,7 +307,7 @@ def main():
                      "combine it with --impl fused/fused_xla/fused_pallas")
         prof = tune_for_model(
             cfg, configs, seq=args.seq, cache_path=args.autotune_cache,
-            fast=True,
+            fast=True, tracer=tracer,
         )
         est = type(est)(prof.calibrate(est.prior), est.store)
         # tuned Pallas tile sizes for this pack's representative projection
@@ -270,7 +321,7 @@ def main():
     pred_prior = est.prior.iter_time(configs, degree, args.seq)
     pred_profiled = est.iter_time(configs, degree, args.seq)  # before observing
 
-    ex = SliceExecutor()
+    ex = SliceExecutor(tracer=tracer)
     res = ex.train_pack(
         cfg,
         configs,
@@ -336,6 +387,8 @@ def main():
                  "batch_size": c.batch_size, "final_loss": float(per[i])},
             )
         print(f"saved {len(configs)} adapters to {args.pool}")
+
+    _export_obs(args, tracer)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,52 @@
+"""Observability layer: structured tracing + metrics for every tier.
+
+Two halves, one handle:
+
+* :class:`~repro.obs.trace.Tracer` — span-based tracing with Chrome
+  trace-event export (Perfetto-loadable), cross-process stitching for
+  multihost workers, and a true no-op disabled mode
+  (:data:`~repro.obs.trace.NULL_TRACER`);
+* :class:`~repro.obs.metrics.MetricsRegistry` — counters, gauges, and
+  p50/p95/p99 latency histograms, reachable as ``tracer.metrics``.
+
+Constructors across the stack (`ExecutionEngine`, `ClusterRunner`,
+`SliceExecutor`, `HostDispatcher`, `ServeEngine`, the autotuner entry
+points) accept ``tracer=``; passing one object threads both signals
+through a run. ``launch/train.py --trace-out/--metrics-out`` and
+``benchmarks/bench_serve.py --trace-out`` are the CLI surfaces.
+"""
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NULL_METRICS,
+    NullMetrics,
+    percentile,
+)
+from .trace import (
+    NULL_TRACER,
+    Span,
+    TIER_CATS,
+    TraceCtx,
+    Tracer,
+    trace_tiers,
+    validate_chrome_trace,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_METRICS",
+    "NullMetrics",
+    "percentile",
+    "NULL_TRACER",
+    "Span",
+    "TIER_CATS",
+    "TraceCtx",
+    "Tracer",
+    "trace_tiers",
+    "validate_chrome_trace",
+]

@@ -285,7 +285,8 @@ class ExecutionEngine:
     (:meth:`_run_adaptive`): re-planning against live measurements on every
     device-free event and re-assigning device units on drift."""
 
-    def __init__(self, cm: CostEstimator, g: int, *, host_size: Optional[int] = None):
+    def __init__(self, cm: CostEstimator, g: int, *,
+                 host_size: Optional[int] = None, tracer=None):
         """``host_size`` makes unit assignment host-aware: the ``g`` units
         are grouped into hosts of ``host_size`` (unit ``u`` lives on host
         ``u // host_size``), a single job's parallelism degree is capped at
@@ -305,9 +306,12 @@ class ExecutionEngine:
                     "degrees are powers of two; other host widths strand "
                     "units that no job can ever use)"
                 )
+        from repro.obs import NULL_TRACER
+
         self.cm = cm
         self.host_size = host_size
         self.monitor = ResourceMonitor(g)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
     def _unschedulable(self, n_pending: int) -> RuntimeError:
         g = self.monitor.total
@@ -375,6 +379,20 @@ class ExecutionEngine:
         default inside :meth:`Runner.run`."""
         from repro.cluster import assign_units
 
+        with self.tracer.span(
+            "engine.run_local", cat="engine",
+            n_jobs=len(schedule.jobs), g=self.monitor.total,
+        ):
+            return self._run_local_inner(
+                schedule, configs, cfg, base_params, n_steps=n_steps,
+                seq=seq, pool=pool, data_iter_fn=data_iter_fn, seed=seed,
+                runner=runner, impl=impl, remat=remat,
+                assign_units=assign_units,
+            )
+
+    def _run_local_inner(self, schedule, configs, cfg, base_params, *,
+                         n_steps, seq, pool, data_iter_fn, seed, runner,
+                         impl, remat, assign_units):
         units = assign_units(
             [(j.start, j.end, j.degree) for j in schedule.jobs],
             self.monitor.total,
@@ -458,11 +476,35 @@ class ExecutionEngine:
         (lowest-numbered free units first), carried on ``JobSegment.units``
         so the cluster runner executes each job on exactly the mesh slice
         the scheduler planned."""
+        with self.tracer.span(
+            "engine.plan_online", cat="engine",
+            n_configs=len(trace), g=self.monitor.total,
+        ):
+            return self._plan_online_impl(
+                trace, seq, n_steps, repack=repack, admission=admission,
+                migration_budget=migration_budget,
+                preempt_min_remaining=preempt_min_remaining,
+                lookahead_k=lookahead_k,
+            )
+
+    def _plan_online_impl(
+        self,
+        trace: Sequence[Arrival],
+        seq: int,
+        n_steps: int,
+        *,
+        repack: str,
+        admission: str,
+        migration_budget: int,
+        preempt_min_remaining: Optional[float],
+        lookahead_k: int,
+    ) -> OnlineSchedule:
         if repack not in ("event", "drain"):
             raise ValueError(f"unknown repack policy {repack!r}")
         if admission not in ("patient", "eager"):
             raise ValueError(f"unknown admission policy {admission!r}")
         g = self.monitor.total
+        tracer = self.tracer
         # simulation contract: the virtual clock always ticks on the pure
         # prior, independent of any profile/measurement state
         cm = self.cm.virtual_model()
@@ -526,10 +568,14 @@ class ExecutionEngine:
             pending.sort(key=lambda e: e.cid)
             cfgs = [e.config for e in pending]
             resid = [e.residual for e in pending]
-            res = replan(
-                cm, cfgs, free, seq, n_steps, residual_steps=resid,
-                max_degree=self.host_size,
-            )
+            with tracer.span(
+                "engine.replan", cat="engine",
+                pending=len(pending), free=free,
+            ):
+                res = replan(
+                    cm, cfgs, free, seq, n_steps, residual_steps=resid,
+                    max_degree=self.host_size,
+                )
             n_repacks += 1
             n_f += res.n_f_calls
             if not res.jobs:
@@ -557,6 +603,10 @@ class ExecutionEngine:
                     else float("inf")
                 )
                 if covered_wait >= covered_now and finish_wait <= finish_now:
+                    tracer.instant(
+                        "engine.admission_hold", cat="engine",
+                        pending=len(pending), free=free,
+                    )
                     return  # hold: the next device-free event re-evaluates
             launched = set()
             jobs = res.jobs
@@ -592,6 +642,10 @@ class ExecutionEngine:
                 )
                 free -= jp.degree
                 launched |= set(r.cids)
+                tracer.instant(
+                    "engine.launch", cat="engine", job_id=r.job_id,
+                    degree=jp.degree, units=list(units),
+                )
             if launched:
                 pending[:] = [e for e in pending if e.cid not in launched]
 
@@ -616,6 +670,10 @@ class ExecutionEngine:
             free += r.degree
             release_units(r)
             n_migrations += 1
+            tracer.instant(
+                "engine.preempt", cat="engine", job_id=r.job_id,
+                steps_run=steps_run,
+            )
 
         def migration_pays(victim: _Running, now: float) -> bool:
             """Cost-model estimate of the paper's dynamic-task-migration
@@ -888,9 +946,10 @@ class ExecutionEngine:
         from concurrent.futures import ThreadPoolExecutor
 
         from repro.cluster import ClusterRunner, SegmentTiming
+        from repro.cluster.executor import _slice_track
 
         est = self.cm
-        runner = runner or ClusterRunner()
+        runner = runner or ClusterRunner(tracer=self.tracer)
         executor, dpool = runner.executor, runner.device_pool
         # kernel policy: capture the CALLER's context-local default here —
         # the submit() workers below run on executor threads that never see
@@ -927,6 +986,13 @@ class ExecutionEngine:
             else None
         )
         t0 = _time.perf_counter()
+        tracer = self.tracer
+        # the adaptive loop spans the whole method (multiple exits via the
+        # finally below), so the root span is entered/exited manually
+        root_cm = tracer.span(
+            "engine.run_adaptive", cat="engine", n_configs=len(trace), g=g
+        )
+        root_id = root_cm.__enter__().span_id or None
 
         def now() -> float:
             return _time.perf_counter() - t0
@@ -960,26 +1026,41 @@ class ExecutionEngine:
             if probe:
                 n_probes += 1
             slice_ = dpool.acquire_units(dpool.map_units(units))
+            tracer.instant(
+                "engine.launch", cat="engine", job_id=seg.job_id,
+                degree=degree, units=list(units), probe=probe,
+            )
+            tracer.metrics.gauge("cluster.free_units").set(dpool.free)
 
             def work():
+                # pool threads never see the loop thread's span stack: the
+                # explicit ``parent=`` stitches this segment under the
+                # adaptive root
                 rec = err = None
                 try:
                     with dpool.held(slice_):
-                        rec = executor.run_segment(
-                            seg,
-                            configs_by_cid,
-                            total_steps,
-                            cfg,
-                            base_params,
-                            seq=seq,
-                            pool=pool,
-                            data_iter_fn=data_iter_fn,
-                            seed=seed,
-                            slice_=slice_,
-                            impl=impl,
-                        )
+                        with tracer.span(
+                            "runner.segment", cat="runner",
+                            parent=root_id, track=_slice_track(slice_),
+                            job_id=seg.job_id, probe=probe,
+                        ):
+                            rec = executor.run_segment(
+                                seg,
+                                configs_by_cid,
+                                total_steps,
+                                cfg,
+                                base_params,
+                                seq=seq,
+                                pool=pool,
+                                data_iter_fn=data_iter_fn,
+                                seed=seed,
+                                slice_=slice_,
+                                impl=impl,
+                            )
                 except BaseException as e:  # noqa: BLE001 — re-raised below
                     err = e
+                finally:
+                    tracer.metrics.gauge("cluster.free_units").set(dpool.free)
                 events.put((seg.job_id, rec, err))
 
             if tpe is not None:
@@ -990,15 +1071,19 @@ class ExecutionEngine:
         def do_replan() -> bool:
             nonlocal n_repacks, n_f
             pending.sort(key=lambda e: e.cid)
-            res = replan(
-                est,
-                [e.config for e in pending],
-                len(free_units),
-                seq,
-                n_steps,
-                residual_steps=[e.residual for e in pending],
-                max_degree=self.host_size,
-            )
+            with tracer.span(
+                "engine.replan", cat="engine",
+                pending=len(pending), free=len(free_units),
+            ):
+                res = replan(
+                    est,
+                    [e.config for e in pending],
+                    len(free_units),
+                    seq,
+                    n_steps,
+                    residual_steps=[e.residual for e in pending],
+                    max_degree=self.host_size,
+                )
             n_repacks += 1
             n_f += res.n_f_calls
             if not res.jobs:
@@ -1115,6 +1200,7 @@ class ExecutionEngine:
         finally:
             if tpe is not None:
                 tpe.shutdown(wait=True)
+            root_cm.__exit__(None, None, None)
 
         sched = OnlineSchedule(
             segments=segments,
@@ -1161,7 +1247,7 @@ class ExecutionEngine:
         ``repro.cluster.ClusterResult``."""
         from repro.cluster import ClusterRunner
 
-        runner = runner or ClusterRunner()
+        runner = runner or ClusterRunner(tracer=self.tracer)
         return runner.run(
             segments,
             configs_by_cid,

@@ -57,6 +57,7 @@ from repro.configs.base import LoraConfig, ModelConfig
 from repro.core.adapter import PackMeta, pack_meta
 from repro.core.packed_lora import extract_adapter, inject_adapter
 from repro.models.model import decode_step, init_model, prefill
+from repro.obs import NULL_TRACER, Histogram
 from repro.serve.decode import pad_caches
 
 
@@ -110,7 +111,15 @@ class ServeResult:
 
 @dataclass
 class ServeStats:
-    """Aggregate outcome of one ``ServeEngine.serve`` drain."""
+    """Aggregate outcome of one ``ServeEngine.serve`` drain.
+
+    The latency histograms are always on (a histogram record is one lock +
+    one float append, tracer or not): ``ttft`` is seconds from a request
+    entering the engine's queue to its first emitted token, ``itl`` is the
+    wall duration of each decode step, recorded once per active row per
+    step (the per-token gap each in-flight request observed), and
+    ``queue_wait`` is seconds from enqueue to the start of admission.
+    Percentiles via e.g. ``stats.ttft.summary()["p95"]``."""
 
     results: List[ServeResult] = field(default_factory=list)
     steps: int = 0  # decode steps executed
@@ -120,6 +129,11 @@ class ServeStats:
     cache_hits: int = 0
     cache_misses: int = 0
     cache_evictions: int = 0
+    ttft: Histogram = field(default_factory=lambda: Histogram("serve.ttft"))
+    itl: Histogram = field(default_factory=lambda: Histogram("serve.itl"))
+    queue_wait: Histogram = field(
+        default_factory=lambda: Histogram("serve.queue_wait")
+    )
 
     @property
     def adapters_served(self) -> int:
@@ -132,6 +146,14 @@ class ServeStats:
     @property
     def mean_occupancy(self) -> float:
         return self.occupancy_sum / self.steps if self.steps else 0.0
+
+    def latency_summaries(self) -> Dict[str, Dict[str, float]]:
+        """``{ttft, itl, queue_wait}`` percentile summaries, in seconds."""
+        return {
+            "ttft": self.ttft.summary(),
+            "itl": self.itl.summary(),
+            "queue_wait": self.queue_wait.summary(),
+        }
 
 
 def poisson_requests(
@@ -176,7 +198,7 @@ class AdapterSlotCache:
     slot is pinned the cache refuses a new insert rather than silently
     growing past capacity."""
 
-    def __init__(self, capacity: int, pool=None):
+    def __init__(self, capacity: int, pool=None, *, metrics=None):
         assert capacity >= 1
         self.capacity = capacity
         self.pool = pool
@@ -185,6 +207,9 @@ class AdapterSlotCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # optional MetricsRegistry: mirrors the local counters into the
+        # run-wide registry (serve.adapter_cache_*) when tracing is on
+        self.metrics = metrics if metrics is not None else NULL_TRACER.metrics
 
     def __contains__(self, adapter_id: str) -> bool:
         return adapter_id in self._slots
@@ -219,6 +244,7 @@ class AdapterSlotCache:
                 )
             self._slots.pop(victim)
             self.evictions += 1
+            self.metrics.counter("serve.adapter_cache_evictions").inc()
 
     def publish(self, adapter_id: str, adapter_tree: dict, meta: dict) -> None:
         """Insert (or refresh) an adapter from memory — no pool involved."""
@@ -231,9 +257,11 @@ class AdapterSlotCache:
     def get(self, adapter_id: str) -> Tuple[dict, dict]:
         if adapter_id in self._slots:
             self.hits += 1
+            self.metrics.counter("serve.adapter_cache_hits").inc()
             self._slots.move_to_end(adapter_id)
             return self._slots[adapter_id]
         self.misses += 1
+        self.metrics.counter("serve.adapter_cache_misses").inc()
         if self.pool is None or not self.pool.has(adapter_id):
             raise KeyError(
                 f"adapter {adapter_id!r} is neither staged nor in the "
@@ -388,10 +416,12 @@ class ServeEngine:
         impl: Optional[str] = None,
         remat: Optional[str] = None,
         seed: int = 0,
+        tracer=None,
     ):
         from repro.cluster.pool import DevicePool
         from repro.cluster.runner import ClusterRunner
 
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.cfg = cfg
         self.rows = rows
         self.smax = smax
@@ -431,8 +461,15 @@ class ServeEngine:
         self._pos = np.zeros((rows,), np.int32)
         self._rows: List[Optional[_ActiveRow]] = [None] * rows
 
-        self.slot_cache = AdapterSlotCache(slot_capacity, pool=checkpoint_pool)
+        self.slot_cache = AdapterSlotCache(
+            slot_capacity, pool=checkpoint_pool,
+            metrics=self.tracer.metrics,
+        )
         self.queue: "deque[ServeRequest]" = deque()
+        # wall-clock seconds (serve-relative) each queued request entered
+        # the engine, for the TTFT / queue-wait histograms
+        self._enq_wall: Dict[int, float] = {}
+        self._serve_t0 = 0.0  # perf_counter origin of the live serve() call
         self.serve_executor = serve_executor or default_executor()
 
         # Runner surface: training side
@@ -440,10 +477,11 @@ class ServeEngine:
         if train_executor is None:
             from repro.cluster.executor import SliceExecutor
 
-            train_executor = SliceExecutor()
+            train_executor = SliceExecutor(tracer=self.tracer)
         self.executor = train_executor
         self._runner = ClusterRunner(
-            self.executor, self.device_pool, concurrent=None
+            self.executor, self.device_pool, concurrent=None,
+            tracer=self.tracer,
         )
         self.concurrent = self._runner.concurrent
 
@@ -521,39 +559,63 @@ class ServeEngine:
             )
         return float(alpha) / float(rank)
 
-    def _admit(self, req: ServeRequest, row: int, step: int, wall: float):
-        adapter, ameta = self.slot_cache.get(req.adapter_id)
-        self.slot_cache.pin(req.adapter_id)
-        prompt = np.asarray(req.prompt, np.int32)
-        n_patch = self.cfg.n_patch_tokens or 0
-        s_total = prompt.shape[0] + n_patch
-        if s_total + req.max_new_tokens > self.smax:
-            self.slot_cache.unpin(req.adapter_id)
-            raise ValueError(
-                f"request {req.request_id}: prompt {s_total} + "
-                f"{req.max_new_tokens} new tokens exceeds smax={self.smax}"
+    def _admit(self, req: ServeRequest, row: int, step: int, wall: float,
+               stats: Optional[ServeStats] = None):
+        if stats is not None:
+            stats.queue_wait.record(
+                max(0.0, wall - self._enq_wall.get(req.request_id, 0.0))
             )
-        # weights: rank-pad into the width-1 template (prefill — the
-        # bit-identical twin of the sequential baseline's), then write that
-        # row into the device-resident R-row pack; rows are independent
-        # thereafter
-        lora1 = jax.tree.map(
-            jnp.asarray, inject_adapter(self._lora1_host, adapter, 0)
-        )
-        self._lora = self._row_write(self._lora, lora1, row)
-        scale = self._scale_for(req, ameta)
-        batch = {"tokens": jnp.asarray(prompt[None, :])}
-        if req.extra:
-            batch.update(req.extra)
-        pf = self.serve_executor.prefill_fn(
-            self.cfg, 1, dist=self.dist, kcfg=self.kcfg1
-        )
-        lg, c1 = pf(
-            self.base, lora1, jnp.full((1,), scale, jnp.float32), batch
-        )
-        c1 = pad_caches(c1, self.smax)
-        self._caches = self._row_write(self._caches, c1, row)
-        first = int(jnp.argmax(lg[0, -1, :]))
+        with self.tracer.span(
+            "serve.admit", cat="serve", track=f"row{row}",
+            request_id=req.request_id, adapter=req.adapter_id, step=step,
+        ):
+            adapter, ameta = self.slot_cache.get(req.adapter_id)
+            self.slot_cache.pin(req.adapter_id)
+            prompt = np.asarray(req.prompt, np.int32)
+            n_patch = self.cfg.n_patch_tokens or 0
+            s_total = prompt.shape[0] + n_patch
+            if s_total + req.max_new_tokens > self.smax:
+                self.slot_cache.unpin(req.adapter_id)
+                raise ValueError(
+                    f"request {req.request_id}: prompt {s_total} + "
+                    f"{req.max_new_tokens} new tokens exceeds smax={self.smax}"
+                )
+            # weights: rank-pad into the width-1 template (prefill — the
+            # bit-identical twin of the sequential baseline's), then write
+            # that row into the device-resident R-row pack; rows are
+            # independent thereafter
+            lora1 = jax.tree.map(
+                jnp.asarray, inject_adapter(self._lora1_host, adapter, 0)
+            )
+            self._lora = self._row_write(self._lora, lora1, row)
+            scale = self._scale_for(req, ameta)
+            batch = {"tokens": jnp.asarray(prompt[None, :])}
+            if req.extra:
+                batch.update(req.extra)
+            # the prefill-stall span: decode is paused while this row fills
+            with self.tracer.span(
+                "serve.prefill", cat="serve", track=f"row{row}",
+                request_id=req.request_id, n_prompt=int(prompt.shape[0]),
+            ):
+                pf = self.serve_executor.prefill_fn(
+                    self.cfg, 1, dist=self.dist, kcfg=self.kcfg1
+                )
+                lg, c1 = pf(
+                    self.base, lora1, jnp.full((1,), scale, jnp.float32),
+                    batch,
+                )
+                c1 = pad_caches(c1, self.smax)
+                self._caches = self._row_write(self._caches, c1, row)
+                first = int(jnp.argmax(lg[0, -1, :]))
+        if stats is not None:
+            # the prefill above emitted the request's first token
+            stats.ttft.record(
+                max(
+                    0.0,
+                    time.perf_counter() - self._serve_t0
+                    - self._enq_wall.get(req.request_id, 0.0),
+                )
+            )
         self._scales[row] = scale
         self._tok[row, 0] = first
         self._pos[row] = s_total
@@ -568,6 +630,18 @@ class ServeEngine:
         self._rows[row] = None
         self._scales[row] = 0.0
         self.slot_cache.unpin(active.request.adapter_id)
+        self._enq_wall.pop(active.request.request_id, None)
+        # the request's whole residency on its row, admit -> retire
+        self.tracer.add_span(
+            "serve.request",
+            self._serve_t0 + active.admitted_wall,
+            self._serve_t0 + wall,
+            cat="serve",
+            track=f"row{row}",
+            request_id=active.request.request_id,
+            adapter=active.request.adapter_id,
+            tokens=len(active.emitted),
+        )
         return ServeResult(
             request_id=active.request.request_id,
             adapter_id=active.request.adapter_id,
@@ -601,16 +675,39 @@ class ServeEngine:
         if self._caches is None:
             self._caches = init_caches(self.cfg, self.rows, self.smax)
         stats = ServeStats()
+        with self.tracer.span(
+            "serve.drain", cat="serve", track="serve",
+            n_requests=len(pending) + len(self.queue), rows=self.rows,
+        ):
+            self._serve_drain(pending, stats, max_steps)
+        stats.cache_hits = self.slot_cache.hits
+        stats.cache_misses = self.slot_cache.misses
+        stats.cache_evictions = self.slot_cache.evictions
+        stats.results.sort(key=lambda r: r.request_id)
+        return stats
+
+    def _serve_drain(
+        self,
+        pending: "deque[ServeRequest]",
+        stats: ServeStats,
+        max_steps: Optional[int],
+    ) -> None:
+        tracer = self.tracer
+        qdepth = tracer.metrics.gauge("serve.queue_depth")
         t0 = time.perf_counter()
+        self._serve_t0 = t0
         step = 0
         while True:
             wall = time.perf_counter() - t0
             while pending and pending[0].arrival <= step:
-                self.queue.append(pending.popleft())
+                req = pending.popleft()
+                self._enq_wall[req.request_id] = wall
+                self.queue.append(req)
+            qdepth.set(len(self.queue))
             for row in range(self.rows):
                 if self._rows[row] is None and self.queue:
                     req = self.queue.popleft()
-                    self._admit(req, row, step, wall)
+                    self._admit(req, row, step, wall, stats)
                     # single-token request: prefill already emitted it
                     if len(self._rows[row].emitted) >= req.max_new_tokens:
                         stats.tokens_emitted += len(self._rows[row].emitted)
@@ -625,19 +722,29 @@ class ServeEngine:
                 break
             if max_steps is not None and stats.steps >= max_steps:
                 break
-            fn = self.serve_executor.step_fn(
-                self.cfg, self.rows, dist=self.dist, kcfg=self.kcfg
-            )
-            next_tok, _lg, self._caches = fn(
-                self.base, self._lora, jnp.asarray(self._scales),
-                self._caches, jnp.asarray(self._tok),
-                jnp.asarray(self._pos),
-            )
-            next_tok = np.asarray(next_tok)
+            t_step = time.perf_counter()
+            with tracer.span(
+                "serve.step", cat="serve", track="serve",
+                step=step, batch=len(active),
+            ):
+                fn = self.serve_executor.step_fn(
+                    self.cfg, self.rows, dist=self.dist, kcfg=self.kcfg
+                )
+                next_tok, _lg, self._caches = fn(
+                    self.base, self._lora, jnp.asarray(self._scales),
+                    self._caches, jnp.asarray(self._tok),
+                    jnp.asarray(self._pos),
+                )
+                next_tok = np.asarray(next_tok)
             step += 1
             stats.steps += 1
             stats.occupancy_sum += len(active)
             wall = time.perf_counter() - t0
+            # every active row emitted exactly one token this step, so the
+            # step's wall time IS each row's inter-token latency
+            dt = wall - (t_step - t0)
+            for _ in active:
+                stats.itl.record(dt)
             for row in active:
                 a = self._rows[row]
                 a.emitted.append(int(next_tok[row]))
@@ -647,11 +754,6 @@ class ServeEngine:
                     stats.tokens_emitted += len(a.emitted)
                     stats.results.append(self._retire(row, step, wall))
         stats.wall_seconds = time.perf_counter() - t0
-        stats.cache_hits = self.slot_cache.hits
-        stats.cache_misses = self.slot_cache.misses
-        stats.cache_evictions = self.slot_cache.evictions
-        stats.results.sort(key=lambda r: r.request_id)
-        return stats
 
     # ---------------- sequential baseline -----------------------------------
 
@@ -665,6 +767,9 @@ class ServeEngine:
         t0 = time.perf_counter()
         order = sorted(requests, key=lambda r: (r.arrival, r.request_id))
         for req in order:
+            # all requests are in hand at t0, so the time spent behind
+            # earlier requests is this one's queue wait
+            stats.queue_wait.record(time.perf_counter() - t0)
             adapter, ameta = self.slot_cache.get(req.adapter_id)
             scale = self._scale_for(req, ameta)
             lora1 = jax.tree.map(
@@ -683,19 +788,24 @@ class ServeEngine:
             lg, caches = pf(self.base, lora1, scales, batch)
             caches = pad_caches(caches, s_total + req.max_new_tokens)
             admitted = time.perf_counter() - t0
+            stats.ttft.record(admitted)  # prefill just emitted token one
             tok = jnp.argmax(lg[:, -1, :], -1).astype(jnp.int32)
             out = [int(tok[0])]
             fn = self.serve_executor.step_fn(
                 self.cfg, 1, dist=self.dist, kcfg=self.kcfg1
             )
+            t_prev = time.perf_counter()
             for i in range(req.max_new_tokens - 1):
                 tok, _lg, caches = fn(
                     self.base, lora1, scales, caches, tok[:, None],
                     jnp.int32(s_total + i),
                 )
-                out.append(int(tok[0]))
+                out.append(int(tok[0]))  # syncs the device step
                 stats.steps += 1
                 stats.occupancy_sum += 1
+                t_now = time.perf_counter()
+                stats.itl.record(t_now - t_prev)
+                t_prev = t_now
             wall = time.perf_counter() - t0
             stats.tokens_emitted += len(out)
             stats.results.append(

@@ -167,6 +167,12 @@ class FakeHostTransport:
 
     The kernel policy shipped with each run request is recorded on
     ``.policies`` (a ``KernelPolicy`` per run, in arrival order).
+
+    Trace context: every ``run`` payload's ``trace`` field (a
+    :class:`~repro.obs.TraceCtx` or None) is recorded on ``.trace_ctxs``;
+    when present, the fabricated done reply carries worker-shaped ``spans``
+    + ``span_t0`` exactly like a real traced worker, so dispatcher-side
+    stitching (``Tracer.ingest``) is testable without subprocesses.
     """
 
     def __init__(
@@ -185,6 +191,7 @@ class FakeHostTransport:
         self.on_run = on_run
         self.runs: List[dict] = []
         self.policies: List = []  # KernelPolicy per run request
+        self.trace_ctxs: List = []  # TraceCtx | None per run request
         self.resumed: List[Tuple[int, str]] = []
         self.error: Optional[BaseException] = None
         self._in: "queue.Queue" = queue.Queue()
@@ -253,6 +260,7 @@ class FakeHostTransport:
             run_idx = len(self.runs)
             self.runs.append(payload)
             self.policies.append(payload.get("policy") or KernelPolicy())
+            self.trace_ctxs.append(payload.get("trace"))
             if self.die_on is not None and self.die_on(run_idx, payload):
                 self._alive = False  # died mid-segment: no reply, ever
                 return
@@ -294,21 +302,34 @@ class FakeHostTransport:
                                  "total_steps": int(total[cid])})
                         )
             wall = self.iter_scale * seg.run_steps
-            self._reply(
-                ("done", {
-                    "req": payload["req"],
-                    "host": self.host_id,
-                    "record": RecordMsg(
-                        config_ids=cids,
-                        degree=seg.degree,
-                        start=seg.start,
-                        end=seg.end,
-                        wall_seconds=wall,
-                        losses=np.full(len(cids), 1.0, np.float32),
-                    ),
-                    "writes": writes,
-                })
-            )
+            done = {
+                "req": payload["req"],
+                "host": self.host_id,
+                "record": RecordMsg(
+                    config_ids=cids,
+                    degree=seg.degree,
+                    start=seg.start,
+                    end=seg.end,
+                    wall_seconds=wall,
+                    losses=np.full(len(cids), 1.0, np.float32),
+                ),
+                "writes": writes,
+            }
+            if payload.get("trace") is not None:
+                # worker-shaped span tree on the worker's own clock (t0=0):
+                # a host root + one executor child, as Span.to_dict() dicts
+                done["spans"] = [
+                    {"name": f"host{self.host_id}.segment", "cat": "host",
+                     "track": "", "span_id": 1, "parent_id": None,
+                     "root_id": 1, "start": 0.0, "end": wall,
+                     "args": {"job_id": seg.job_id, "fake": True}},
+                    {"name": "executor.segment", "cat": "executor",
+                     "track": "unit0", "span_id": 2, "parent_id": 1,
+                     "root_id": 1, "start": 0.0, "end": wall,
+                     "args": {"job_id": seg.job_id}},
+                ]
+                done["span_t0"] = 0.0
+            self._reply(("done", done))
 
 
 class DictPool:
