@@ -1,0 +1,306 @@
+"""Quantized frozen-base tier: memory, packing density, throughput, parity.
+
+Four row families, one per ISSUE claim:
+
+  * ``memory``     — measured bytes of the quantized projection tensors of a
+    real (reduced) model tree vs their f32 storage: the int8 row must show
+    >= 1.8x reduction (per-channel scales cost ~1/256 extra), nf4 ~7x.
+  * ``density``    — cost-model packing: how many LoRA configs co-reside on
+    one memory-capped device under f32 / int8 / nf4 base pricing, and the
+    planner's job count for a fixed config set (fewer jobs = denser packs).
+  * ``throughput`` — fused_xla decode-shaped step (seq=16, dispatch-bound)
+    on a quantized base vs the dense base: in-kernel dequant must cost
+    <= ~10% (the >= 0.9x tokens/s claim) since the quantized path reads 4x
+    fewer weight bytes but adds the dequant epilogue.
+  * ``loss_parity``— train a tiny pack on the int8-quantized base and on the
+    explicitly dequantized copy of the SAME codes: per-adapter loss
+    trajectories must be bit-exact (in-kernel dequant commutes with tiling).
+
+CPU caveat (same as bench_kernels): wall-clock here reflects XLA dispatch
+economics, not HBM bandwidth — on an accelerator the quantized path gains
+from reading 4x fewer weight bytes; here we only claim it does not LOSE
+more than the dequant arithmetic costs. Memory/density/parity rows are
+platform-independent.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LoraConfig, get_config, reduced
+from repro.kernels.fused import fused_lora
+from repro.kernels.quant import (
+    dequantize,
+    dequantize_base_params,
+    is_quantized,
+    quantize_base_params,
+    quantize_weight,
+    quantized_nbytes,
+)
+from repro.sched.cost_model import A100_40G, CostModel
+
+SEQ = 16  # dispatch-bound (see bench_kernels) — the serving decode regime
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# memory: measured quantized bytes on a real model tree
+# ---------------------------------------------------------------------------
+
+
+def _tree_proj_bytes(params) -> Dict[str, int]:
+    """(quantized_bytes, dense_f32_bytes) over every quantized leaf."""
+    qbytes = dense = 0
+
+    def walk(node):
+        nonlocal qbytes, dense
+        if is_quantized(node):
+            qbytes += quantized_nbytes(node)
+            dense += int(np.prod(np.asarray(dequantize(node)).shape)) * 4
+            return
+        if isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+
+    walk(params)
+    return {"quant": qbytes, "f32": dense}
+
+
+def _memory_rows(fast: bool) -> List[Dict]:
+    from repro.core.adapter import pack_meta
+    from repro.models.model import init_model
+
+    cfg = reduced(get_config("qwen25-7b"))
+    meta = pack_meta([LoraConfig(rank=8, alpha=16.0)])
+    base, _ = init_model(jax.random.PRNGKey(0), cfg, meta)
+    rows = []
+    for mode in ("int8", "nf4"):
+        qb = quantize_base_params(base, mode)
+        b = _tree_proj_bytes(qb)
+        rows.append(
+            {
+                "bench": "quant",
+                "mode": "memory",
+                "quant": mode,
+                "arch": cfg.name,
+                "proj_bytes_f32": b["f32"],
+                "proj_bytes_quant": b["quant"],
+                "memory_ratio": b["f32"] / b["quant"],
+            }
+        )
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# density: cost-model packs per memory-capped device + planner job count
+# ---------------------------------------------------------------------------
+
+
+def _density_rows(fast: bool) -> List[Dict]:
+    from repro.sched.planner import plan
+
+    cfg = get_config("qwen25-7b")
+    n_cfg = 4 if fast else 8
+    configs = [
+        LoraConfig(rank=8, alpha=16.0, learning_rate=1e-3 / (i + 1),
+                   batch_size=1, seq_len=512)
+        for i in range(n_cfg)
+    ]
+    # cap the device so the dense base + ~2 adapters saturates it: density
+    # differences then show up directly in max co-resident configs
+    dense0 = CostModel(cfg, A100_40G)
+    cap = dense0.job_mem_bytes(configs[:2], 1, 512) * 1.02 / dense0.load_factor
+    hw = A100_40G.scaled(mem_bytes=cap)
+    rows = []
+    base_packs = None
+    for quant in (None, "int8", "nf4"):
+        cm = CostModel(cfg, hw, base_dtype=quant)
+        packs = 0
+        while packs < len(configs) and cm.fits(configs[: packs + 1], 1, 512):
+            packs += 1
+        sched = plan(cm, configs, 2, 512, 200)
+        if quant is None:
+            base_packs = packs
+        rows.append(
+            {
+                "bench": "quant",
+                "mode": "density",
+                "quant": quant or "f32",
+                "n_configs": n_cfg,
+                "max_copack_one_device": packs,
+                "planner_jobs": len(sched.jobs),
+                "base_bytes_per_param": cm.base_bytes_per_param(),
+                "copack_vs_f32": packs - (base_packs or 0),
+            }
+        )
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# throughput: fused step on quantized vs dense base (dispatch-bound shapes)
+# ---------------------------------------------------------------------------
+
+
+def _throughput_rows(fast: bool) -> List[Dict]:
+    # the >= 0.9x claim is checked on the WIDEST int8 row: wider packs
+    # amortize the per-call dequant over more tokens, which is the regime
+    # an accelerator always sits in (tiles dequantized in-register while
+    # the next weight tile loads) — so n=32 must be in the fast set too
+    d = 2048
+    ns = [8, 32] if fast else [8, 16, 32]
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    rows = []
+    for n in ns:
+        x = jax.random.normal(ks[0], (n, SEQ, d), jnp.float32)
+        w = np.asarray(jax.random.normal(ks[1], (d, d), jnp.float32)) * 0.02
+        a = jax.random.normal(ks[2], (n, d, 64), jnp.float32) * 0.02
+        b = jax.random.normal(ks[3], (n, 64, d), jnp.float32) * 0.02
+        alpha = jnp.ones((n,))
+        dense_j = jax.jit(
+            lambda x, w, a, b, al: fused_lora(x, w, a, b, al, impl="fused_xla")
+        )
+        for mode in ("int8", "nf4"):
+            q = quantize_weight(w, mode)
+            quant_j = jax.jit(
+                lambda x, q, a, b, al: fused_lora(
+                    x, q, a, b, al, impl="fused_xla")
+            )
+            wd = dequantize(q)
+            t_d = _time(dense_j, x, wd, a, b, alpha, iters=9)
+            t_q = _time(quant_j, x, q, a, b, alpha, iters=9)
+            tokens = n * SEQ
+            rows.append(
+                {
+                    "bench": "quant",
+                    "mode": "throughput",
+                    "quant": mode,
+                    "d": d,
+                    "n_pack": n,
+                    "dense_us": t_d * 1e6,
+                    "quant_us": t_q * 1e6,
+                    "tokens_per_s_dense": tokens / t_d,
+                    "tokens_per_s_quant": tokens / t_q,
+                    "throughput_ratio": t_d / t_q,
+                }
+            )
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# loss parity: quantized base vs dequantized copy, bit-exact trajectories
+# ---------------------------------------------------------------------------
+
+
+def _loss_parity_row() -> Dict:
+    from repro.core.adapter import pack_meta
+    from repro.models.model import init_model
+    from repro.train.data import packed_batch_iterator
+    from repro.train.optimizer import init_opt_state
+    from repro.train.trainer import make_train_step
+
+    cfg = reduced(get_config("qwen25-7b"))
+    configs = [
+        LoraConfig(rank=8, alpha=16.0, learning_rate=1e-3, batch_size=1,
+                   seq_len=32),
+        LoraConfig(rank=16, alpha=32.0, learning_rate=5e-4, batch_size=1,
+                   seq_len=32),
+    ]
+    meta = pack_meta(configs)
+    base, lora0 = init_model(jax.random.PRNGKey(0), cfg, meta)
+    qbase = quantize_base_params(base, "int8")
+    dbase = dequantize_base_params(qbase)  # same VALUES, dense storage
+    n_steps = 4
+    histories = {}
+    for label, bp, bd in (("quant", qbase, "int8"), ("dense", dbase, None)):
+        step = make_train_step(cfg, meta, impl="fused_xla", base_dtype=bd)
+        lora = jax.tree.map(lambda v: v + 0, lora0)
+        opt = init_opt_state(lora, n_pack=meta.n)
+        it = packed_batch_iterator(cfg, configs, seq=32)
+        hist = []
+        for _ in range(n_steps):
+            lora, opt, m = step(bp, lora, opt, next(it))
+            hist.append(np.asarray(m["per_adapter_loss"], np.float64))
+        histories[label] = np.stack(hist)
+    a, b = histories["quant"], histories["dense"]
+    bitexact = bool((a == b).all())
+    ulp = int(
+        np.max(
+            np.abs(
+                np.asarray(a, np.float32).view(np.int32).astype(np.int64)
+                - np.asarray(b, np.float32).view(np.int32).astype(np.int64)
+            )
+        )
+    )
+    return {
+        "bench": "quant",
+        "mode": "loss_parity",
+        "quant": "int8",
+        "n_pack": meta.n,
+        "steps": n_steps,
+        "losses_bitexact": bitexact,
+        "max_ulp": ulp,
+    }
+
+
+def run(fast: bool = False) -> List[Dict]:
+    rows = _memory_rows(fast)
+    rows += _density_rows(fast)
+    rows += _throughput_rows(fast)
+    rows.append(_loss_parity_row())
+    return rows
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default=None, help="dump rows to this file")
+    args = ap.parse_args()
+    rows = run(args.fast)
+    for r in rows:
+        if r["mode"] == "memory":
+            print(
+                f"quant,memory,{r['quant']},ratio={r['memory_ratio']:.2f}x "
+                f"({r['proj_bytes_f32']}B -> {r['proj_bytes_quant']}B)"
+            )
+        elif r["mode"] == "density":
+            print(
+                f"quant,density,{r['quant']},copack={r['max_copack_one_device']},"
+                f"jobs={r['planner_jobs']},B/param={r['base_bytes_per_param']:.3f}"
+            )
+        elif r["mode"] == "throughput":
+            print(
+                f"quant,throughput,{r['quant']},N={r['n_pack']},"
+                f"ratio={r['throughput_ratio']:.2f}x "
+                f"({r['tokens_per_s_quant']:.0f} vs {r['tokens_per_s_dense']:.0f} tok/s)"
+            )
+        else:
+            print(
+                f"quant,loss_parity,bitexact={r['losses_bitexact']},"
+                f"max_ulp={r['max_ulp']}"
+            )
+    if args.json:
+        import json
+
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import resource
 import subprocess
 import sys
 import time
@@ -51,6 +52,14 @@ def _summarize(rows):
     return summary
 
 
+def _peak_rss_bytes() -> int:
+    """Process peak RSS so far (ru_maxrss: KiB on Linux, bytes on macOS) —
+    a high-water mark over every suite run before this one, recorded per
+    suite so memory claims ride in the same JSON as the throughput rows."""
+    rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return int(rss if sys.platform == "darwin" else rss * 1024)
+
+
 def _persist(out_dir, name, title, rows, wall, fast, sha):
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{name}.json")
@@ -63,6 +72,7 @@ def _persist(out_dir, name, title, rows, wall, fast, sha):
                 "fast": fast,
                 "created_unix": time.time(),
                 "wall_seconds": round(wall, 2),
+                "peak_rss_bytes": _peak_rss_bytes(),
                 "n_rows": len(rows),
                 "summary": _summarize(rows),
                 "rows": rows,
@@ -97,12 +107,14 @@ def main(argv=None):
         bench_online,
         bench_planner,
         bench_quality,
+        bench_quant,
         bench_roofline,
         bench_serve,
     )
 
     benches = {
         "kernels": ("Table 7/8: packed-kernel speedup", bench_kernels.run),
+        "quant": ("Quantized frozen base: memory / density / parity", bench_quant.run),
         "makespan": ("Fig. 4: hyperparameter-tuning makespan", bench_makespan.run),
         "online": ("§4 dynamic scheduling: online admission + repacking", bench_online.run),
         "cluster": ("Cluster executor: concurrent mesh slices vs sequential", bench_cluster.run),
@@ -202,6 +214,31 @@ def main(argv=None):
             if parity:
                 p = parity[0]
                 checks.append(("fused-vs-two-pass per-adapter losses", "bit-exact" if p["losses_bitexact"] else f"max {p['max_ulp']} ulp"))
+        if name == "quant" and rows:
+            mem = [r for r in rows if r["mode"] == "memory"]
+            i8 = [r for r in mem if r["quant"] == "int8"]
+            if i8:
+                checks.append(("int8 base-weight memory reduction (>=1.8x)", f"{i8[0]['memory_ratio']:.2f}x"))
+            dens = {r["quant"]: r for r in rows if r["mode"] == "density"}
+            if "f32" in dens and "int8" in dens:
+                up = dens["int8"]["max_copack_one_device"] > dens["f32"]["max_copack_one_device"]
+                checks.append(
+                    ("int8 packs strictly denser than f32 (copack/jobs)",
+                     f"{dens['f32']['max_copack_one_device']}->"
+                     f"{dens['int8']['max_copack_one_device']} configs, "
+                     f"{dens['f32']['planner_jobs']}->"
+                     f"{dens['int8']['planner_jobs']} jobs (up: {up})"))
+            thr = [r for r in rows
+                   if r["mode"] == "throughput" and r["quant"] == "int8"]
+            if thr:
+                widest = max(thr, key=lambda r: r["n_pack"])
+                checks.append(
+                    (f"int8 tokens/s vs dense, widest pack N={widest['n_pack']} (>=0.9x)",
+                     f"{widest['throughput_ratio']:.2f}x"))
+            parity = [r for r in rows if r["mode"] == "loss_parity"]
+            if parity:
+                p = parity[0]
+                checks.append(("quantized-vs-dequantized per-adapter losses", "bit-exact" if p["losses_bitexact"] else f"max {p['max_ulp']} ulp"))
         if name == "planner" and rows:
             ar = max(r["ar_bound"] for r in rows)
             checks.append(("planner AR bound (paper 1.05-1.14)", f"{ar:.3f}"))

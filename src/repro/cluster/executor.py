@@ -143,6 +143,7 @@ class SliceExecutor:
         remat: Optional[str] = None,
         ranks: Optional[Tuple[int, ...]] = None,
         blocks: Optional[Tuple[int, int, int]] = None,
+        base_dtype: Optional[str] = None,
     ) -> Tuple[Callable, Optional[Any]]:
         """Jitted packed step for this (config, pack width, slice shape).
 
@@ -158,7 +159,7 @@ class SliceExecutor:
         # segmentation only engages on mixed ranks) so same-width packs keep
         # sharing one compiled step across uniform rank buckets
         ranks = tuple(ranks) if ranks and len(set(ranks)) > 1 else None
-        kkey = (impl, remat, ranks, blocks)
+        kkey = (impl, remat, ranks, blocks, base_dtype)
         if width == 1:
             key: Tuple = (cfg, n_pack, 1, kkey)
         else:
@@ -186,7 +187,7 @@ class SliceExecutor:
                 )
             step = make_packed_step(
                 cfg, n_pack, dist=dist, impl=impl, remat=remat, ranks=ranks,
-                blocks=blocks,
+                blocks=blocks, base_dtype=base_dtype,
             )
             self._steps[key] = (step, dist)
             self.n_builds += 1
@@ -262,6 +263,7 @@ class SliceExecutor:
         impl: Optional[str] = None,
         remat: Optional[str] = None,
         blocks: Optional[Tuple[int, int, int]] = None,
+        base_dtype: Optional[str] = None,
     ) -> PackResult:
         """Train one pack for ``n_steps`` on ``slice_`` (default device when
         None). ``lora``/``opt`` may carry resumed state; ``budgets`` is the
@@ -289,6 +291,7 @@ class SliceExecutor:
             cfg, meta.n, slice_, nb=nb, mesh_shape=mesh_shape,
             fsdp=fsdp, seq_parallel=seq_parallel,
             impl=impl, remat=remat, ranks=meta.ranks, blocks=blocks,
+            base_dtype=base_dtype,
         )
         vecs = (
             meta.scales(),
@@ -342,6 +345,7 @@ class SliceExecutor:
             # iteration per segment for a compile that is already cached.
             wkey = (
                 cfg, meta.n, meta.r_bucket, meta.ranks, impl, remat, blocks,
+                base_dtype,
                 None if slice_ is None else slice_.devices,
                 nb, mesh_shape, fsdp, seq_parallel,
                 tuple(sorted(
@@ -413,6 +417,7 @@ class SliceExecutor:
         slice_: Optional[MeshSlice] = None,
         impl: Optional[str] = None,
         remat: Optional[str] = None,
+        base_dtype: Optional[str] = None,
     ):
         """Execute one planned segment on ``slice_``: resume preempted
         adapters from the checkpoint pool, train ``seg.run_steps`` packed
@@ -430,14 +435,15 @@ class SliceExecutor:
             return self._run_segment_inner(
                 seg, configs_by_cid, total_steps, cfg, base_params,
                 seq=seq, pool=pool, data_iter_fn=data_iter_fn, seed=seed,
-                slice_=slice_, impl=impl, remat=remat, track=track,
+                slice_=slice_, impl=impl, remat=remat,
+                base_dtype=base_dtype, track=track,
                 JobRecord=JobRecord, ScheduledJob=ScheduledJob,
             )
 
     def _run_segment_inner(
         self, seg, configs_by_cid, total_steps, cfg, base_params, *,
-        seq, pool, data_iter_fn, seed, slice_, impl, remat, track,
-        JobRecord, ScheduledJob,
+        seq, pool, data_iter_fn, seed, slice_, impl, remat, base_dtype,
+        track, JobRecord, ScheduledJob,
     ):
         job_cfgs = [configs_by_cid[cid] for cid in seg.config_ids]
         meta = pack_meta(job_cfgs)
@@ -488,6 +494,7 @@ class SliceExecutor:
             data_start_steps=seg.start_steps,
             impl=impl,
             remat=remat,
+            base_dtype=base_dtype,
         )
         lora, opt, losses = res.lora, res.opt, res.losses
         done = set(seg.done_ids)

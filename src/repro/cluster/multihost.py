@@ -151,6 +151,7 @@ class KernelPolicy:
 
     impl: Optional[str] = None  # None/"auto" = executor default
     remat: Optional[str] = None  # None = executor default ("save")
+    base_dtype: Optional[str] = None  # "int8"/"nf4" = quantized frozen base
 
 
 _SEGMENT_FIELDS = (
@@ -313,6 +314,9 @@ def _worker_main(host_id: int, n_devices: int, inbox, outbox) -> None:
                         slice_=slice_,
                         impl=policy.impl,
                         remat=policy.remat,
+                        # getattr: a worker may receive a policy pickled by
+                        # an older caller without the base_dtype field
+                        base_dtype=getattr(policy, "base_dtype", None),
                     )
                 finally:
                     if root_cm is not None:
@@ -600,6 +604,7 @@ class DispatchExecutor:
         slice_=None,
         impl: Optional[str] = None,
         remat: Optional[str] = None,
+        base_dtype: Optional[str] = None,
     ):
         d = self.disp
         if slice_ is None:
@@ -635,7 +640,8 @@ class DispatchExecutor:
             # the caller's kernel policy rides with every segment: workers
             # run exactly the tier the dispatcher-side planner selected
             "policy": KernelPolicy(
-                impl=None if impl == "auto" else impl, remat=remat
+                impl=None if impl == "auto" else impl, remat=remat,
+                base_dtype=base_dtype,
             ),
         }
         tracer = self.tracer
@@ -885,6 +891,7 @@ class HostDispatcher:
         estimator=None,
         impl: Optional[str] = None,
         remat: Optional[str] = None,
+        base_dtype: Optional[str] = None,
     ):
         """Execute planned segments across the hosts — same contract as
         :meth:`ClusterRunner.run` (dispatch order, resume dependencies,
@@ -910,6 +917,7 @@ class HostDispatcher:
             estimator=estimator,
             impl=impl,
             remat=remat,
+            base_dtype=base_dtype,
         )
         self.last_result = result
         return result

@@ -163,6 +163,7 @@ class ClusterRunner:
         estimator=None,  # Optional[repro.sched.cost_model.CostEstimator]
         impl: Optional[str] = None,
         remat: Optional[str] = None,
+        base_dtype: Optional[str] = None,
     ) -> ClusterResult:
         """Execute planned segments. With an ``estimator``, each segment's
         predicted per-iteration time is captured at dispatch and its measured
@@ -170,7 +171,8 @@ class ClusterRunner:
         no-op for the pure analytic prior) — the measured/predicted pairs are
         surfaced on ``ClusterResult.timings`` either way.
 
-        ``impl``/``remat`` select the kernel policy for every segment; when
+        ``impl``/``remat``/``base_dtype`` select the kernel policy for every
+        segment (``base_dtype`` marks a quantized frozen base); when
         ``impl`` is None the *caller's* context-local default
         (``ops.default_impl()``) is captured here — worker threads never see
         the caller's contextvars, so the policy must cross the thread
@@ -221,6 +223,7 @@ class ClusterRunner:
                             slice_=slice_,
                             impl=impl,
                             remat=remat,
+                            base_dtype=base_dtype,
                         )
                     results[idx] = rec
                     if estimator is not None and seg.run_steps > 0:

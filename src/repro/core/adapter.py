@@ -60,7 +60,8 @@ class PackMeta:
         iota = jnp.arange(r)[None, :]
         return (iota < jnp.asarray(self.ranks)[:, None]).astype(jnp.float32)
 
-    def kernel_config(self, impl=None, remat=None, blocks=None):
+    def kernel_config(self, impl=None, remat=None, blocks=None,
+                      base_dtype=None):
         """Static kernel policy for this pack: carries the per-adapter rank
         vector down to the kernels so heterogeneous-rank packs run as ragged
         same-rank grid segments instead of computing every adapter at
@@ -68,7 +69,8 @@ class PackMeta:
         from repro.kernels.ops import KernelConfig
 
         return KernelConfig(
-            impl=impl, remat=remat, ranks=self.ranks, blocks=blocks
+            impl=impl, remat=remat, ranks=self.ranks, blocks=blocks,
+            base_dtype=base_dtype,
         )
 
 

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ops import KernelConfig, fused_lora_linear, packed_lora_delta
+from repro.kernels.quant import dequantize, is_quantized, logical_shape
 
 
 def lora_linear(
@@ -44,9 +45,13 @@ def lora_linear(
     kc = kcfg or KernelConfig()
     impl_r = kc.resolved_impl() if impl is None else KernelConfig(impl=impl).resolved_impl()
     w = params["w"]
+    # a quantized base ({"codes","scales"}, kernels/quant.py) flows into the
+    # fused tier as-is (in-kernel dequant); the two-pass/no-lora paths
+    # dequantize up front — the bit-exactness reference formulation.
+    quant = is_quantized(w)
+    d_in, d_out = (logical_shape(w) if quant else w.shape)[-2:]
     if lora is not None and impl_r in ("fused_pallas", "fused_xla"):
         lead = x.shape[:-1]
-        d_in, d_out = w.shape
         xp = x.reshape(n_pack, x.shape[0] // n_pack, *x.shape[1:-1], d_in)
         y = fused_lora_linear(
             xp,
@@ -62,12 +67,13 @@ def lora_linear(
         if "b" in params:
             y = y + params["b"].astype(x.dtype)
         return y
+    if quant:
+        w = dequantize(w)
     y = x @ w.astype(x.dtype)
     if "b" in params:
         y = y + params["b"].astype(x.dtype)
     if lora is not None:
         lead = x.shape[:-1]
-        d_in, d_out = w.shape
         # keep the per-adapter batch dim B un-merged: (N, B, ..., d_in).
         # Splitting NB -> (N, B) is always sharding-representable, whereas
         # merging (B, S) is not when B is sharded over the model axis (FSDP
@@ -90,7 +96,12 @@ def lora_linear(
 def merge_adapter(base_w: jnp.ndarray, lora: dict, scale: float, idx: int) -> jnp.ndarray:
     """Fold adapter `idx` into the base weight: W + scale * A_i @ B_i
     (paper Fig. 1 inference-time merge). Works for plain (N, d, r) packs and
-    layer-stacked (L, N, d, r) packs — the pack axis is always ndim-3."""
+    layer-stacked (L, N, d, r) packs — the pack axis is always ndim-3.
+    A quantized base is dequantized first: the merged result is dense by
+    definition (W absorbs the delta, so codes/scales no longer describe it).
+    """
+    if is_quantized(base_w):
+        base_w = dequantize(base_w)
     a = lora["a"]
     b = lora["b"]
     a = jnp.take(a, idx, axis=a.ndim - 3)

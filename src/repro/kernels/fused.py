@@ -33,6 +33,17 @@ path always recomputes (xA never leaves VMEM scratch).
 ``w``'s cotangent is computed honestly (the primitive is differentiable in
 every array argument) — training takes grads w.r.t. adapters only, so XLA
 dead-code-eliminates the base-weight gradient GEMM.
+
+Quantized frozen base (ISSUE 8): ``w`` may also be a ``{"codes", "scales"}``
+dict (see ``kernels/quant.py``). The Pallas kernel then dequantizes each W
+tile in-register inside the K-loop (scales ride as a second operand; the
+VMEM scratch accumulators are unchanged), and the XLA path dequantizes once
+before the same expression. Elementwise dequant is tiling-invariant, so the
+in-kernel per-tile form is bit-exact against dequantize-then-same-kernel on
+identical quantized weights. The backward dequantizes once and reuses the
+dense tiles for ``dx = g @ W^T + d(xA) @ A^T``; the codes' cotangent is the
+mandatory ``float0`` zero (integers have no tangent space) — the base stays
+frozen by construction.
 """
 from __future__ import annotations
 
@@ -41,8 +52,11 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.quant import NF4_CODEBOOK, dequantize, is_quantized
 
 # default Pallas tile sizes; the autotuner (kernels/autotune.py) overrides
 # them per (backend, shape bucket)
@@ -90,6 +104,63 @@ def _fused_kernel(
         out_ref[0, ...] = (acc_ref[...] + scale * delta).astype(out_ref.dtype)
 
 
+def _dequant_tile(wq, ws, mode, blk, dtype):
+    """Dequantize one (bk, bl) W tile in-register from its codes/scales tiles.
+
+    Elementwise per tile, so per-tile dequant == global dequant exactly; the
+    final cast to ``dtype`` mirrors the dense path's ``w.astype(x.dtype)``
+    (bit-exactness vs dequantize-then-dense-kernel requires identical casts
+    before the dot).
+    """
+    if mode == "int8":
+        w = wq.astype(jnp.float32) * ws  # (bk, bl) * (1, bl)
+    else:  # nf4: unpack 2 codes per uint8 (low nibble = even K-row)
+        lo = (wq & 0xF).astype(jnp.int32)
+        hi = (wq >> 4).astype(jnp.int32)
+        p, bl = wq.shape
+        idx = jnp.stack([lo, hi], axis=1).reshape(2 * p, bl)
+        # codebook lookup as a select chain: Pallas kernels cannot capture
+        # array constants, and 16 scalar selects vectorize on the VPU; the
+        # result is value-identical to the gather ``dequantize`` uses.
+        vals = jnp.zeros(idx.shape, jnp.float32)
+        for i, c in enumerate(NF4_CODEBOOK.tolist()):
+            vals = jnp.where(idx == i, jnp.float32(c), vals)
+        nb = ws.shape[0]  # = bk // blk scale rows in this tile
+        w = (vals.reshape(nb, blk, bl) * ws[:, None, :]).reshape(2 * p, bl)
+    return w.astype(dtype)
+
+
+def _fused_kernel_q(
+    x_ref, wq_ref, ws_ref, a_ref, b_ref, scale_ref, out_ref, acc_ref, xa_ref,
+    *, n_k: int, mode: str, blk: int
+):
+    """Quantized-base variant of ``_fused_kernel``: identical grid, identical
+    VMEM scratch; the only change is that the W tile is dequantized
+    in-register before the base dot (codes + scales stream in as two
+    operands instead of one dense tile)."""
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xa_ref[...] = jnp.zeros_like(xa_ref)
+
+    x = x_ref[0]
+    w = _dequant_tile(wq_ref[...], ws_ref[...], mode, blk, x.dtype)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+    xa_ref[...] += jnp.dot(x, a_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        scale = scale_ref[0, 0]
+        delta = jnp.dot(
+            xa_ref[...],
+            b_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        out_ref[0, ...] = (acc_ref[...] + scale * delta).astype(out_ref.dtype)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("block_m", "block_l", "block_k", "interpret"),
@@ -100,6 +171,7 @@ def fused_matmul(
     a: jnp.ndarray,
     b: jnp.ndarray,
     scale: Optional[jnp.ndarray] = None,
+    w_scales: Optional[jnp.ndarray] = None,
     *,
     block_m: int = DEFAULT_BLOCKS[0],
     block_l: int = DEFAULT_BLOCKS[1],
@@ -112,9 +184,21 @@ def fused_matmul(
     Inputs are zero-padded to tile multiples (exact for contractions; the
     output is sliced back); the rank dim is padded to one lane width and
     never tiled. ``interpret=True`` validates on CPU; on TPU pass False.
+
+    With ``w_scales``, ``w`` is quantized codes instead of a dense weight —
+    int8 codes (K, L) with per-channel scales (1, L), or packed nf4 uint8
+    codes (K//2, L) with block scales (K//blk, L) — and the kernel
+    dequantizes each W tile in-register inside the K-loop.
     """
     n, m, k = x.shape
-    k2, l = w.shape
+    if w_scales is None:
+        mode, blk = None, 0
+        k2, l = w.shape
+    else:
+        mode = "int8" if w.dtype == jnp.int8 else "nf4"
+        k2 = w.shape[0] * (2 if mode == "nf4" else 1)
+        l = w.shape[1]
+        blk = 0 if mode == "int8" else k2 // w_scales.shape[0]
     n2, k3, r = a.shape
     n3, r2, l2 = b.shape
     assert k == k2 == k3 and n == n2 == n3 and r == r2 and l == l2, (
@@ -133,8 +217,23 @@ def fused_matmul(
     mp, lp, kp = _round_up(m, bm), _round_up(l, bl), _round_up(k, bk)
     if (mp, kp) != (m, k):
         x = jnp.pad(x, ((0, 0), (0, mp - m), (0, kp - k)))
-    if (kp, lp) != (k, l):
-        w = jnp.pad(w, ((0, kp - k), (0, lp - l)))
+    if mode is None:
+        if (kp, lp) != (k, l):
+            w = jnp.pad(w, ((0, kp - k), (0, lp - l)))
+    else:
+        # K-padding of codes/scales with zeros is exact: the padded K rows of
+        # x are zeros, and 0 * finite == 0 in f32 whatever the padded codes
+        # dequantize to.
+        if mode == "int8":
+            w = jnp.pad(w, ((0, kp - k), (0, lp - l)))
+            w_scales = jnp.pad(w_scales, ((0, 0), (0, lp - l)))
+        else:
+            assert bk % 2 == 0 and blk > 0 and bk % blk == 0, (bk, blk)
+            w = jnp.pad(w, ((0, (kp - k) // 2), (0, lp - l)))
+            w_scales = jnp.pad(
+                w_scales, ((0, (kp - k) // blk), (0, lp - l))
+            )
+
     if (kp, rp) != (k, r):
         a = jnp.pad(a, ((0, 0), (0, kp - k), (0, rp - r)))
     if (rp, lp) != (r, l):
@@ -143,16 +242,40 @@ def fused_matmul(
     n_k = kp // bk
     grid = (n, mp // bm, lp // bl, n_k)
 
-    out = pl.pallas_call(
-        functools.partial(_fused_kernel, n_k=n_k),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bm, bk), lambda ad, i, j, s: (ad, i, s)),
+    x_spec = pl.BlockSpec((1, bm, bk), lambda ad, i, j, s: (ad, i, s))
+    a_spec = pl.BlockSpec((1, bk, rp), lambda ad, i, j, s: (ad, s, 0))
+    b_spec = pl.BlockSpec((1, rp, bl), lambda ad, i, j, s: (ad, 0, j))
+    s_spec = pl.BlockSpec((1, 1), lambda ad, i, j, s: (ad, 0))
+    if mode is None:
+        kernel = functools.partial(_fused_kernel, n_k=n_k)
+        in_specs = [
+            x_spec,
             pl.BlockSpec((bk, bl), lambda ad, i, j, s: (s, j)),
-            pl.BlockSpec((1, bk, rp), lambda ad, i, j, s: (ad, s, 0)),
-            pl.BlockSpec((1, rp, bl), lambda ad, i, j, s: (ad, 0, j)),
-            pl.BlockSpec((1, 1), lambda ad, i, j, s: (ad, 0)),
-        ],
+            a_spec, b_spec, s_spec,
+        ]
+        operands = (x, w, a, b, scale)
+    else:
+        kernel = functools.partial(
+            _fused_kernel_q, n_k=n_k, mode=mode, blk=blk
+        )
+        wq_rows = bk // 2 if mode == "nf4" else bk
+        ws_rows = 1 if mode == "int8" else bk // blk
+        in_specs = [
+            x_spec,
+            pl.BlockSpec((wq_rows, bl), lambda ad, i, j, s: (s, j)),
+            pl.BlockSpec(
+                (ws_rows, bl),
+                (lambda ad, i, j, s: (0, j)) if mode == "int8"
+                else (lambda ad, i, j, s: (s, j)),
+            ),
+            a_spec, b_spec, s_spec,
+        ]
+        operands = (x, w, w_scales, a, b, scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bm, bl), lambda ad, i, j, s: (ad, i, j)),
         out_shape=jax.ShapeDtypeStruct((n, mp, lp), x.dtype),
         scratch_shapes=[
@@ -160,7 +283,7 @@ def fused_matmul(
             pltpu.VMEM((bm, rp), jnp.float32),
         ],
         interpret=interpret,
-    )(x, w, a, b, scale)
+    )(*operands)
     return out[:, :m, :l]
 
 
@@ -183,7 +306,11 @@ def _fused_xla(x, w, a, b, alpha):
     The base contraction matches the two-pass path's ``x @ w`` bit-for-bit
     (same dot_general dims); the single final add is the only reassociation
     versus two-pass (which adds bias between base and delta when present).
+    A quantized ``w`` is dequantized up front — the identical jnp formula the
+    two-pass reference uses, so parity stays bit-exact.
     """
+    if is_quantized(w):
+        w = dequantize(w)
     base = x @ w.astype(x.dtype)
     xa = _xa(x, a)
     delta = jnp.einsum(
@@ -198,13 +325,24 @@ def _run_fwd(x, w, a, b, alpha, impl, blocks):
         lead = x.shape[1:-1]
         x3 = x.reshape(x.shape[0], -1, x.shape[-1])
         bm, bl, bk = blocks or DEFAULT_BLOCKS
-        out = fused_matmul(
-            x3, w.astype(x.dtype), a.astype(x.dtype), b.astype(x.dtype),
-            alpha,
-            block_m=bm, block_l=bl, block_k=bk,
-            interpret=jax.default_backend() != "tpu",
-        )
-        return out.reshape(x.shape[0], *lead, w.shape[-1])
+        if is_quantized(w):
+            wq, ws = w["codes"], w["scales"]
+            d_out = wq.shape[-1]
+            out = fused_matmul(
+                x3, wq, a.astype(x.dtype), b.astype(x.dtype),
+                alpha, ws,
+                block_m=bm, block_l=bl, block_k=bk,
+                interpret=jax.default_backend() != "tpu",
+            )
+        else:
+            d_out = w.shape[-1]
+            out = fused_matmul(
+                x3, w.astype(x.dtype), a.astype(x.dtype), b.astype(x.dtype),
+                alpha,
+                block_m=bm, block_l=bl, block_k=bk,
+                interpret=jax.default_backend() != "tpu",
+            )
+        return out.reshape(x.shape[0], *lead, d_out)
     return _fused_xla(x, w, a.astype(x.dtype), b.astype(x.dtype), alpha)
 
 
@@ -232,6 +370,10 @@ def _fwd(x, w, a, b, alpha, impl, remat, blocks):
 
 def _bwd(impl, remat, blocks, res, g):
     x, w, a, b, alpha, saved_xa = res
+    # Quantized base: dequantize ONCE, then reuse the dense tiles for the
+    # whole dx GEMM — identical ops to the reference backward run on
+    # pre-dequantized weights, hence bit-exact against it.
+    wd = dequantize(w) if is_quantized(w) else w
     g = g.astype(x.dtype)
     al = _bcast(alpha, g.ndim).astype(g.dtype)
     g_s = g * al
@@ -250,17 +392,17 @@ def _bwd(impl, remat, blocks, res, g):
         bm, bl, bk = blocks or DEFAULT_BLOCKS
         dx = fused_matmul(
             g3,
-            jnp.swapaxes(w.astype(x.dtype), 0, 1),
+            jnp.swapaxes(wd.astype(x.dtype), 0, 1),
             jnp.swapaxes(b_c, 1, 2),
             jnp.swapaxes(a_c, 1, 2),
             alpha,
             block_m=bm, block_l=bl, block_k=bk,
             interpret=jax.default_backend() != "tpu",
-        ).reshape(g.shape[0], *lead, w.shape[0])
+        ).reshape(g.shape[0], *lead, wd.shape[0])
     else:
         dx = (
             jnp.einsum(
-                "n...l,kl->n...k", g, w.astype(g.dtype),
+                "n...l,kl->n...k", g, wd.astype(g.dtype),
                 preferred_element_type=jnp.float32,
             ).astype(x.dtype)
             + jnp.einsum(
@@ -271,10 +413,18 @@ def _bwd(impl, remat, blocks, res, g):
     xa = saved_xa if saved_xa is not None else _xa(x, a_c)
     da = jnp.einsum("n...k,n...r->nkr", x, dxa).astype(a.dtype)
     db = jnp.einsum("n...r,n...l->nrl", xa, g_s).astype(b.dtype)
-    # base weights are frozen in training (grads only w.r.t. adapters), so
-    # XLA dead-code-eliminates this GEMM there; it exists so the primitive
-    # is honestly differentiable in w for any other caller.
-    dw = jnp.einsum("n...k,n...l->kl", x, g).astype(w.dtype)
+    if is_quantized(w):
+        # frozen by construction: integer codes have no tangent space (the
+        # mandatory float0 zero), and the scales' cotangent is zero.
+        dw = {
+            "codes": np.zeros(w["codes"].shape, dtype=jax.dtypes.float0),
+            "scales": jnp.zeros_like(w["scales"]),
+        }
+    else:
+        # base weights are frozen in training (grads only w.r.t. adapters),
+        # so XLA dead-code-eliminates this GEMM there; it exists so the
+        # primitive is honestly differentiable in w for any dense caller.
+        dw = jnp.einsum("n...k,n...l->kl", x, g).astype(w.dtype)
     return dx, dw, da, db, jnp.zeros_like(alpha)
 
 
@@ -294,7 +444,8 @@ def fused_lora(
 ) -> jnp.ndarray:
     """``x @ w + alpha_n * (x_n @ A_n) @ B_n`` for N packed adapters.
 
-    x: (N, ..., d_in); w: (d_in, d_out) shared frozen base; a: (N, d_in, r);
+    x: (N, ..., d_in); w: (d_in, d_out) shared frozen base — dense array or
+    quantized ``{"codes", "scales"}`` dict; a: (N, d_in, r);
     b: (N, r, d_out); alpha: (N,). ``impl`` is the *resolved* backend
     ("fused_pallas" | "fused_xla" — dispatch lives in ``ops.py``); ``remat``
     picks the backward xA policy (None -> ``ops.DEFAULT_REMAT``, the

@@ -124,12 +124,17 @@ class KernelConfig:
              the delta to ragged same-rank grid segments (None -> treat the
              pack as rank-homogeneous at the bucket rank)
     blocks : Pallas (block_m, block_l, block_k) override (autotuner hook)
+    base_dtype : frozen-base storage scheme — None (dense, whatever dtype
+             the checkpoint carries) or "int8"/"nf4" (kernels/quant.py);
+             part of the policy so executor caches and the multihost wire
+             distinguish quantized from dense compilations
     """
 
     impl: Optional[str] = None
     remat: Optional[str] = None
     ranks: Optional[Tuple[int, ...]] = None
     blocks: Optional[Tuple[int, int, int]] = None
+    base_dtype: Optional[str] = None
 
     def resolved_impl(self) -> str:
         return _resolve(self.impl)

@@ -1,0 +1,221 @@
+"""Quantized frozen-base primitives (ISSUE 8 tentpole).
+
+PLoRA packs N adapters against ONE shared frozen base, so the base weights
+are by far the largest resident tensor — paid once per pack, never
+gradient-updated (only A/B train). That makes them safe to quantize once at
+pack build and dequantize on the fly inside the kernels:
+
+  * ``int8``: symmetric per-output-channel. One f32 scale per output column
+    (absmax over the K axis / 127); dequant is ``codes * scales``.
+  * ``nf4``: 4-bit block-scaled. Values are snapped to the 16-level
+    NormalFloat codebook, two codes packed per uint8 along K (low nibble =
+    even K-row, high nibble = odd), with one f32 absmax scale per
+    ``block``-sized K slab per output column.
+
+A quantized weight is a plain dict ``{"codes": ..., "scales": ...}`` — a
+pytree, so it survives ``device_put``, ``encode_tree`` (the multihost wire),
+scan-stacked block slicing, and ``param_specs`` (codes/scales fall to the
+replicate rule) without any special casing. The scheme is inferred from the
+codes dtype: int8 -> per-channel, uint8 -> packed nf4.
+
+The quantizer is pure numpy (runs once, host-side, at pack build); only
+``dequantize`` must be jittable — it is expressed entirely in jnp ops so the
+same formula runs under XLA, inside the Pallas megakernel's K-loop, and in
+Pallas interpret mode (the CPU oracle).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+MODES = ("int8", "nf4")
+
+# QLoRA NormalFloat-4 codebook: 16 quantiles of N(0,1) normalised to
+# [-1, 1], asymmetric around the exact-zero level.
+NF4_CODEBOOK = np.array(
+    [
+        -1.0,
+        -0.6961928009986877,
+        -0.5250730514526367,
+        -0.39491748809814453,
+        -0.28444138169288635,
+        -0.18477343022823334,
+        -0.09105003625154495,
+        0.0,
+        0.07958029955625534,
+        0.16093020141124725,
+        0.24611230194568634,
+        0.33791524171829224,
+        0.44070982933044434,
+        0.5626170039176941,
+        0.7229568362236023,
+        1.0,
+    ],
+    dtype=np.float32,
+)
+
+
+def is_quantized(w) -> bool:
+    """True when ``w`` is a quantized-weight dict (vs a dense array)."""
+    return isinstance(w, dict) and "codes" in w and "scales" in w
+
+
+def quant_mode(w) -> str:
+    """Scheme of a quantized weight, inferred from the codes dtype."""
+    dt = np.dtype(w["codes"].dtype)
+    if dt == np.int8:
+        return "int8"
+    if dt == np.uint8:
+        return "nf4"
+    raise ValueError(f"unrecognised quantized codes dtype {dt}")
+
+
+def logical_shape(w) -> tuple:
+    """Dense ``(..., d_in, d_out)`` shape a quantized weight dequantizes to."""
+    shape = tuple(w["codes"].shape)
+    if quant_mode(w) == "nf4":  # two K-rows packed per uint8
+        shape = shape[:-2] + (2 * shape[-2],) + shape[-1:]
+    return shape
+
+
+def quantized_nbytes(w) -> int:
+    """Resident bytes of a quantized weight (codes + scales)."""
+    return int(np.asarray(w["codes"]).nbytes + np.asarray(w["scales"]).nbytes)
+
+
+def nf4_block(d_in: int) -> int:
+    """Block length along K: the largest power of two <= 64 dividing d_in."""
+    b = 64
+    while b > 1 and d_in % b:
+        b //= 2
+    return b
+
+
+def quantize_weight(w, mode: str):
+    """Quantize a dense ``(..., d_in, d_out)`` weight (pure numpy, host-side).
+
+    Returns ``{"codes", "scales"}``. int8: codes int8 ``(..., d_in, d_out)``,
+    scales f32 ``(..., 1, d_out)``. nf4: codes uint8 ``(..., d_in//2,
+    d_out)`` (low nibble = even K-row), scales f32 ``(..., d_in//block,
+    d_out)``.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    w = np.asarray(w, dtype=np.float32)
+    if w.ndim < 2:
+        raise ValueError(f"need (..., d_in, d_out), got shape {w.shape}")
+    if mode == "int8":
+        absmax = np.max(np.abs(w), axis=-2, keepdims=True)
+        scales = np.where(absmax > 0, absmax / 127.0, 1.0).astype(np.float32)
+        codes = np.clip(np.rint(w / scales), -127, 127).astype(np.int8)
+        return {"codes": codes, "scales": scales}
+    d_in, d_out = w.shape[-2], w.shape[-1]
+    if d_in % 2:
+        raise ValueError(f"nf4 needs even d_in, got {d_in}")
+    blk = nf4_block(d_in)
+    lead = w.shape[:-2]
+    wb = w.reshape(lead + (d_in // blk, blk, d_out))
+    absmax = np.max(np.abs(wb), axis=-2, keepdims=True)
+    scales = np.where(absmax > 0, absmax, 1.0).astype(np.float32)
+    normed = wb / scales  # in [-1, 1]
+    idx = np.argmin(
+        np.abs(normed[..., None] - NF4_CODEBOOK), axis=-1
+    ).astype(np.uint8)
+    idx = idx.reshape(lead + (d_in, d_out))
+    pair = idx.reshape(lead + (d_in // 2, 2, d_out))
+    codes = (pair[..., 0, :] | (pair[..., 1, :] << 4)).astype(np.uint8)
+    return {"codes": codes, "scales": scales[..., 0, :]}
+
+
+def dequantize(w, dtype=jnp.float32):
+    """Jittable dequant of a ``{"codes", "scales"}`` dict to a dense array.
+
+    Pure jnp — the identical formula runs under XLA, in-kernel under Pallas
+    (per-tile: elementwise dequant is tiling-invariant, so per-tile equals
+    global dequant bit-for-bit), and in interpret mode.
+    """
+    codes = jnp.asarray(w["codes"])
+    scales = jnp.asarray(w["scales"])
+    if codes.dtype == jnp.int8:
+        out = codes.astype(jnp.float32) * scales
+        return out.astype(dtype)
+    lo = (codes & 0xF).astype(jnp.int32)
+    hi = (codes >> 4).astype(jnp.int32)
+    idx = jnp.stack([lo, hi], axis=-2)  # (..., P, 2, d_out)
+    lead = codes.shape[:-2]
+    d_in = 2 * codes.shape[-2]
+    d_out = codes.shape[-1]
+    idx = idx.reshape(lead + (d_in, d_out))
+    vals = jnp.take(jnp.asarray(NF4_CODEBOOK), idx)
+    nb = scales.shape[-2]
+    vb = vals.reshape(lead + (nb, d_in // nb, d_out))
+    out = (vb * scales[..., :, None, :]).reshape(lead + (d_in, d_out))
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Tree-level quantization of a model's frozen base.
+#
+# Only weights consumed through ``lora_linear`` are eligible: those are the
+# projections the fused/two-pass kernels already route, so a quantized dict
+# in the "w" slot flows through the dispatch this PR extends. Weights the
+# model layers matmul *directly* (MLA kv_b splits, SSM bc/dt, the MoE
+# router), embeddings, and heads stay dense.
+ELIGIBLE_NAMES = frozenset(
+    {"q", "k", "v", "o", "q_a", "q_b", "kv_a", "gate", "up", "down",
+     "zx", "out"}
+)
+EXCLUDE_SUBTREES = frozenset(
+    {"cross", "moe", "embed", "lm_head", "patch_proj"}
+)
+
+
+def quantize_base_params(params, mode: Optional[str]):
+    """Quantize the eligible frozen-base projections of a param tree.
+
+    Returns a new tree in which each eligible ``{"w": dense}`` leaf becomes
+    ``{"w": {"codes", "scales"}}`` (bias and norms untouched). Works on both
+    flat layer dicts and scan-stacked "blocks" subtrees (leading L dim rides
+    along; per-output-channel/blockwise math only touches the last two
+    axes). ``mode=None``/"none" is the identity.
+    """
+    if mode is None or mode == "none":
+        return params
+
+    def walk(node, name=None):
+        if not isinstance(node, dict):
+            return node
+        if is_quantized(node):
+            return node
+        out = {}
+        for k, v in node.items():
+            if k in EXCLUDE_SUBTREES:
+                out[k] = v
+            elif (
+                k == "w"
+                and name in ELIGIBLE_NAMES
+                and hasattr(v, "ndim")
+                and v.ndim >= 2
+                and (mode == "int8" or v.shape[-2] % 2 == 0)
+            ):
+                out[k] = quantize_weight(np.asarray(v), mode)
+            else:
+                out[k] = walk(v, name=k)
+        return out
+
+    return walk(params)
+
+
+def dequantize_base_params(params):
+    """Inverse walk: replace every quantized dict with its dense f32 form."""
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        if is_quantized(node):
+            return np.asarray(dequantize(node))
+        return {k: walk(v) for k, v in node.items()}
+
+    return walk(params)

@@ -25,6 +25,7 @@ from repro.cluster import DevicePool, SliceExecutor
 from repro.configs.base import LoraConfig, get_config, list_archs, reduced
 from repro.core.adapter import pack_meta
 from repro.core.packed_lora import extract_adapter
+from repro.kernels.quant import quantize_base_params
 from repro.models.model import init_model
 from repro.train.checkpoint import CheckpointPool
 
@@ -41,7 +42,11 @@ def _estimator(args, cfg):
         ObservationStore.load(args.profile_in) if args.profile_in
         else ObservationStore()
     )
-    return ProfiledCostModel(CostModel(cfg, hw), store), store
+    # a quantized frozen base shrinks the per-job memory floor, so the plan
+    # itself gets denser (more configs co-packed per device) — the estimator
+    # must price the same base bytes the kernels will actually stream
+    quant = None if args.quant == "none" else args.quant
+    return ProfiledCostModel(CostModel(cfg, hw, base_dtype=quant), store), store
 
 
 def _make_tracer(args):
@@ -116,6 +121,11 @@ def _run_multihost(args, cfg, configs, tracer):
           f"x {per} device(s), virtual makespan {sched.makespan:.1f}s")
     meta = pack_meta(configs)
     base, _ = init_model(jax.random.PRNGKey(0), cfg, meta)
+    quant = None if args.quant == "none" else args.quant
+    if quant:
+        base = quantize_base_params(base, quant)
+        print(f"quantized frozen base to {quant} "
+              f"(projection weights -> codes+scales dicts)")
     pool = CheckpointPool(args.pool) if args.pool else None
     eng = ExecutionEngine(est, g, host_size=per, tracer=tracer)
     with HostDispatcher(args.hosts, per, tracer=tracer) as disp:
@@ -125,6 +135,7 @@ def _run_multihost(args, cfg, configs, tracer):
         records, makespan = eng.run_local(
             sched, configs, cfg, base, n_steps=args.steps, seq=args.seq,
             pool=pool, runner=disp, impl=args.impl, remat=args.remat,
+            base_dtype=quant,
         )
         elapsed = time.perf_counter() - t0
     result = disp.last_result
@@ -159,6 +170,13 @@ def main():
                          "'fused' runs base+delta as one megakernel "
                          "(fused_pallas on TPU, fused_xla elsewhere); "
                          "default: context default ('auto')")
+    ap.add_argument("--quant", default="none", choices=["none", "int8", "nf4"],
+                    help="quantize the frozen base (kernels/quant.py): "
+                         "projection weights are stored as int8 per-channel "
+                         "or nf4 block-scaled codes and dequantized inside "
+                         "the fused kernel's K-loop; adapters/optimizer "
+                         "stay full precision, so losses match the "
+                         "dequantized-base run bit-for-bit")
     ap.add_argument("--remat", default=None, choices=["recompute", "save"],
                     help="backward xA policy of the LoRA kernels (default: "
                          "measured crossover, see bench_kernels)")
@@ -269,6 +287,11 @@ def main():
 
     key = jax.random.PRNGKey(0)
     base, lora = init_model(key, cfg, meta)
+    quant = None if args.quant == "none" else args.quant
+    if quant:
+        base = quantize_base_params(base, quant)
+        print(f"quantized frozen base to {quant} "
+              f"(projection weights -> codes+scales dicts)")
     opt = None
 
     state_id = args.state_id or cfg.name
@@ -338,6 +361,7 @@ def main():
         impl=args.impl,
         remat=args.remat,
         blocks=blocks,
+        base_dtype=quant,
     )
     device_pool.release(slice_)
     lora, opt = res.lora, res.opt

@@ -280,6 +280,13 @@ class CostModel(CostEstimator):
     # on this backend. The LoRA compute term is divided by it — 1.0 = the
     # uncalibrated analytic prior (bit-identical to the pre-autotune model).
     lora_rate_scale: float = 1.0
+    # Frozen-base storage scheme (kernels/quant.py): None keeps the dense
+    # ``prec_bytes`` footprint (bit-identical to the pre-quant model);
+    # "int8"/"nf4" shrink the base-weight term of the Appendix-A memory
+    # model — and the HBM weight-traffic term of the roofline — to the
+    # quantized bytes/param, which is what lets the knapsack packer put
+    # more packs on a device (the planner-shift this tier claims).
+    base_dtype: Optional[str] = None
 
     @staticmethod
     def bucket_rank(configs: Sequence[LoraConfig]) -> int:
@@ -293,8 +300,25 @@ class CostModel(CostEstimator):
 
     # ---------------- memory (Appendix A) ----------------
 
+    def base_bytes_per_param(self) -> float:
+        """Resident bytes per frozen-base parameter under ``base_dtype``.
+
+        Quantized schemes include the amortized f32 scale overhead: int8
+        carries one scale per output channel (~1/256 of params on typical
+        d_in >= 256 projections), nf4 one scale per 64-element block. The
+        analytic constants are deliberately slightly conservative; the
+        measured ratio on real quantized trees is what ``bench_quant``
+        reports against the paper-claim threshold."""
+        if self.base_dtype in (None, "f32", "bf16"):
+            return float(self.prec_bytes)
+        if self.base_dtype == "int8":
+            return 1.0 + 4.0 / 256.0
+        if self.base_dtype == "nf4":
+            return 0.5 + 4.0 / 64.0
+        raise ValueError(f"unknown base_dtype {self.base_dtype!r}")
+
     def base_weight_bytes(self) -> float:
-        return model_param_count(self.cfg) * self.prec_bytes
+        return model_param_count(self.cfg) * self.base_bytes_per_param()
 
     def base_act_bytes(self, total_batch: int, seq: int) -> float:
         return (

@@ -365,6 +365,7 @@ class ExecutionEngine:
         runner=None,  # Optional[repro.cluster.ClusterRunner]
         impl: Optional[str] = None,
         remat: Optional[str] = None,
+        base_dtype: Optional[str] = None,
     ) -> Tuple[List[JobRecord], float]:
         """Execute every job of a static schedule on this host through the
         cluster subsystem. Concurrent runners (multi-device hosts) return
@@ -373,10 +374,12 @@ class ExecutionEngine:
         makespan (each job's simulated duration replaced by its measured
         wall time, replayed through the resource timeline).
 
-        ``impl``/``remat`` select the kernel policy for every job; the
-        runner carries them to each segment (over the wire, for multi-host
-        runners). ``impl=None`` falls back to the caller's context-local
-        default inside :meth:`Runner.run`."""
+        ``impl``/``remat``/``base_dtype`` select the kernel policy for
+        every job; the runner carries them to each segment (over the wire,
+        for multi-host runners — ``base_dtype`` rides the KernelPolicy
+        message so workers key their compile caches on it). ``impl=None``
+        falls back to the caller's context-local default inside
+        :meth:`Runner.run`."""
         from repro.cluster import assign_units
 
         with self.tracer.span(
@@ -387,12 +390,12 @@ class ExecutionEngine:
                 schedule, configs, cfg, base_params, n_steps=n_steps,
                 seq=seq, pool=pool, data_iter_fn=data_iter_fn, seed=seed,
                 runner=runner, impl=impl, remat=remat,
-                assign_units=assign_units,
+                base_dtype=base_dtype, assign_units=assign_units,
             )
 
     def _run_local_inner(self, schedule, configs, cfg, base_params, *,
                          n_steps, seq, pool, data_iter_fn, seed, runner,
-                         impl, remat, assign_units):
+                         impl, remat, base_dtype, assign_units):
         units = assign_units(
             [(j.start, j.end, j.degree) for j in schedule.jobs],
             self.monitor.total,
@@ -425,6 +428,7 @@ class ExecutionEngine:
             runner=runner,
             impl=impl,
             remat=remat,
+            base_dtype=base_dtype,
         )
         if result.concurrent:
             makespan = result.makespan
@@ -1234,6 +1238,7 @@ class ExecutionEngine:
         runner=None,  # Optional[repro.cluster.ClusterRunner]
         impl: Optional[str] = None,
         remat: Optional[str] = None,
+        base_dtype: Optional[str] = None,
     ):
         """Execute planned segments through ``repro.cluster``: each segment
         runs on the mesh slice backing its planned device units, thread-per-
@@ -1261,6 +1266,7 @@ class ExecutionEngine:
             estimator=self.cm,
             impl=impl,
             remat=remat,
+            base_dtype=base_dtype,
         )
 
 

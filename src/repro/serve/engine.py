@@ -73,7 +73,13 @@ class ServeRequest:
     ``arrival`` is in virtual time (decode steps since trace start) so
     admission order is deterministic and replayable; wall-clock SLO numbers
     are measured separately on the result. ``rank``/``alpha`` override the
-    adapter checkpoint's own metadata when that lacks them."""
+    adapter checkpoint's own metadata when that lacks them.
+
+    ``temperature``/``top_k`` select per-request sampling: 0.0 temperature
+    (the default) is greedy argmax — the engine's bit-exactness baseline —
+    and any positive temperature switches that row to top-k/temperature
+    sampling. Both are *runtime* values of the jitted sample step, so mixing
+    greedy and sampled rows in one batch never recompiles."""
 
     request_id: int
     adapter_id: str
@@ -83,6 +89,8 @@ class ServeRequest:
     rank: Optional[int] = None
     alpha: Optional[float] = None
     extra: Optional[dict] = None  # extra prefill batch fields (VLM frames..)
+    temperature: float = 0.0  # 0.0 = greedy (bit-exactness baseline)
+    top_k: int = 0  # 0 = full vocabulary (no top-k truncation)
 
 
 @dataclass
@@ -279,6 +287,30 @@ class AdapterSlotCache:
 # ---------------------------------------------------------------------------
 
 
+def sample_tokens(lg, temp, topk, rng):
+    """Per-row temperature/top-k sampling over last-position logits.
+
+    lg: (R, V) f32; temp: (R,) f32; topk: (R,) int32 (0 = full vocab);
+    rng: one PRNG key (rows draw independent streams from it via the
+    batched categorical). Rows with ``temp == 0`` return the greedy argmax
+    bit-exactly — the where() keeps greedy rows on the identical argmax
+    value even inside a mixed batch. All of temp/topk/rng are runtime
+    values: changing them never recompiles the step."""
+    v = lg.shape[-1]
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    # top-k as a sort threshold: keep logits >= the k-th largest, -inf the
+    # rest. k is clamped per row; 0 means "no truncation" (k = V).
+    k_eff = jnp.clip(jnp.where(topk > 0, topk, v), 1, v)
+    sorted_lg = jnp.sort(lg, axis=-1)  # ascending
+    thresh = jnp.take_along_axis(sorted_lg, (v - k_eff)[:, None], axis=-1)
+    masked = jnp.where(lg >= thresh, lg, -jnp.inf)
+    t = jnp.maximum(temp, 1e-6)[:, None]
+    sampled = jax.random.categorical(rng, masked / t, axis=-1).astype(
+        jnp.int32
+    )
+    return jnp.where(temp > 0.0, sampled, greedy)
+
+
 class ServeExecutor:
     """Keyed compile cache for serving (the ``SliceExecutor`` idiom).
 
@@ -306,6 +338,29 @@ class ServeExecutor:
                     n_pack=n_rows, dist=dist, kcfg=kcfg,
                 )
                 next_tok = jnp.argmax(lg[:, -1, :], axis=-1).astype(jnp.int32)
+                return next_tok, lg, caches
+
+            self._fns[key] = jax.jit(step, donate_argnums=(3,))
+        return self._fns[key]
+
+    def sample_step_fn(
+        self, cfg: ModelConfig, n_rows: int, *, dist=None, kcfg=None
+    ):
+        """Jitted one-token decode with per-row temperature/top-k sampling:
+        ``(base, lora, scales, caches, token, pos, temp (R,), topk (R,),
+        rng key) -> (next_tok (R,), logits, caches)``. Compiled once per
+        (cfg, n_rows, dist, kcfg) like ``step_fn`` — temp/topk/rng are
+        runtime arguments, so per-request sampling churn never recompiles;
+        rows with ``temp == 0`` stay greedy (``sample_tokens``)."""
+        key = ("sample_step", cfg, n_rows, dist, kcfg)
+        if key not in self._fns:
+
+            def step(base, lora, scales, caches, token, pos, temp, topk, rng):
+                lg, caches = decode_step(
+                    base, lora, scales, token, caches, pos, cfg,
+                    n_pack=n_rows, dist=dist, kcfg=kcfg,
+                )
+                next_tok = sample_tokens(lg[:, -1, :], temp, topk, rng)
                 return next_tok, lg, caches
 
             self._fns[key] = jax.jit(step, donate_argnums=(3,))
@@ -415,6 +470,7 @@ class ServeEngine:
         dist=None,
         impl: Optional[str] = None,
         remat: Optional[str] = None,
+        base_dtype: Optional[str] = None,
         seed: int = 0,
         tracer=None,
     ):
@@ -434,14 +490,19 @@ class ServeEngine:
         )
         self.meta1 = pack_meta([LoraConfig(rank=r_bucket, alpha=float(r_bucket))])
         # per-adapter delta dispatch at row granularity: the pack's kernel
-        # policy rides into prefill and every decode step
+        # policy rides into prefill and every decode step. ``base_dtype``
+        # marks a quantized base (kernels/quant.py): prefill, every decode
+        # row, and the training Runner side all share the SAME quantized
+        # base_params tree — quantize once, serve + tune from it.
         self.kcfg = (
-            self.meta.kernel_config(impl=impl, remat=remat)
-            if (impl or remat) else None
+            self.meta.kernel_config(impl=impl, remat=remat,
+                                    base_dtype=base_dtype)
+            if (impl or remat or base_dtype) else None
         )
         self.kcfg1 = (
-            self.meta1.kernel_config(impl=impl, remat=remat)
-            if (impl or remat) else None
+            self.meta1.kernel_config(impl=impl, remat=remat,
+                                     base_dtype=base_dtype)
+            if (impl or remat or base_dtype) else None
         )
         self.base = base_params
         key = jax.random.PRNGKey(seed)
@@ -460,6 +521,15 @@ class ServeEngine:
         self._tok = np.zeros((rows, 1), np.int32)
         self._pos = np.zeros((rows,), np.int32)
         self._rows: List[Optional[_ActiveRow]] = [None] * rows
+        # per-row sampling state (0 temperature = greedy row); the engine
+        # only routes through the sample step while some row has temp > 0,
+        # so an all-greedy drain runs the *identical* compiled step_fn —
+        # the bit-exactness baseline is preserved by construction
+        self._temp = np.zeros((rows,), np.float32)
+        self._topk = np.zeros((rows,), np.int32)
+        self._sample_key = jax.random.fold_in(
+            jax.random.PRNGKey(seed), 0x5EED
+        )
 
         self.slot_cache = AdapterSlotCache(
             slot_capacity, pool=checkpoint_pool,
@@ -502,6 +572,7 @@ class ServeEngine:
         estimator=None,
         impl: Optional[str] = None,
         remat: Optional[str] = None,
+        base_dtype: Optional[str] = None,
     ):
         """Execute planned *training* segments on the shared device pool
         (delegates to the inner ``ClusterRunner``). A concurrent decode loop
@@ -512,6 +583,7 @@ class ServeEngine:
             segments, configs_by_cid, total_steps, cfg, base_params,
             seq=seq, pool=pool, data_iter_fn=data_iter_fn, seed=seed,
             estimator=estimator, impl=impl, remat=remat,
+            base_dtype=base_dtype,
         )
 
     @contextmanager
@@ -606,7 +678,20 @@ class ServeEngine:
                 )
                 c1 = pad_caches(c1, self.smax)
                 self._caches = self._row_write(self._caches, c1, row)
-                first = int(jnp.argmax(lg[0, -1, :]))
+                temp = float(req.temperature)
+                topk = int(req.top_k)
+                if temp > 0.0:
+                    # the first token comes from prefill, outside the jitted
+                    # step — sample it eagerly with the same formula, keyed
+                    # by request id so admission order doesn't change it
+                    first = int(sample_tokens(
+                        lg[:, -1, :],
+                        jnp.full((1,), temp, jnp.float32),
+                        jnp.full((1,), topk, jnp.int32),
+                        jax.random.fold_in(self._sample_key, req.request_id),
+                    )[0])
+                else:
+                    first = int(jnp.argmax(lg[0, -1, :]))
         if stats is not None:
             # the prefill above emitted the request's first token
             stats.ttft.record(
@@ -617,6 +702,8 @@ class ServeEngine:
                 )
             )
         self._scales[row] = scale
+        self._temp[row] = temp
+        self._topk[row] = topk
         self._tok[row, 0] = first
         self._pos[row] = s_total
         self._rows[row] = _ActiveRow(
@@ -629,6 +716,8 @@ class ServeEngine:
         assert active is not None
         self._rows[row] = None
         self._scales[row] = 0.0
+        self._temp[row] = 0.0
+        self._topk[row] = 0
         self.slot_cache.unpin(active.request.adapter_id)
         self._enq_wall.pop(active.request.request_id, None)
         # the request's whole residency on its row, admit -> retire
@@ -727,14 +816,26 @@ class ServeEngine:
                 "serve.step", cat="serve", track="serve",
                 step=step, batch=len(active),
             ):
-                fn = self.serve_executor.step_fn(
-                    self.cfg, self.rows, dist=self.dist, kcfg=self.kcfg
-                )
-                next_tok, _lg, self._caches = fn(
-                    self.base, self._lora, jnp.asarray(self._scales),
-                    self._caches, jnp.asarray(self._tok),
-                    jnp.asarray(self._pos),
-                )
+                if self._temp.any():
+                    fn = self.serve_executor.sample_step_fn(
+                        self.cfg, self.rows, dist=self.dist, kcfg=self.kcfg
+                    )
+                    next_tok, _lg, self._caches = fn(
+                        self.base, self._lora, jnp.asarray(self._scales),
+                        self._caches, jnp.asarray(self._tok),
+                        jnp.asarray(self._pos), jnp.asarray(self._temp),
+                        jnp.asarray(self._topk),
+                        jax.random.fold_in(self._sample_key, step),
+                    )
+                else:
+                    fn = self.serve_executor.step_fn(
+                        self.cfg, self.rows, dist=self.dist, kcfg=self.kcfg
+                    )
+                    next_tok, _lg, self._caches = fn(
+                        self.base, self._lora, jnp.asarray(self._scales),
+                        self._caches, jnp.asarray(self._tok),
+                        jnp.asarray(self._pos),
+                    )
                 next_tok = np.asarray(next_tok)
             step += 1
             stats.steps += 1

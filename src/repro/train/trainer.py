@@ -87,6 +87,7 @@ def make_packed_step(
     remat: Optional[str] = None,
     ranks: Optional[tuple] = None,
     blocks: Optional[tuple] = None,
+    base_dtype: Optional[str] = None,
 ):
     """Shape-keyed packed train step (cluster executor's compile unit).
 
@@ -103,7 +104,10 @@ def make_packed_step(
     default does not cross the cluster runner's worker threads; ``ranks``
     is the pack's static per-adapter rank tuple, which switches
     heterogeneous-rank packs onto ragged same-rank kernel segments (no
-    bucket-padding FLOPs). All three are part of the executor's cache key.
+    bucket-padding FLOPs). ``base_dtype`` marks a quantized frozen base
+    ("int8"/"nf4", kernels/quant.py) — the base argument then carries
+    {"codes","scales"} dicts in its "w" slots. All are part of the
+    executor's cache key.
     """
     # homogeneous rank tuples normalize to None: they trace identically
     # (ragged segmentation only engages on mixed ranks), so same-width packs
@@ -112,6 +116,7 @@ def make_packed_step(
     kcfg = KernelConfig(
         impl=impl, remat=remat, ranks=ranks,
         blocks=tuple(blocks) if blocks is not None else None,
+        base_dtype=base_dtype,
     )
 
     def train_step(base, lora, opt_state, batch, scales, lr_vec, budgets):
@@ -141,12 +146,13 @@ def make_train_step(
     jit: bool = True,
     impl: Optional[str] = None,
     remat: Optional[str] = None,
+    base_dtype: Optional[str] = None,
 ):
     lr_vec = meta.lr_vector()
     budgets = (
         jnp.asarray(step_budgets, jnp.int32) if step_budgets is not None else None
     )
-    kcfg = meta.kernel_config(impl=impl, remat=remat)
+    kcfg = meta.kernel_config(impl=impl, remat=remat, base_dtype=base_dtype)
 
     def train_step(base, lora, opt_state, batch):
         (total, per_adapter), grads = jax.value_and_grad(

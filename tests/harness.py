@@ -101,7 +101,7 @@ class ScriptedExecutor:
 
     def run_segment(self, seg, configs_by_cid, total_steps, cfg, base, *,
                     seq, pool, data_iter_fn, seed, slice_,
-                    impl=None, remat=None):
+                    impl=None, remat=None, base_dtype=None):
         idx = len(self.calls)
         sel = [configs_by_cid[c] for c in seg.config_ids]
         self.calls.append((seg.config_ids, seg.units, seg.run_steps))

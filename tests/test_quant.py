@@ -1,0 +1,393 @@
+"""Quantized frozen-base tier (kernels/quant.py + fused dequant epilogue).
+
+The acceptance-critical invariant: the fused kernel consuming a quantized
+base ({"codes","scales"} dicts) is BIT-EXACT against explicitly
+dequantizing the base and running the same kernel — forward and backward,
+both impls, f32 and bf16 activations. Dequantization is elementwise, so
+per-tile in-kernel dequant commutes with tiling; any mismatch is a kernel
+bug, not rounding. On top of that: quantizer error bounds (hypothesis),
+the eligibility walk, executor cache keys, the KernelPolicy wire field,
+the cost-model planner shift, and the serve sampling satellites.
+"""
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # guarded hypothesis import
+
+from repro.configs.base import LoraConfig, get_config, reduced
+from repro.core.adapter import pack_meta
+from repro.kernels.fused import fused_lora
+from repro.kernels.quant import (
+    NF4_CODEBOOK,
+    dequantize,
+    dequantize_base_params,
+    is_quantized,
+    logical_shape,
+    nf4_block,
+    quantize_base_params,
+    quantize_weight,
+    quantized_nbytes,
+)
+from repro.sched.cost_model import A100_40G, CostModel
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _setup(n, t, d, r, l, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(d * 10 + l), 4)
+    x = _rand(ks[0], (n, t, d), dtype)
+    w = np.asarray(jax.random.normal(ks[1], (d, l), jnp.float32)) * 0.1
+    a = _rand(ks[2], (n, d, r), dtype) * 0.1
+    b = _rand(ks[3], (n, r, l), dtype) * 0.1
+    alpha = jnp.linspace(0.25, 2.0, n)
+    return x, w, a, b, alpha
+
+
+# ---------------------------------------------------------------------------
+# Quantizer: round-trip error bounds + layout
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    half_d=st.integers(2, 24),
+    l=st.integers(1, 32),
+    seed=st.integers(0, 2**16),
+)
+def test_int8_roundtrip_error_bound(half_d, l, seed):
+    """Symmetric per-output-channel int8: |w - dq(q(w))| <= scale/2 + ulp."""
+    d = 2 * half_d
+    rng = np.random.RandomState(seed)
+    w = rng.randn(d, l).astype(np.float32) * rng.uniform(0.01, 10.0)
+    q = quantize_weight(w, "int8")
+    assert q["codes"].dtype == np.int8 and q["scales"].shape == (1, l)
+    dq = np.asarray(dequantize(q))
+    bound = q["scales"][0] * 0.5 * (1 + 1e-5) + 1e-7
+    assert (np.abs(w - dq) <= bound[None, :]).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    half_d=st.integers(1, 12),
+    l=st.integers(1, 24),
+    seed=st.integers(0, 2**16),
+)
+def test_nf4_roundtrip_error_bound(half_d, l, seed):
+    """nf4 block-scaled: error <= blockwise scale * half the widest gap
+    between adjacent codebook levels (nearest-level assignment)."""
+    d = 2 * half_d
+    rng = np.random.RandomState(seed)
+    w = rng.randn(d, l).astype(np.float32)
+    q = quantize_weight(w, "nf4")
+    blk = nf4_block(d)
+    assert q["codes"].dtype == np.uint8 and q["codes"].shape == (d // 2, l)
+    assert q["scales"].shape == (d // blk, l)
+    dq = np.asarray(dequantize(q))
+    half_gap = float(np.max(np.diff(np.sort(NF4_CODEBOOK)))) / 2.0
+    scales = np.repeat(q["scales"], blk, axis=0)  # (d, l) blockwise
+    assert (np.abs(w - dq) <= scales * half_gap * (1 + 1e-5) + 1e-7).all()
+
+
+def test_quantized_nbytes_and_logical_shape():
+    w = np.random.RandomState(0).randn(384, 256).astype(np.float32)
+    q8, q4 = quantize_weight(w, "int8"), quantize_weight(w, "nf4")
+    assert logical_shape(q8) == (384, 256) == logical_shape(q4)
+    assert quantized_nbytes(q8) < w.nbytes / 3.8  # ~4x smaller than f32
+    assert quantized_nbytes(q4) < quantized_nbytes(q8)  # nf4 denser still
+    assert is_quantized(q8) and is_quantized(q4) and not is_quantized(w)
+
+
+def test_eligibility_walk_quantizes_projections_only():
+    """quantize_base_params hits projection 'w' leaves under eligible
+    parents and leaves embeddings / lm_head / norms / 1-D leaves dense."""
+    params = {
+        "embed": {"w": np.ones((8, 4), np.float32)},
+        "blocks": {
+            "q": {"w": np.ones((4, 4), np.float32)},
+            "gate": {"w": np.ones((4, 6), np.float32)},
+            "ln": {"scale": np.ones((4,), np.float32)},
+        },
+        "lm_head": {"w": np.ones((4, 8), np.float32)},
+    }
+    out = quantize_base_params(params, "int8")
+    assert is_quantized(out["blocks"]["q"]["w"])
+    assert is_quantized(out["blocks"]["gate"]["w"])
+    assert not is_quantized(out["embed"]["w"])
+    assert not is_quantized(out["lm_head"]["w"])
+    assert out["blocks"]["ln"]["scale"].shape == (4,)
+    # mode=None is the identity
+    same = quantize_base_params(params, None)
+    assert not any(
+        is_quantized(leaf) for leaf in jax.tree.leaves(
+            same, is_leaf=is_quantized) if isinstance(leaf, dict)
+    )
+    # round trip back to dense restores shapes
+    dense = dequantize_base_params(out)
+    assert dense["blocks"]["q"]["w"].shape == (4, 4)
+
+
+# ---------------------------------------------------------------------------
+# THE acceptance matrix: in-kernel dequant bit-exact vs dequantize-then-run
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("impl", ["fused_xla", "fused_pallas"])
+@pytest.mark.parametrize("mode", ["int8", "nf4"])
+def test_quantized_fused_bit_exact_fwd_bwd(mode, impl, dtype):
+    x, w, a, b, alpha = _setup(3, 16, 40, 8, 36, dtype)
+    q = quantize_weight(w, mode)
+    wd = dequantize(q)  # the reference base: dense, same values
+
+    def loss(fn_w, x, a, b):
+        y = fused_lora(x, fn_w, a, b, alpha, impl=impl)
+        return jnp.sum(y.astype(jnp.float32) ** 2), y
+
+    (lq, yq), gq = jax.value_and_grad(
+        lambda *o: loss(q, *o), argnums=(0, 1, 2), has_aux=True)(x, a, b)
+    (ld, yd), gd = jax.value_and_grad(
+        lambda *o: loss(wd, *o), argnums=(0, 1, 2), has_aux=True)(x, a, b)
+    np.testing.assert_array_equal(np.asarray(yq), np.asarray(yd))
+    assert float(lq) == float(ld)
+    for got, want, name in zip(gq, gd, ("dx", "dA", "dB")):
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want), err_msg=name)
+
+
+@pytest.mark.parametrize("mode", ["int8", "nf4"])
+def test_quantized_base_grads_match_dense_base(mode):
+    """A/B adapter grads do not depend on HOW the base is stored — the
+    quantized run reproduces the dense-on-dequantized-values run exactly."""
+    x, w, a, b, alpha = _setup(2, 8, 32, 4, 24)
+    q = quantize_weight(w, mode)
+    wd = dequantize(q)
+
+    def loss(wv, a, b):
+        return jnp.sum(fused_lora(x, wv, a, b, alpha, impl="fused_xla") ** 2)
+
+    ga_q, gb_q = jax.grad(loss, argnums=(1, 2))(q, a, b)
+    ga_d, gb_d = jax.grad(loss, argnums=(1, 2))(wd, a, b)
+    np.testing.assert_array_equal(np.asarray(ga_q), np.asarray(ga_d))
+    np.testing.assert_array_equal(np.asarray(gb_q), np.asarray(gb_d))
+
+
+def test_end_to_end_train_step_parity():
+    """One jitted packed train step on a quantized base produces the SAME
+    loss and adapter update as the explicitly dequantized base."""
+    from repro.models.model import init_model
+    from repro.train.data import packed_batch_iterator
+    from repro.train.optimizer import init_opt_state
+    from repro.train.trainer import make_train_step
+
+    cfg = reduced(get_config("qwen25-7b"))
+    configs = [LoraConfig(rank=4, alpha=8.0, learning_rate=1e-3,
+                          batch_size=1, seq_len=8)] * 2
+    meta = pack_meta(configs)
+    base, lora = init_model(jax.random.PRNGKey(0), cfg, meta)
+    qbase = quantize_base_params(base, "int8")
+    dbase = dequantize_base_params(qbase)
+    batch = next(packed_batch_iterator(cfg, configs, seq=8))
+    outs = []
+    for bp, bd in ((qbase, "int8"), (dbase, None)):
+        step = make_train_step(cfg, meta, impl="fused_xla", base_dtype=bd)
+        lora2, _, m = step(bp, jax.tree.map(jnp.copy, lora),
+                           init_opt_state(lora), batch)
+        outs.append((float(m["loss"]), jax.tree.leaves(lora2)))
+    assert outs[0][0] == outs[1][0]
+    for lq, ld in zip(outs[0][1], outs[1][1]):
+        np.testing.assert_array_equal(np.asarray(lq), np.asarray(ld))
+
+
+# ---------------------------------------------------------------------------
+# Policy plumbing: executor cache key + multihost wire message
+# ---------------------------------------------------------------------------
+
+
+def test_executor_cache_keyed_on_base_dtype():
+    from repro.cluster import SliceExecutor
+
+    cfg = reduced(get_config("qwen25-7b"))
+    ex = SliceExecutor()
+    s1, _ = ex.step_fn(cfg, 2)
+    s2, _ = ex.step_fn(cfg, 2, base_dtype="int8")
+    s3, _ = ex.step_fn(cfg, 2, base_dtype="int8")
+    assert s1 is not s2 and s2 is s3
+    assert ex.n_builds == 2 and ex.n_hits == 1
+
+
+def test_kernel_policy_wire_roundtrip():
+    """KernelPolicy crosses the host-dispatch wire (pickle) with base_dtype
+    intact, and old payloads without the field still decode (getattr
+    default on the worker side)."""
+    from repro.cluster.multihost import KernelPolicy
+
+    pol = KernelPolicy(impl="fused_xla", remat="save", base_dtype="nf4")
+    back = pickle.loads(pickle.dumps(pol))
+    assert back.base_dtype == "nf4" and back.impl == "fused_xla"
+    legacy = KernelPolicy(impl="xla")  # default None = dense
+    assert getattr(legacy, "base_dtype", None) is None
+
+
+# ---------------------------------------------------------------------------
+# Cost model: quantized base shifts the packing decision
+# ---------------------------------------------------------------------------
+
+
+def test_base_bytes_per_param_table():
+    cfg = get_config("qwen25-7b")
+    dense = CostModel(cfg, A100_40G)
+    i8 = CostModel(cfg, A100_40G, base_dtype="int8")
+    n4 = CostModel(cfg, A100_40G, base_dtype="nf4")
+    assert dense.base_bytes_per_param() == dense.prec_bytes  # bit-identical
+    assert i8.base_bytes_per_param() == pytest.approx(1.0 + 4.0 / 256.0)
+    assert n4.base_bytes_per_param() == pytest.approx(0.5 + 4.0 / 64.0)
+    # the ISSUE's >= 1.8x memory-reduction claim, at the model level
+    assert dense.base_weight_bytes() / i8.base_weight_bytes() >= 1.8
+    assert i8.base_weight_bytes() / n4.base_weight_bytes() >= 1.7
+    with pytest.raises(ValueError, match="unknown base_dtype"):
+        CostModel(cfg, A100_40G, base_dtype="fp8").base_bytes_per_param()
+
+
+def test_quantized_base_shifts_planner():
+    """THE planner-shift assertion (test_autotune idiom): under a memory
+    ceiling where two dense-base configs cannot co-reside on one device,
+    the int8 cost model fits them together — the knapsack packs denser."""
+    from repro.sched.dtm import dtm
+    from repro.sched.planner import plan
+
+    cfg = get_config("qwen25-7b")
+    configs = [
+        LoraConfig(rank=8, alpha=16.0, learning_rate=1e-3,
+                   batch_size=1, seq_len=512),
+        LoraConfig(rank=8, alpha=16.0, learning_rate=5e-4,
+                   batch_size=1, seq_len=512),
+    ]
+    dense = CostModel(cfg, A100_40G)
+    i8 = CostModel(cfg, A100_40G, base_dtype="int8")
+    # ceiling between a SINGLE dense config and the dense two-pack: each
+    # dense config fits alone but the pair must split, while the quantized
+    # base (4x smaller) co-packs both with room to spare. fits() compares
+    # against load_factor * mem_bytes, so undo the factor.
+    need_d1 = dense.job_mem_bytes(configs[:1], 1, 512)
+    need_d2 = dense.job_mem_bytes(configs, 1, 512)
+    need_q2 = i8.job_mem_bytes(configs, 1, 512)
+    assert need_q2 < need_d1 < need_d2
+    hw = A100_40G.scaled(
+        mem_bytes=(need_d1 + need_d2) / 2 / dense.load_factor)
+    dense_c = CostModel(cfg, hw)
+    i8_c = CostModel(cfg, hw, base_dtype="int8")
+    assert dense_c.fits(configs[:1], 1, 512)
+    assert not dense_c.fits(configs, 1, 512)
+    assert i8_c.fits(configs, 1, 512)
+
+    # one device: no degree escalation can rescue the dense pack, so the
+    # planner must SPLIT it — while the quantized base co-packs both configs
+    def decision(cm):
+        return tuple(sorted(
+            (tuple(sorted(j.config_ids)), j.degree)
+            for j in dtm(cm, configs, 1, 512, 100).jobs
+        ))
+
+    d_dense, d_i8 = decision(dense_c), decision(i8_c)
+    assert d_dense != d_i8
+    assert d_i8 == (((0, 1), 1),)  # quantized: one pack, one device
+    s_dense = plan(dense_c, configs, 1, 512, 100)
+    s_i8 = plan(i8_c, configs, 1, 512, 100)
+    assert len(s_i8.jobs) < len(s_dense.jobs)  # packed denser
+
+
+# ---------------------------------------------------------------------------
+# Serve sampling satellites
+# ---------------------------------------------------------------------------
+
+
+def test_sample_tokens_topk1_is_greedy():
+    from repro.serve.engine import sample_tokens
+
+    lg = jnp.asarray(np.random.RandomState(0).randn(4, 33), jnp.float32)
+    temp = jnp.full((4,), 0.9, jnp.float32)
+    topk = jnp.full((4,), 1, jnp.int32)
+    got = sample_tokens(lg, temp, topk, jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(jnp.argmax(lg, axis=-1), np.int32))
+    # zero temperature is greedy regardless of top_k
+    zero = sample_tokens(lg, jnp.zeros((4,)), jnp.zeros((4,), jnp.int32),
+                         jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(
+        np.asarray(zero), np.asarray(jnp.argmax(lg, axis=-1), np.int32))
+
+
+def test_sample_tokens_deterministic_and_topk_masked():
+    from repro.serve.engine import sample_tokens
+
+    lg = jnp.asarray(np.random.RandomState(1).randn(8, 64), jnp.float32)
+    temp = jnp.full((8,), 1.3, jnp.float32)
+    topk = jnp.full((8,), 5, jnp.int32)
+    a = sample_tokens(lg, temp, topk, jax.random.PRNGKey(3))
+    b = sample_tokens(lg, temp, topk, jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # every sampled token is inside each row's top-5 set
+    top5 = np.argsort(np.asarray(lg), axis=-1)[:, -5:]
+    for i, t in enumerate(np.asarray(a)):
+        assert t in top5[i]
+
+
+def test_serve_mixed_greedy_and_sampled_rows():
+    """A sampled request rides next to greedy rows without recompiling the
+    greedy baseline away: greedy requests in the same drain emit exactly
+    the tokens an all-greedy engine emits."""
+    from repro.core.packed_lora import extract_adapter
+    from repro.models.model import init_model
+    from repro.serve.engine import ServeEngine, ServeExecutor, ServeRequest
+
+    cfg = reduced(get_config("gemma3-1b"))
+    meta = pack_meta([LoraConfig(rank=4, alpha=8.0)] * 2)
+    base, lora = init_model(jax.random.PRNGKey(0), cfg, meta)
+    lora = jax.tree.map(lambda x: x + 0.02, lora)
+    adapters = {f"ad{i}": extract_adapter(lora, i) for i in range(2)}
+    prompt = np.arange(5, dtype=np.int32) % cfg.vocab_size
+
+    def run(reqs):
+        eng = ServeEngine(cfg, base, rows=2, smax=32, r_bucket=4,
+                          serve_executor=ServeExecutor())
+        for aid, tree in adapters.items():
+            eng.publish(aid, tree, {"rank": 4, "alpha": 8.0})
+        stats = eng.serve(reqs)
+        return {r.request_id: r.tokens for r in stats.results}
+
+    greedy_only = run([
+        ServeRequest(0, "ad0", prompt, max_new_tokens=4),
+    ])
+    mixed = run([
+        ServeRequest(0, "ad0", prompt, max_new_tokens=4),
+        ServeRequest(1, "ad1", prompt, max_new_tokens=4,
+                     temperature=0.8, top_k=4),
+    ])
+    np.testing.assert_array_equal(mixed[0], greedy_only[0])
+    # same-seed engines reproduce the sampled row too
+    mixed2 = run([
+        ServeRequest(0, "ad0", prompt, max_new_tokens=4),
+        ServeRequest(1, "ad1", prompt, max_new_tokens=4,
+                     temperature=0.8, top_k=4),
+    ])
+    np.testing.assert_array_equal(mixed[1], mixed2[1])
+
+
+def test_sample_step_cached_per_shape_not_per_temperature():
+    """Temperature/top_k are runtime args: one sample step per (cfg, rows)
+    key, shared across every request's sampling knobs."""
+    from repro.serve.engine import ServeExecutor
+
+    cfg = reduced(get_config("gemma3-1b"))
+    ex = ServeExecutor()
+    f1 = ex.sample_step_fn(cfg, 2)
+    n0 = ex.cache_size
+    f2 = ex.sample_step_fn(cfg, 2)
+    assert f1 is f2 and ex.cache_size == n0
+    ex.sample_step_fn(cfg, 4)  # new row width: new entry
+    assert ex.cache_size == n0 + 1
