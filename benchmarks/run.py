@@ -186,6 +186,10 @@ def main(argv=None):
                 checks.append(("continuous batching vs sequential decode, tokens/s (>=1.5x)", f"{sp[0]['speedup_serve']:.2f}x"))
                 checks.append(("served tokens bit-exact vs per-request baseline", str(all(r["tokens_bitexact"] for r in sp))))
                 checks.append(("distinct adapters served in one batch", str(sp[0]["adapters_served"])))
+            psp = [r for r in rows if r["mode"] == "prefill_speedup"]
+            if psp:
+                checks.append(("chunked admission cuts p95 ITL vs synchronous prefill, bursty long prompts (>=1x)", f"{psp[0]['itl_p95_speedup']:.2f}x"))
+                checks.append(("bursty-trace tokens bit-exact vs sequential baseline", str(all(r["tokens_bitexact"] for r in psp))))
         if name == "adaptive" and rows:
             sp = [r for r in rows if r["mode"] == "speedup"]
             if sp:

@@ -206,9 +206,11 @@ def apply_gqa(
             q = apply_rope(q, cos, sin)
             k = apply_rope(k, cos, sin)
         if cache is not None:
-            # decode: write this step's k/v at `pos`, attend to <= pos.
-            # Vector pos = per-row positions: each row writes at its own slot.
+            # decode / chunked prefill: write this step's (or chunk's) k/v at
+            # `pos`, attend to <= pos. Vector pos = per-row positions: each
+            # row writes at its own slot (single-token decode only).
             if jnp.ndim(pos) > 0:
+                assert s == 1, "vector pos requires single-token decode"
                 row_upd = jax.vmap(
                     lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0, 0))
                 )
@@ -217,7 +219,18 @@ def apply_gqa(
             else:
                 ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
                 cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
-            out = decode_attention(q, ck, cv, pos, window=window)
+            if s == 1:
+                out = decode_attention(q, ck, cv, pos, window=window)
+            else:
+                # chunk-resumable prefill: the chunk's queries attend the
+                # whole cache under the same causal/window masks as the
+                # one-shot path — with cache capacity == s_total the shapes
+                # match flash_attention's single-chunk body exactly, so the
+                # outputs are bitwise identical (tests/test_serve_engine.py)
+                out = _attend_chunk(
+                    q, ck, cv, pos + jnp.arange(s),
+                    jnp.arange(ck.shape[1]), causal, window, hd**-0.5,
+                )
             new_cache = {"k": ck, "v": cv}
         else:
             out = flash_attention(
@@ -323,6 +336,7 @@ def apply_mla(
         # absorbed decode: score against the compressed cache directly.
         # Vector pos = per-row positions (continuous batching).
         if jnp.ndim(pos) > 0:
+            assert s == 1, "vector pos requires single-token decode"
             row_upd = jax.vmap(
                 lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0))
             )
@@ -338,6 +352,33 @@ def apply_mla(
             kr_c = jax.lax.dynamic_update_slice(
                 cache["k_rope"], k_rope[:, :, 0, :].astype(cache["k_rope"].dtype), (0, pos, 0)
             )
+        if s > 1:
+            # chunk-resumable prefill: the absorbed decode formulation is
+            # algebraically but NOT bitwise equal to the prefill path, so
+            # chunks expand the full compressed cache through kv_b_k/kv_b_v
+            # exactly like the train/prefill branch — with cache capacity ==
+            # s_total every shape (and therefore every bit) matches one-shot
+            sc = ckv_c.shape[1]
+            k_nope = (
+                ckv_c @ params["kv_b_k"]["w"].astype(ckv_c.dtype)
+            ).reshape(nb, sc, h, dn)
+            vc = (
+                ckv_c @ params["kv_b_v"]["w"].astype(ckv_c.dtype)
+            ).reshape(nb, sc, h, dv)
+            kc = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(kr_c[:, :, None, :], (nb, sc, h, dr))],
+                -1,
+            )
+            q = jnp.concatenate([q_nope, q_rope], -1)
+            out = _attend_chunk(
+                q, kc, vc, pos + jnp.arange(s), jnp.arange(sc),
+                True, 0, scale,
+            )
+            out = lora_linear(
+                out.reshape(nb, s, h * dv), params["o"], lo.get("o"),
+                scales, n_pack, kcfg=kcfg,
+            )
+            return out, {"ckv": ckv_c, "k_rope": kr_c}
         wk = params["kv_b_k"]["w"].reshape(acfg.kv_lora_rank, h, dn)
         # absorb W_uk into q: (NB,1,H,dn) x (kvlr,H,dn) -> (NB,H,kvlr)
         q_abs = jnp.einsum("bshd,rhd->bhr", q_nope, wk.astype(q_nope.dtype))

@@ -62,9 +62,10 @@ def _causal_conv(x, w, b):
     return out + b.astype(x.dtype)
 
 
-def _ssd_scan(xs, b, c, dt, a_log, chunk: int):
+def _ssd_scan(xs, b, c, dt, a_log, chunk: int, state0=None):
     """Chunked SSD. xs: (NB,S,H,P); b/c: (NB,S,N); dt: (NB,S,H) (post-softplus).
-    Returns (y (NB,S,H,P), final_state (NB,H,P,N))."""
+    ``state0`` resumes the recurrence mid-sequence (chunk-resumable prefill);
+    None starts from zeros. Returns (y (NB,S,H,P), final_state (NB,H,P,N))."""
     nb, s, h, p = xs.shape
     n = b.shape[-1]
     a = -jnp.exp(a_log.astype(jnp.float32))  # (H,), negative
@@ -112,7 +113,10 @@ def _ssd_scan(xs, b, c, dt, a_log, chunk: int):
     def xs_f(xq):
         return xq.astype(jnp.float32)
 
-    state0 = jnp.zeros((nb, h, p, n), jnp.float32)
+    if state0 is None:
+        state0 = jnp.zeros((nb, h, p, n), jnp.float32)
+    else:
+        state0 = state0.astype(jnp.float32)
     # scan over chunks: move chunk axis to front
     inps = (
         jnp.moveaxis(xs_c, 1, 0),
@@ -169,6 +173,50 @@ def apply_ssm(
             "state": state,
         }
     return out, cache
+
+
+def apply_ssm_chunk(params, lora, scales, x, cache, *, scfg: SSMConfig, n_pack=1, kcfg=None):
+    """Chunk-resumable prefill step. x: (NB, S, d) with S > 1; cache:
+    {conv (NB,K-1,C), state (NB,H,P,N)} as produced by ``apply_ssm``/this.
+
+    Matches the one-shot ``apply_ssm`` bitwise as long as every resume
+    boundary falls on a multiple of ``scfg.chunk_size`` (the SSD sub-chunk
+    grid must line up — the engine rounds its ``prefill_chunk`` up to that);
+    the conv window is replayed from the cached K-1 trailing inputs, and the
+    SSD scan resumes from the cached state via ``_ssd_scan(state0=...)``."""
+    lo = lora or {}
+    nb, s, d = x.shape
+    di = scfg.d_inner(d)
+    h = scfg.n_heads(d)
+    n = scfg.d_state
+    k = scfg.d_conv
+    zx = lora_linear(x, params["zx"], lo.get("zx"), scales, n_pack, kcfg=kcfg)
+    z, xs = zx[..., :di], zx[..., di:]
+    bc = x @ params["bc"]["w"].astype(x.dtype)
+    dt_raw = x @ params["dt"]["w"].astype(x.dtype) + params["dt_bias"].astype(x.dtype)
+
+    conv_in = jnp.concatenate([xs, bc], -1)  # (NB,S,C)
+    win = jnp.concatenate([cache["conv"].astype(conv_in.dtype), conv_in], 1)
+    # _causal_conv zero-pads K-1 on the left; dropping those first K-1
+    # outputs leaves exactly the chunk's positions, each computed over the
+    # true trailing window (cached rows stand in for the left pad)
+    conv = jax.nn.silu(
+        _causal_conv(win, params["conv_w"], params["conv_b"])[:, k - 1 :]
+    )
+    xs, b, c = conv[..., :di], conv[..., di : di + n], conv[..., di + n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32))
+
+    y, state = _ssd_scan(
+        xs.reshape(nb, s, h, -1), b, c, dt, params["a_log"],
+        scfg.chunk_size, state0=cache["state"],
+    )
+    y = y + params["d_skip"].astype(y.dtype)[None, None, :, None] * xs.reshape(
+        nb, s, h, -1
+    )
+    y = y.reshape(nb, s, di)
+    y = apply_norm(params["norm"], y * jax.nn.silu(z), "rmsnorm")
+    out = lora_linear(y, params["out"], lo.get("out"), scales, n_pack, kcfg=kcfg)
+    return out, {"conv": win[:, -(k - 1) :], "state": state}
 
 
 def apply_ssm_decode(params, lora, scales, x, cache, *, scfg: SSMConfig, n_pack=1, kcfg=None):

@@ -195,3 +195,43 @@ def prefill(
     )
     lg = logits(base, hidden[:, -1:, :], cfg)
     return lg, caches
+
+
+def prefill_chunk(
+    base,
+    lora,
+    scales,
+    tokens: jnp.ndarray,  # (NB, C) int32 — one chunk of the prompt
+    caches,
+    pos,  # () int32: absolute position of the chunk's first token
+    cfg: ModelConfig,
+    *,
+    n_pack: int = 1,
+    dist: Optional[DistContext] = None,
+    kcfg=None,
+):
+    """One chunk of a chunk-resumable prefill: embed ``tokens`` at absolute
+    positions ``pos + [0, C)``, run the stack against partially-filled
+    ``caches`` (attention writes the chunk's K/V at ``pos`` and attends the
+    whole cache under the causal/window masks; SSM resumes conv window +
+    SSD state), and return (last-position logits (NB,1,V), new_caches).
+
+    With cache capacity exactly equal to the prompt length, iterating this
+    over consecutive chunks reproduces ``prefill``'s caches and final-token
+    logits *bitwise* — the serve engine's interleaved-admission invariant
+    (chunk boundaries commute with causal attention; for SSM stacks ``pos``
+    must advance in multiples of ``cfg.ssm.chunk_size``). Encoder-decoder
+    and patch-prefix (VLM) configs still require one-shot ``prefill``."""
+    assert not cfg.is_encdec, "chunked prefill: enc-dec needs one-shot prefill"
+    s = tokens.shape[1]
+    x = jnp.take(base["embed"]["w"], tokens, axis=0)
+    rc = make_rope_cache(cfg, pos + jnp.arange(s))
+    specs = layer_specs(cfg)
+    x, new_caches, _ = apply_stack(
+        base["decoder"], lora.get("decoder", {"blocks": {}, "rest": {}}),
+        scales, x, cfg, specs,
+        n_pack=n_pack, rope_cache=rc, dist=dist,
+        caches=caches, pos=pos, remat=False, kcfg=kcfg,
+    )
+    x = apply_norm(base["final_norm"], x, cfg.norm_kind)
+    return logits(base, x[:, -1:, :], cfg), new_caches

@@ -32,6 +32,7 @@ from repro.models.layers.moe import apply_moe, init_moe
 from repro.models.layers.rope import rope_tables
 from repro.models.layers.ssm import (
     apply_ssm,
+    apply_ssm_chunk,
     apply_ssm_decode,
     init_ssm,
     init_ssm_cache,
@@ -212,7 +213,10 @@ def apply_layer(
     h = apply_norm(params["norm1"], x, cfg.norm_kind)
     if spec.mixer == "ssm":
         if cache is not None:
-            y, c = apply_ssm_decode(
+            # single-token decode vs multi-token chunked prefill: the chunk
+            # path replays the conv window and resumes the SSD state
+            ssm_fn = apply_ssm_decode if h.shape[1] == 1 else apply_ssm_chunk
+            y, c = ssm_fn(
                 params["ssm"], lo.get("ssm"), scales, h,
                 cache["ssm"], scfg=cfg.ssm, n_pack=n_pack, kcfg=kcfg,
             )

@@ -88,6 +88,61 @@ def pad_caches(caches, target_len: int):
     return walk(caches)
 
 
+def align_prefill_chunk(cfg: ModelConfig, chunk: Optional[int]) -> Optional[int]:
+    """Round a prefill chunk size up so resume boundaries stay bitwise-safe.
+
+    Attention chunks commute with the causal mask at any boundary, but SSM
+    (SSD) stacks are only bitwise-resumable when every boundary falls on the
+    scan's sub-chunk grid (``cfg.ssm.chunk_size``) — off-grid boundaries
+    regroup the chunked quadratic dual and drift by ulps. None/0 disables
+    chunking (one-shot prefill)."""
+    if not chunk or chunk <= 0:
+        return None
+    if cfg.ssm is not None and "ssm" in cfg.layer_kinds():
+        q = cfg.ssm.chunk_size
+        chunk = -(-chunk // q) * q
+    return int(chunk)
+
+
+def prefill_chunked(
+    base,
+    lora,
+    scales,
+    tokens: jnp.ndarray,  # (NB, S) int32
+    cfg: ModelConfig,
+    chunk: int,
+    *,
+    n_pack: int = 1,
+    dist: Optional[DistContext] = None,
+    kcfg=None,
+    executor=None,
+    capacity: Optional[int] = None,
+):
+    """Chunked prefill: ``prefill``'s contract, built from ``prefill_chunk``
+    steps of at most ``chunk`` tokens. Returns (last-pos logits (NB,1,V),
+    caches) with cache capacity ``capacity or S`` — capacity ``S`` (the
+    default) makes the result *bitwise* identical to one-shot ``prefill``
+    (every chunk attends a cache whose shapes match the one-shot attention
+    operands exactly). Caches are f32, like the in-flight K/V of one-shot
+    prefill; cast at the consumer like ``write_row_caches`` does."""
+    from repro.serve.engine import default_executor
+
+    ex = executor if executor is not None else default_executor()
+    chunk = align_prefill_chunk(cfg, chunk)
+    assert chunk, "prefill_chunked needs a positive chunk size"
+    nb, s = tokens.shape
+    caches = init_caches(cfg, nb, capacity or s, dtype=jnp.float32)
+    fn = ex.prefill_chunk_fn(cfg, n_pack, dist=dist, kcfg=kcfg)
+    lg, p0 = None, 0
+    while p0 < s:
+        c = min(chunk, s - p0)
+        lg, caches = fn(
+            base, lora, scales, tokens[:, p0 : p0 + c], caches, jnp.int32(p0)
+        )
+        p0 += c
+    return lg, caches
+
+
 def generate(
     base,
     lora,

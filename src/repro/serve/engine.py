@@ -6,8 +6,14 @@ tuning (``lora_linear`` over ``n_pack`` adapters) runs here at row
 granularity: ``n_pack == rows`` with a per-row batch of 1, per-row scales,
 and per-row decode positions (the vector-``pos`` path of
 ``models.model.decode_step``). Admission and retirement are per *token
-step*: when a row finishes its request, the next queued request is prefilled
-into that row on the following step — the batch never drains.
+step*: when a row finishes its request, the next queued request is admitted
+into that row on the following step — the batch never drains. With
+``prefill_chunk`` set, admission streams the prompt into a row-private
+exact-capacity cache in bounded chunks interleaved with decode steps
+(``models.model.prefill_chunk``), so other rows keep emitting while a long
+prompt fills; the default (None) is the legacy synchronous one-shot prefill.
+Either way the resulting row state — and every emitted token — is bitwise
+identical to the sequential baseline's.
 
 Three pieces:
 
@@ -56,9 +62,9 @@ import numpy as np
 from repro.configs.base import LoraConfig, ModelConfig
 from repro.core.adapter import PackMeta, pack_meta
 from repro.core.packed_lora import extract_adapter, inject_adapter
-from repro.models.model import decode_step, init_model, prefill
+from repro.models.model import decode_step, init_model, prefill, prefill_chunk
 from repro.obs import NULL_TRACER, Histogram
-from repro.serve.decode import pad_caches
+from repro.serve.decode import align_prefill_chunk, pad_caches
 
 
 # ---------------------------------------------------------------------------
@@ -95,17 +101,26 @@ class ServeRequest:
 
 @dataclass
 class ServeResult:
-    """Emitted tokens + admission/latency accounting for one request."""
+    """Emitted tokens + admission/latency accounting for one request.
+
+    ``error`` is None for a served request. A request the engine *rejects at
+    admission* (oversized prompt, unresolvable rank/alpha) comes back with
+    ``error`` set, zero tokens, and admitted == finished at the rejection
+    point — the drain keeps serving every other request instead of raising
+    mid-flight with active rows abandoned. ``tokens`` may also be shorter
+    than ``max_new_tokens`` (with ``error`` None) when a ``max_steps`` bound
+    retired the row early — a partial result, not a failure."""
 
     request_id: int
     adapter_id: str
-    tokens: np.ndarray  # (max_new_tokens,) int32, greedy
+    tokens: np.ndarray  # (<= max_new_tokens,) int32
     n_prompt: int
     arrival: float  # virtual steps (copied from the request)
     admitted_step: int  # virtual step at admission
     finished_step: int  # virtual step when the last token was emitted
     admitted_wall: float  # seconds since serve() start
     finished_wall: float
+    error: Optional[str] = None  # admission-rejection reason
 
     @property
     def queue_steps(self) -> float:
@@ -123,11 +138,14 @@ class ServeStats:
 
     The latency histograms are always on (a histogram record is one lock +
     one float append, tracer or not): ``ttft`` is seconds from a request
-    entering the engine's queue to its first emitted token, ``itl`` is the
-    wall duration of each decode step, recorded once per active row per
-    step (the per-token gap each in-flight request observed), and
-    ``queue_wait`` is seconds from enqueue to the start of admission.
-    Percentiles via e.g. ``stats.ttft.summary()["p95"]``."""
+    entering the engine's queue (``submit()`` or trace arrival) to its
+    first emitted token, ``itl`` is the gap between a row's consecutive
+    emitted tokens — recorded once per decoding row per step, with any
+    admission/prefill work that ran between the two tokens included, so
+    prefill stalls show up where the request actually felt them — and
+    ``queue_wait`` is seconds from enqueue to the start of admission
+    (rejected requests record neither). Percentiles via e.g.
+    ``stats.ttft.summary()["p95"]``."""
 
     results: List[ServeResult] = field(default_factory=list)
     steps: int = 0  # decode steps executed
@@ -384,6 +402,29 @@ class ServeExecutor:
             self._fns[key] = jax.jit(prefill_)
         return self._fns[key]
 
+    def prefill_chunk_fn(
+        self, cfg: ModelConfig, n_rows: int, *, dist=None, kcfg=None
+    ):
+        """Jitted chunk-resumable prefill step: ``(base, lora, scales,
+        tokens (R,C), caches, pos) -> (last-pos logits (R,1,V), caches)``,
+        caches donated (the engine advances a row's in-progress cache in
+        place). One closure per (cfg, n_rows, dist, kcfg); jit's shape
+        specialization keys the compiled executables on the (chunk, cache
+        capacity) shapes, so a burst of same-shaped admissions reuses them —
+        and each compiled unit is chunk-sized, unlike ``prefill_fn`` which
+        specializes (and stalls) per full prompt length."""
+        key = ("prefill_chunk", cfg, n_rows, dist, kcfg)
+        if key not in self._fns:
+
+            def chunk_(base, lora, scales, tokens, caches, pos):
+                return prefill_chunk(
+                    base, lora, scales, tokens, caches, pos, cfg,
+                    n_pack=n_rows, dist=dist, kcfg=kcfg,
+                )
+
+            self._fns[key] = jax.jit(chunk_, donate_argnums=(4,))
+        return self._fns[key]
+
 
 _DEFAULT_EXECUTOR: Optional[ServeExecutor] = None
 
@@ -437,12 +478,37 @@ def write_row_caches(caches, row_caches, row):
 
 
 @dataclass
+class _PrefillState:
+    """Per-row progress of a chunked, decode-interleaved prefill.
+
+    The row owns a width-1 f32 cache sized *exactly* to its prompt — the
+    shapes every chunk's attention sees are then identical to the one-shot
+    prefill's, which is what makes the interleaved path bitwise equal to
+    the synchronous one (see ``models.model.prefill_chunk``). The cache is
+    zero-padded to ``smax`` and row-written (with the engine-wide bf16
+    cast) only once the whole prompt is in."""
+
+    lora1: Any  # width-1 device lora tree for this row's adapter
+    scale: float
+    caches: Any  # width-1 f32 cache tree, capacity == len(prompt)
+    prompt: np.ndarray  # (S,) int32
+    filled: int = 0  # tokens already written into the cache
+    logits: Any = None  # last chunk's final-position logits (1,1,V)
+
+
+@dataclass
 class _ActiveRow:
     request: ServeRequest
     emitted: List[int]
     admitted_step: int
     admitted_wall: float
     n_prompt: int
+    # wall (serve-relative) of this row's last emitted token: consecutive-
+    # token gaps — the ITL each request actually observes, admission stalls
+    # included — are measured against it
+    last_emit_wall: float = 0.0
+    # in-progress chunked prefill; None once the row is decoding
+    prefill: Optional[_PrefillState] = None
 
 
 class ServeEngine:
@@ -463,6 +529,7 @@ class ServeEngine:
         smax: int = 64,
         r_bucket: int = 8,
         slot_capacity: int = 8,
+        prefill_chunk: Optional[int] = None,
         checkpoint_pool=None,
         device_pool=None,
         serve_executor: Optional[ServeExecutor] = None,
@@ -482,6 +549,11 @@ class ServeEngine:
         self.rows = rows
         self.smax = smax
         self.dist = dist
+        # chunked, decode-interleaved admission: at most this many prompt
+        # tokens are prefilled per engine iteration (rounded up to the SSD
+        # sub-chunk grid on SSM stacks — bitwise-safe resume boundaries);
+        # None = legacy synchronous one-shot prefill at admission
+        self.prefill_chunk = align_prefill_chunk(cfg, prefill_chunk)
         # uniform engine-wide rank bucket: every admitted adapter is
         # zero-padded to r_bucket at injection, so the pack shape — and the
         # compiled step — never changes across admissions
@@ -536,9 +608,11 @@ class ServeEngine:
             metrics=self.tracer.metrics,
         )
         self.queue: "deque[ServeRequest]" = deque()
-        # wall-clock seconds (serve-relative) each queued request entered
-        # the engine, for the TTFT / queue-wait histograms
-        self._enq_wall: Dict[int, float] = {}
+        # absolute perf_counter at which each queued request entered the
+        # engine, for the TTFT / queue-wait histograms. Absolute (not
+        # serve-relative) so a request submit()ted before serve() starts
+        # still measures from its true enqueue, not from serve-start.
+        self._enq_abs: Dict[int, float] = {}
         self._serve_t0 = 0.0  # perf_counter origin of the live serve() call
         self.serve_executor = serve_executor or default_executor()
 
@@ -619,6 +693,10 @@ class ServeEngine:
     # ---------------- admission / retirement --------------------------------
 
     def submit(self, req: ServeRequest) -> None:
+        """Enqueue a request ahead of (or during) a ``serve()`` drain. The
+        enqueue instant is recorded here — queue-wait and TTFT span from the
+        moment the request entered the engine, not from serve-start."""
+        self._enq_abs[req.request_id] = time.perf_counter()
         self.queue.append(req)
 
     def _scale_for(self, req: ServeRequest, meta: dict) -> float:
@@ -632,26 +710,54 @@ class ServeEngine:
         return float(alpha) / float(rank)
 
     def _admit(self, req: ServeRequest, row: int, step: int, wall: float,
-               stats: Optional[ServeStats] = None):
+               stats: Optional[ServeStats] = None) -> Optional[ServeResult]:
+        """Admit ``req`` into free row ``row`` — or reject it.
+
+        Validation (prompt budget, adapter resolution) runs *before* any
+        latency accounting or pinning: a rejected request comes back as an
+        errored :class:`ServeResult` (the drain keeps serving everything
+        else), never records a queue-wait/TTFT sample, and never leaks a
+        slot-cache pin. Returns None on successful admission — the row is
+        then either decoding (synchronous one-shot prefill) or filling its
+        cache chunk-by-chunk (``prefill_chunk`` set)."""
+        prompt = np.asarray(req.prompt, np.int32)
+        n_patch = self.cfg.n_patch_tokens or 0
+        s_total = prompt.shape[0] + n_patch
+        err = adapter = ameta = scale = None
+        if s_total + req.max_new_tokens > self.smax:
+            err = (
+                f"request {req.request_id}: prompt {s_total} + "
+                f"{req.max_new_tokens} new tokens exceeds smax={self.smax}"
+            )
+        else:
+            try:
+                adapter, ameta = self.slot_cache.get(req.adapter_id)
+                scale = self._scale_for(req, ameta)
+            except (KeyError, ValueError) as e:
+                err = str(e)
+        if err is not None:
+            self._enq_abs.pop(req.request_id, None)
+            return ServeResult(
+                request_id=req.request_id,
+                adapter_id=req.adapter_id,
+                tokens=np.zeros((0,), np.int32),
+                n_prompt=int(prompt.shape[0]),
+                arrival=req.arrival,
+                admitted_step=step,
+                finished_step=step,
+                admitted_wall=wall,
+                finished_wall=wall,
+                error=err,
+            )
         if stats is not None:
             stats.queue_wait.record(
-                max(0.0, wall - self._enq_wall.get(req.request_id, 0.0))
+                max(0.0, time.perf_counter() - self._enq_abs[req.request_id])
             )
         with self.tracer.span(
             "serve.admit", cat="serve", track=f"row{row}",
             request_id=req.request_id, adapter=req.adapter_id, step=step,
         ):
-            adapter, ameta = self.slot_cache.get(req.adapter_id)
             self.slot_cache.pin(req.adapter_id)
-            prompt = np.asarray(req.prompt, np.int32)
-            n_patch = self.cfg.n_patch_tokens or 0
-            s_total = prompt.shape[0] + n_patch
-            if s_total + req.max_new_tokens > self.smax:
-                self.slot_cache.unpin(req.adapter_id)
-                raise ValueError(
-                    f"request {req.request_id}: prompt {s_total} + "
-                    f"{req.max_new_tokens} new tokens exceeds smax={self.smax}"
-                )
             # weights: rank-pad into the width-1 template (prefill — the
             # bit-identical twin of the sequential baseline's), then write
             # that row into the device-resident R-row pack; rows are
@@ -660,7 +766,31 @@ class ServeEngine:
                 jnp.asarray, inject_adapter(self._lora1_host, adapter, 0)
             )
             self._lora = self._row_write(self._lora, lora1, row)
-            scale = self._scale_for(req, ameta)
+            if (
+                self.prefill_chunk is not None
+                and not req.extra
+                and not n_patch
+                and not self.cfg.is_encdec
+            ):
+                # chunked interleaved admission: allocate the row's private
+                # f32 cache at capacity == prompt length (the bitwise
+                # invariant) and let the drain loop stream chunks into it
+                # between decode steps; the row flips to decode — and the
+                # first token / TTFT land — once the prompt is fully cached
+                from repro.models.model import init_caches
+
+                self._rows[row] = _ActiveRow(
+                    request=req, emitted=[], admitted_step=step,
+                    admitted_wall=wall, n_prompt=prompt.shape[0],
+                    prefill=_PrefillState(
+                        lora1=lora1, scale=scale,
+                        caches=init_caches(
+                            self.cfg, 1, s_total, dtype=jnp.float32
+                        ),
+                        prompt=prompt,
+                    ),
+                )
+                return None
             batch = {"tokens": jnp.asarray(prompt[None, :])}
             if req.extra:
                 batch.update(req.extra)
@@ -692,15 +822,10 @@ class ServeEngine:
                     )[0])
                 else:
                     first = int(jnp.argmax(lg[0, -1, :]))
+        now = time.perf_counter()
         if stats is not None:
             # the prefill above emitted the request's first token
-            stats.ttft.record(
-                max(
-                    0.0,
-                    time.perf_counter() - self._serve_t0
-                    - self._enq_wall.get(req.request_id, 0.0),
-                )
-            )
+            stats.ttft.record(max(0.0, now - self._enq_abs[req.request_id]))
         self._scales[row] = scale
         self._temp[row] = temp
         self._topk[row] = topk
@@ -709,7 +834,68 @@ class ServeEngine:
         self._rows[row] = _ActiveRow(
             request=req, emitted=[first], admitted_step=step,
             admitted_wall=wall, n_prompt=prompt.shape[0],
+            last_emit_wall=now - self._serve_t0,
         )
+        return None
+
+    def _prefill_advance(
+        self, row: int, step: int, stats: ServeStats
+    ) -> bool:
+        """Run ONE prefill chunk for ``row``'s in-progress request.
+
+        On the final chunk the row flips into the decode set: the exact-
+        capacity f32 cache is zero-padded to ``smax`` and row-written (same
+        pad + bf16-cast path as one-shot admission, so the engine state is
+        bitwise identical), the first token is emitted, and TTFT is
+        recorded. Returns True once the row is decoding."""
+        a = self._rows[row]
+        ps = a.prefill
+        req = a.request
+        c = min(self.prefill_chunk, len(ps.prompt) - ps.filled)
+        with self.tracer.span(
+            "serve.prefill_chunk", cat="serve", track=f"row{row}",
+            request_id=req.request_id, step=step, pos=ps.filled,
+            chunk=int(c), n_prompt=len(ps.prompt),
+        ):
+            fn = self.serve_executor.prefill_chunk_fn(
+                self.cfg, 1, dist=self.dist, kcfg=self.kcfg1
+            )
+            lg, ps.caches = fn(
+                self.base, ps.lora1,
+                jnp.full((1,), ps.scale, jnp.float32),
+                jnp.asarray(ps.prompt[None, ps.filled : ps.filled + c]),
+                ps.caches, jnp.int32(ps.filled),
+            )
+            ps.filled += c
+            if ps.filled < len(ps.prompt):
+                # sync so the span measures the chunk (and the iteration's
+                # overhead stays the one bounded chunk, not deferred work)
+                jax.block_until_ready(lg)
+                return False
+            c1 = pad_caches(ps.caches, self.smax)
+            self._caches = self._row_write(self._caches, c1, row)
+            temp = float(req.temperature)
+            topk = int(req.top_k)
+            if temp > 0.0:
+                first = int(sample_tokens(
+                    lg[:, -1, :],
+                    jnp.full((1,), temp, jnp.float32),
+                    jnp.full((1,), topk, jnp.int32),
+                    jax.random.fold_in(self._sample_key, req.request_id),
+                )[0])
+            else:
+                first = int(jnp.argmax(lg[0, -1, :]))
+        now = time.perf_counter()
+        stats.ttft.record(max(0.0, now - self._enq_abs[req.request_id]))
+        self._scales[row] = ps.scale
+        self._temp[row] = temp
+        self._topk[row] = topk
+        self._tok[row, 0] = first
+        self._pos[row] = len(ps.prompt)
+        a.emitted.append(first)
+        a.last_emit_wall = now - self._serve_t0
+        a.prefill = None
+        return True
 
     def _retire(self, row: int, step: int, wall: float) -> ServeResult:
         active = self._rows[row]
@@ -719,7 +905,7 @@ class ServeEngine:
         self._temp[row] = 0.0
         self._topk[row] = 0
         self.slot_cache.unpin(active.request.adapter_id)
-        self._enq_wall.pop(active.request.request_id, None)
+        self._enq_abs.pop(active.request.request_id, None)
         # the request's whole residency on its row, admit -> retire
         self.tracer.add_span(
             "serve.request",
@@ -790,16 +976,37 @@ class ServeEngine:
             wall = time.perf_counter() - t0
             while pending and pending[0].arrival <= step:
                 req = pending.popleft()
-                self._enq_wall[req.request_id] = wall
+                self._enq_abs.setdefault(req.request_id, time.perf_counter())
                 self.queue.append(req)
             qdepth.set(len(self.queue))
             for row in range(self.rows):
-                if self._rows[row] is None and self.queue:
+                while self._rows[row] is None and self.queue:
                     req = self.queue.popleft()
-                    self._admit(req, row, step, wall, stats)
-                    # single-token request: prefill already emitted it
-                    if len(self._rows[row].emitted) >= req.max_new_tokens:
-                        stats.tokens_emitted += len(self._rows[row].emitted)
+                    rejected = self._admit(req, row, step, wall, stats)
+                    if rejected is not None:
+                        # row is still free — surface the rejection and try
+                        # the next queued request instead of aborting
+                        stats.results.append(rejected)
+                        continue
+                    a = self._rows[row]
+                    if (
+                        a.prefill is None
+                        and len(a.emitted) >= req.max_new_tokens
+                    ):
+                        # single-token request: prefill already emitted it
+                        stats.tokens_emitted += len(a.emitted)
+                        stats.results.append(self._retire(row, step, wall))
+            # one prefill chunk per still-filling row: admission cost is
+            # paid in bounded slices interleaved with decode steps, not as
+            # one stall that freezes every in-flight row
+            for row in range(self.rows):
+                a = self._rows[row]
+                if a is None or a.prefill is None:
+                    continue
+                if self._prefill_advance(row, step, stats):
+                    if len(a.emitted) >= a.request.max_new_tokens:
+                        wall = time.perf_counter() - t0
+                        stats.tokens_emitted += len(a.emitted)
                         stats.results.append(self._retire(row, step, wall))
             active = [r for r in range(self.rows) if self._rows[r] is not None]
             if not active:
@@ -810,11 +1017,23 @@ class ServeEngine:
                     continue
                 break
             if max_steps is not None and stats.steps >= max_steps:
+                # bounded drain: retire in-flight rows into partial results
+                # (tokens emitted so far, pins released) instead of
+                # dropping them from stats with their adapters pinned
+                wall = time.perf_counter() - t0
+                for row in active:
+                    stats.tokens_emitted += len(self._rows[row].emitted)
+                    stats.results.append(self._retire(row, step, wall))
                 break
-            t_step = time.perf_counter()
+            decoding = [r for r in active if self._rows[r].prefill is None]
+            if not decoding:
+                # chunk-only iteration: virtual time still advances, so
+                # trace arrivals keep landing in free rows mid-prefill
+                step += 1
+                continue
             with tracer.span(
                 "serve.step", cat="serve", track="serve",
-                step=step, batch=len(active),
+                step=step, batch=len(decoding),
             ):
                 if self._temp.any():
                     fn = self.serve_executor.sample_step_fn(
@@ -839,15 +1058,16 @@ class ServeEngine:
                 next_tok = np.asarray(next_tok)
             step += 1
             stats.steps += 1
-            stats.occupancy_sum += len(active)
+            stats.occupancy_sum += len(decoding)
             wall = time.perf_counter() - t0
-            # every active row emitted exactly one token this step, so the
-            # step's wall time IS each row's inter-token latency
-            dt = wall - (t_step - t0)
-            for _ in active:
-                stats.itl.record(dt)
-            for row in active:
+            # each decoding row emitted exactly one token this iteration;
+            # the gap since the row's previous token — admission/chunk work
+            # in between included — is the inter-token latency that row's
+            # request actually observed
+            for row in decoding:
                 a = self._rows[row]
+                stats.itl.record(max(0.0, wall - a.last_emit_wall))
+                a.last_emit_wall = wall
                 a.emitted.append(int(next_tok[row]))
                 self._tok[row, 0] = int(next_tok[row])
                 self._pos[row] += 1

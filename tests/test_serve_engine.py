@@ -9,6 +9,8 @@ emits exactly the tokens the width-1 sequential path emits, per request.
 Non-MoE config throughout — MoE capacity couples decode rows, so row-level
 bit-exactness only holds for dense models (documented on the engine).
 """
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -18,7 +20,7 @@ from repro.configs.base import LoraConfig, get_config, reduced
 from repro.core.adapter import pack_meta
 from repro.core.packed_lora import extract_adapter
 from repro.models.model import init_model
-from repro.serve.decode import generate
+from repro.serve.decode import generate, prefill_chunked
 from repro.serve.engine import (
     AdapterSlotCache,
     ServeEngine,
@@ -179,12 +181,40 @@ def test_engine_matches_generate(world):
 
 
 def test_prompt_overflow_rejected(world):
+    """An oversized request is rejected with an errored ServeResult — the
+    drain keeps serving everything else (no mid-flight ValueError), no pin
+    leaks, and the rejection never records a queue-wait/TTFT sample."""
     base, _, adapters = world
     eng = _engine(base, adapters, rows=1, smax=16)
-    req = ServeRequest(0, "ad0", _prompts(1, lo=14, hi=15)[0],
-                      max_new_tokens=8)
-    with pytest.raises(ValueError, match="exceeds smax"):
-        eng.serve([req])
+    bad = ServeRequest(0, "ad0", _prompts(1, lo=14, hi=15)[0],
+                       max_new_tokens=8)
+    good = ServeRequest(1, "ad1", _prompts(1, lo=4, hi=6)[0],
+                        max_new_tokens=3)
+    stats = eng.serve([bad, good])
+    assert len(stats.results) == 2
+    rej, ok = stats.results[0], stats.results[1]
+    assert rej.request_id == 0 and "exceeds smax" in rej.error
+    assert rej.tokens.shape == (0,)
+    assert ok.request_id == 1 and ok.error is None
+    assert len(ok.tokens) == 3
+    # rejection left nothing behind: no pins, no latency-histogram samples
+    assert eng.slot_cache._pins == {}
+    assert stats.queue_wait.count == 1 and stats.ttft.count == 1
+
+
+def test_unknown_adapter_rejected_engine_keeps_serving(world):
+    """Adapter-resolution failures are rejections too, not drain aborts."""
+    base, _, adapters = world
+    eng = _engine(base, adapters, rows=1)
+    reqs = [
+        ServeRequest(0, "nope", _prompts(1)[0], max_new_tokens=3),
+        ServeRequest(1, "ad0", _prompts(1, seed=2)[0], max_new_tokens=3),
+    ]
+    stats = eng.serve(reqs)
+    assert "neither staged nor" in stats.results[0].error
+    assert stats.results[1].error is None
+    assert len(stats.results[1].tokens) == 3
+    assert eng.slot_cache._pins == {}
 
 
 def test_executor_compile_cache_is_reused(world):
@@ -200,6 +230,11 @@ def test_executor_compile_cache_is_reused(world):
     ex.prefill_fn(CFG, 1)
     ex.prefill_fn(CFG, 1)
     assert ex.cache_size == n0 + 1
+    # the chunked-prefill fn shares the cache: one entry per (cfg, width),
+    # so a burst of admissions never recompiles it
+    c1 = ex.prefill_chunk_fn(CFG, 1)
+    assert ex.prefill_chunk_fn(CFG, 1) is c1
+    assert ex.cache_size == n0 + 2
 
 
 # ---------------------------------------------------------------------------
@@ -271,3 +306,128 @@ def test_tune_then_serve_without_disk(world, monkeypatch):
         direct.results[0].tokens, via_disk.results[0].tokens
     )
     assert via_disk.cache_misses == 1  # the disk path actually loaded
+
+
+# ---------------------------------------------------------------------------
+# Chunked, decode-interleaved admission (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+def _width1_lora():
+    meta1 = pack_meta([LoraConfig(rank=RANK, alpha=ALPHA)])
+    _, lora1 = init_model(jax.random.PRNGKey(5), CFG, meta1)
+    return jax.tree.map(lambda x: x + 0.02, lora1)
+
+
+def test_prefill_chunked_bitwise_vs_oneshot(world):
+    """Chunked prefill is *bitwise* one-shot prefill — logits and every
+    cache leaf — for chunk sizes below, at, and above the prompt length.
+    The invariant the interleaved admission path rests on."""
+    base, _, _ = world
+    lora1 = _width1_lora()
+    scales = jnp.full((1,), ALPHA / RANK, jnp.float32)
+    toks = jnp.asarray(_prompts(1, lo=23, hi=24, seed=9)[0][None, :])
+    ex = ServeExecutor()
+    lg_ref, c_ref = ex.prefill_fn(CFG, 1)(
+        base, lora1, scales, {"tokens": toks}
+    )
+    ref_leaves = jax.tree.leaves(c_ref)
+    for chunk in (3, 8, 23, 64):  # uneven / even / exact / chunk > prompt
+        lg, c = prefill_chunked(
+            base, lora1, scales, toks, CFG, chunk, executor=ex
+        )
+        np.testing.assert_array_equal(np.asarray(lg), np.asarray(lg_ref))
+        leaves = jax.tree.leaves(c)
+        assert len(leaves) == len(ref_leaves)
+        for got, want in zip(leaves, ref_leaves):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_chunked_engine_tokens_bitwise_vs_sequential(world):
+    """Acceptance: the chunked-admission engine emits exactly the tokens of
+    the synchronous engine AND the width-1 sequential baseline, on a trace
+    with long prompts (many chunks) and staggered arrivals."""
+    base, _, adapters = world
+    prompts = _prompts(5, lo=12, hi=24, seed=13)
+    reqs = poisson_requests(
+        [f"ad{i % 3}" for i in range(5)], prompts, 2.0,
+        max_new_tokens=5, seed=4,
+    )
+    sync = _engine(base, adapters).serve(reqs)
+    seq = _engine(base, adapters).serve_sequential(reqs)
+    for chunk in (4, 64):  # multi-chunk and chunk-covers-whole-prompt
+        eng = _engine(base, adapters, prefill_chunk=chunk)
+        got = eng.serve(reqs)
+        assert len(got.results) == 5
+        for a, b, c in zip(got.results, sync.results, seq.results):
+            assert a.request_id == b.request_id == c.request_id
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            np.testing.assert_array_equal(a.tokens, c.tokens)
+        assert all(r is None for r in eng._rows)
+        assert eng.slot_cache._pins == {}
+
+
+def test_chunked_prefill_emits_row_spans(world):
+    """Admission cost shows up on the row's own track as bounded
+    ``serve.prefill_chunk`` spans, one per chunk."""
+    from repro.obs import Tracer
+
+    base, _, adapters = world
+    tracer = Tracer()
+    eng = _engine(base, adapters, rows=1, prefill_chunk=4, tracer=tracer)
+    prompt = _prompts(1, lo=10, hi=11, seed=17)[0]  # 10 tokens -> 3 chunks
+    eng.serve([ServeRequest(0, "ad0", prompt, max_new_tokens=3)])
+    chunks = [s for s in tracer.spans() if s.name == "serve.prefill_chunk"]
+    assert len(chunks) == 3
+    assert all(s.cat == "serve" and s.track == "row0" for s in chunks)
+    assert [s.args["pos"] for s in chunks] == [0, 4, 8]
+    assert [s.args["chunk"] for s in chunks] == [4, 4, 2]
+    # the old one-shot stall span is gone from the chunked path
+    assert not any(s.name == "serve.prefill" for s in tracer.spans())
+
+
+def test_submit_records_enqueue_wall(world):
+    """The queue-wait fix: a request submitted before serve() measures its
+    wait from submit time, not from a silent 0.0 default."""
+    base, _, adapters = world
+    eng = _engine(base, adapters, rows=1)
+    eng.submit(ServeRequest(0, "ad0", _prompts(1)[0], max_new_tokens=3))
+    time.sleep(0.05)
+    trace = ServeRequest(1, "ad1", _prompts(1, seed=2)[0], max_new_tokens=3,
+                         arrival=0.0)
+    stats = eng.serve([trace])
+    assert len(stats.results) == 2
+    assert stats.queue_wait.count == 2 and stats.ttft.count == 2
+    # the submitted request waited at least the sleep (the old code
+    # reported ~0 here); the trace request's wait is measured from its
+    # arrival during the drain, not from engine construction
+    assert stats.queue_wait.values()[0] >= 0.05
+    assert stats.ttft.values()[0] >= 0.05
+
+
+def test_max_steps_retires_inflight_rows(world):
+    """A bounded drain surfaces in-flight rows as partial results and
+    releases their pins instead of leaking them."""
+    base, _, adapters = world
+    eng = _engine(base, adapters)
+    reqs = [
+        ServeRequest(i, f"ad{i % 3}", p, max_new_tokens=10)
+        for i, p in enumerate(_prompts(3, seed=21))
+    ]
+    stats = eng.serve(reqs, max_steps=3)
+    # two rows were in flight; each got prefill token + 3 decode steps
+    assert stats.steps == 3
+    assert len(stats.results) == 2
+    for r in stats.results:
+        assert r.error is None
+        assert 1 <= len(r.tokens) < 10  # partial, not dropped
+    assert stats.tokens_emitted == sum(len(r.tokens) for r in stats.results)
+    # rows freed, pins released, adapters cleared
+    assert all(r is None for r in eng._rows)
+    assert eng.slot_cache._pins == {}
+    assert (eng._scales == 0.0).all()
+    # the never-admitted request is still queued for a later drain
+    assert [q.request_id for q in eng.queue] == [2]
+    stats2 = eng.serve()
+    assert [r.request_id for r in stats2.results] == [2]
+    assert len(stats2.results[0].tokens) == 10
