@@ -1,0 +1,497 @@
+"""Elastic membership: graceful drain, heartbeat recovery, class-aware
+placement.
+
+Three suites, one per robustness claim:
+
+* ``drain`` — REAL subprocess hosts (2 x 1 device): the same staggered
+  two-config adaptive workload runs once statically and once with host 1
+  gracefully drained while its segment is in flight. The drain announces,
+  the in-flight probe finishes through the normal success-atomic
+  checkpoint path, the residual replans onto host 0, and the units retire.
+  Claims: zero training steps lost, the residual actually migrated, and
+  per-adapter final losses + adapter trees are bit-exact vs the static
+  run — preempt/checkpoint/resume is loss-neutral even across a shrinking
+  fleet.
+
+* ``hang`` — emulated fleet (in-memory fake workers): a worker wedges
+  mid-segment, going silent while ``alive()`` stays True — the failure
+  mode process liveness cannot see and only the heartbeat watchdog can.
+  Measures wall-clock from dispatch to the watchdog's DEAD verdict and to
+  full recovery (respawn + re-run), and asserts ``run()`` returned a
+  complete result instead of hanging.
+
+* ``class`` — emulated 2-fast + 1-slow fleet (real-time fakes; the slow
+  class sleeps 4x longer per fabricated step): the same arrival sequence
+  — four short narrow jobs, then two long wide jobs — is placed by the
+  class-aware unit picker vs the class-blind one, and both placements
+  execute for real through the dispatcher. Class-aware parks the narrow
+  work on the slow host and keeps a fast host whole, so the wide jobs
+  never strand on slow hardware; blind best-fit gives a wide job the slow
+  host and eats its 4x tail. The measured makespan gap is the claim.
+
+  PYTHONPATH=src python -m benchmarks.bench_elastic --fast
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from typing import Dict, List
+
+SEQ = 16
+
+
+# ---------------------------------------------------------------------------
+# drain: real hosts, static vs mid-run graceful drain
+# ---------------------------------------------------------------------------
+
+def _tree_equal(a, b) -> bool:
+    import numpy as np
+
+    from jax import tree_util
+
+    la, lb = tree_util.tree_leaves(a), tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+def _run_drain(fast: bool) -> List[Dict]:
+    import jax
+
+    from repro.cluster import HostDispatcher
+    from repro.cluster.testing import DictPool
+    from repro.configs.base import LoraConfig, get_config, reduced
+    from repro.core.adapter import pack_meta
+    from repro.models.model import init_model
+    from repro.sched.cost_model import A100_40G, CostModel
+    from repro.sched.engine import Arrival, ExecutionEngine
+    from repro.sched.profile import ProfiledCostModel
+
+    cfg = reduced(get_config("qwen25-7b"))
+    steps = 8 if fast else 16
+    grid = [
+        LoraConfig(rank=8, alpha=8.0, learning_rate=1e-3,
+                   batch_size=1, seq_len=SEQ),
+        LoraConfig(rank=8, alpha=16.0, learning_rate=5e-4,
+                   batch_size=1, seq_len=SEQ),
+    ]
+    base, _ = init_model(jax.random.PRNGKey(0), cfg, pack_meta(grid))
+
+    def once(drain: bool):
+        prior = CostModel(cfg, A100_40G)
+        prior.setup_time = 0.0
+        est = ProfiledCostModel(prior, drift_threshold=0.5)
+        eng = ExecutionEngine(est, 2, host_size=1)
+        pool = DictPool()
+        # staggered so the planner cannot pack both configs into one job:
+        # config 0 holds unit 0 (host 0) when config 1 arrives -> host 1
+        arrivals = [Arrival(0.0, grid[0], steps),
+                    Arrival(0.1, grid[1], steps)]
+        info = {"drained": False}
+        with HostDispatcher([1, 1]) as disp:
+            th = None
+            if drain:
+                def trigger():
+                    t0 = time.perf_counter()
+                    while disp.in_flight(1) == 0:
+                        if time.perf_counter() - t0 > 600:
+                            return
+                        time.sleep(0.01)
+                    # host 1's probe is compiling/running (seconds of
+                    # wall) — the drain lands while it is in flight
+                    time.sleep(1.0)
+                    disp.drain_host(1, timeout=600)
+                    info["drained"] = True
+
+                th = threading.Thread(target=trigger, daemon=True)
+                th.start()
+            t0 = time.perf_counter()
+            records, sched = eng.run_online_local(
+                arrivals, cfg, base, n_steps=steps, seq=SEQ, pool=pool,
+                runner=disp, probe_steps=min(4, steps),
+            )
+            elapsed = time.perf_counter() - t0
+            if th is not None:
+                th.join(timeout=600)
+                info["state1"] = disp.host_state(1)
+                info["retired"] = tuple(disp.device_pool.retired)
+            host0_units = set(disp.units_of_host(0))
+        executed = {
+            cid: sum(s.run_steps for s in sched.segments
+                     if cid in s.config_ids)
+            for cid in (0, 1)
+        }
+        # did config 1's residual resume on host 0 after the drain?
+        migrated = any(
+            1 in s.config_ids and any(st > 0 for st in s.start_steps)
+            and set(s.units) <= host0_units
+            for s in sched.segments
+        )
+        return {
+            "elapsed": elapsed,
+            "makespan": sched.makespan,
+            "executed": executed,
+            "migrated": migrated,
+            "adapters": {k: pool.adapters[k] for k in sorted(pool.adapters)},
+            "info": info,
+        }
+
+    ref = once(drain=False)
+    dr = once(drain=True)
+    budget = 2 * steps
+    rows: List[Dict] = []
+    for mode, r in (("drain_static", ref), ("drain", dr)):
+        rows.append({
+            "bench": "elastic",
+            "mode": mode,
+            "steps": steps,
+            "elapsed_s": round(r["elapsed"], 3),
+            "makespan_s": round(r["makespan"], 3),
+            "executed_steps": sum(r["executed"].values()),
+            "migrated": r["migrated"],
+        })
+    same_keys = sorted(ref["adapters"]) == sorted(dr["adapters"])
+    bitexact = same_keys and all(
+        _tree_equal(ref["adapters"][k][0], dr["adapters"][k][0])
+        and ref["adapters"][k][1]["final_loss"]
+        == dr["adapters"][k][1]["final_loss"]
+        for k in ref["adapters"]
+    )
+    rows.append({
+        "bench": "elastic",
+        "mode": "drain_check",
+        "steps": steps,
+        "steps_lost": budget - sum(dr["executed"].values()),
+        "losses_bitexact": bool(bitexact),
+        "migrated": dr["migrated"],
+        "drained": dr["info"].get("drained", False),
+        "host1_state": dr["info"].get("state1", "?"),
+        "units_retired": str(dr["info"].get("retired", ())),
+    })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# hang: heartbeat watchdog vs a wedged (silent-but-alive) worker
+# ---------------------------------------------------------------------------
+
+def _run_hang(tracer=None) -> List[Dict]:
+    from repro.cluster import HostDispatcher
+    from repro.cluster.multihost import HOST_DEAD
+    from repro.cluster.testing import DictPool, FakeHostTransport
+    from repro.configs.base import LoraConfig
+    from repro.sched.engine import JobSegment
+
+    interval, timeout, dead_after = 0.05, 0.15, 2
+    made: List[FakeHostTransport] = []
+
+    def factory(host_id, n_devices):
+        # only the FIRST worker instance wedges; the respawn is healthy
+        kw = {"hang_on": (lambda idx, payload: idx == 0)} if not made else {}
+        tr = FakeHostTransport(host_id, n_devices, **kw)
+        made.append(tr)
+        return tr
+
+    seg = JobSegment(
+        job_id=0, config_ids=(0,), degree=1, start=0.0, end=1.0,
+        start_steps=(0,), run_steps=6, done_ids=(0,), units=(0,),
+    )
+    cfg0 = LoraConfig(rank=8, alpha=8.0, learning_rate=1e-3,
+                      batch_size=1, seq_len=SEQ)
+    transitions: List = []
+    with HostDispatcher(
+        [1], transport_factory=factory,
+        heartbeat_interval=interval, heartbeat_timeout=timeout,
+        heartbeat_dead_after=dead_after, tracer=tracer,
+    ) as disp:
+        orig = disp._set_host_state
+
+        def spy(host, state, **why):
+            transitions.append((time.perf_counter(), state,
+                                why.get("reason")))
+            orig(host, state, **why)
+
+        disp._set_host_state = spy
+        t0 = time.perf_counter()
+        result = disp.run(
+            [seg], {0: cfg0}, {0: 6}, None, None, seq=SEQ, pool=DictPool(),
+        )
+        recover_s = time.perf_counter() - t0
+        restarts = disp.n_restarts
+        final_state = disp.host_state(0)
+    dead = [t for t, state, reason in transitions
+            if state == HOST_DEAD and reason == "heartbeat_expired"]
+    detect_s = (dead[0] - t0) if dead else float("nan")
+    recovered = (
+        len(result.records) == 1
+        and made[0].error is None  # wedged, not crashed on a contract assert
+        and restarts == 1
+        and len(made) == 2
+        and final_state != HOST_DEAD
+    )
+    return [{
+        "bench": "elastic",
+        "mode": "hang",
+        "heartbeat_interval_s": interval,
+        "detect_s": round(detect_s, 3),
+        "recover_s": round(recover_s, 3),
+        "restarts": restarts,
+        "recovered": bool(recovered),
+    }]
+
+
+# ---------------------------------------------------------------------------
+# join: mid-run add_host shortens the makespan
+# ---------------------------------------------------------------------------
+
+def _run_join(tracer=None) -> List[Dict]:
+    from repro.cluster import HostDispatcher
+    from repro.cluster.testing import DictPool, FakeHostTransport
+    from repro.configs.base import LoraConfig, get_config, reduced
+    from repro.sched.cost_model import A100_40G, CostModel
+    from repro.sched.engine import Arrival, ExecutionEngine
+    from repro.sched.profile import ProfiledCostModel
+
+    cfg = reduced(get_config("qwen25-7b"))
+    steps, scale = 12, 0.02
+    grid = [
+        LoraConfig(rank=8, alpha=8.0, learning_rate=1e-3,
+                   batch_size=1, seq_len=SEQ),
+        LoraConfig(rank=8, alpha=16.0, learning_rate=5e-4,
+                   batch_size=1, seq_len=SEQ),
+    ]
+
+    def once(join: bool) -> float:
+        box = {}
+
+        def factory(host_id, n_devices):
+            kw = {}
+            if host_id == 0 and join:
+                # the moment host 0 starts its first segment, a second
+                # host joins — the engine replans the queued job onto it
+                kw["on_run"] = lambda idx, payload: (
+                    box["disp"].add_host(1) if idx == 0 else None
+                )
+            return FakeHostTransport(
+                host_id, n_devices, real_time=True, iter_scale=scale, **kw
+            )
+
+        prior = CostModel(cfg, A100_40G)
+        prior.setup_time = 0.0
+        est = ProfiledCostModel(prior, drift_threshold=0.5)
+        with HostDispatcher(
+            [1], transport_factory=factory, tracer=tracer,
+        ) as disp:
+            box["disp"] = disp
+            eng = ExecutionEngine(est, disp.total_units, host_size=1)
+            # staggered so the planner cannot pack both configs into one job
+            arrivals = [Arrival(0.0, grid[0], steps),
+                        Arrival(0.05, grid[1], steps)]
+            t0 = time.perf_counter()
+            records, sched = eng.run_online_local(
+                arrivals, cfg, None, n_steps=steps, seq=SEQ,
+                pool=DictPool(), runner=disp, probe_steps=4,
+            )
+            elapsed = time.perf_counter() - t0
+        assert sorted(sched.completed) == [0, 1]
+        return elapsed
+
+    static = once(join=False)
+    joined = once(join=True)
+    return [
+        {"bench": "elastic", "mode": "join_static", "steps": steps,
+         "makespan_s": round(static, 3)},
+        {"bench": "elastic", "mode": "join", "steps": steps,
+         "makespan_s": round(joined, 3)},
+        {"bench": "elastic", "mode": "join_check", "steps": steps,
+         "speedup_join": round(static / joined, 3)},
+    ]
+
+
+# ---------------------------------------------------------------------------
+# class: class-aware vs class-blind placement on 2 fast + 1 slow hosts
+# ---------------------------------------------------------------------------
+
+def _assign(jobs, picker, step_s_of_host, n_units: int, host_size: int):
+    """Greedy list-schedule on a virtual clock: place each job, in arrival
+    order, at the earliest instant its picker finds a feasible host. The
+    virtual start/end times fix the dispatch order; the real run then
+    serializes on actual unit leases, so wall-clock makespan is measured,
+    not simulated."""
+    from repro.sched.engine import JobSegment
+
+    free_at = {u: 0.0 for u in range(n_units)}
+    segs = []
+    for jid, (degree, steps) in enumerate(jobs):
+        units, t = None, 0.0
+        for t in sorted(set(free_at.values())):
+            free = sorted(u for u, ft in free_at.items() if ft <= t)
+            units = picker(free, degree)
+            if units is not None:
+                break
+        assert units is not None, (jid, free_at)
+        end = t + steps * step_s_of_host(units[0] // host_size)
+        for u in units:
+            free_at[u] = end
+        segs.append(JobSegment(
+            job_id=jid, config_ids=(jid,), degree=degree, start=t, end=end,
+            start_steps=(0,), run_steps=steps, done_ids=(jid,),
+            units=units,
+        ))
+    return segs
+
+
+def _run_class(fast: bool, tracer=None) -> List[Dict]:
+    from repro.cluster import HostDispatcher
+    from repro.cluster.pool import pick_class_units, pick_host_units
+    from repro.cluster.testing import FakeHostTransport
+    from repro.configs.base import LoraConfig
+
+    host_size, n_hosts = 2, 3
+    classes = ("fast", "fast", "slow")
+    ratios = {"fast": 1.0, "slow": 4.0}
+    base_s = 0.004  # fabricated seconds per step on a fast host
+    s = 15 if fast else 25
+    # arrival order: four short narrow jobs, then two long wide jobs —
+    # the regime where parking narrow work on slow hosts pays off
+    jobs = [(1, s)] * 4 + [(host_size, 3 * s)] * 2
+    cfgs = {
+        jid: LoraConfig(rank=8, alpha=8.0 + jid, learning_rate=1e-3,
+                        batch_size=1, seq_len=SEQ)
+        for jid in range(len(jobs))
+    }
+    total = {jid: st for jid, (_, st) in enumerate(jobs)}
+
+    def step_s(host: int) -> float:
+        return base_s * ratios[classes[host]]
+
+    def picker_aware(free, degree):
+        return pick_class_units(
+            free, degree, host_size,
+            class_of_host=lambda h: classes[h],
+            ratio_of_class=lambda c: ratios[c],
+        )
+
+    def picker_blind(free, degree):
+        return pick_host_units(free, degree, host_size)
+
+    rows: List[Dict] = []
+    out = {}
+    for mode, picker in (("class_aware", picker_aware),
+                         ("class_blind", picker_blind)):
+        segs = _assign(jobs, picker, step_s, n_hosts * host_size, host_size)
+        wide_on_slow = sum(
+            1 for g in segs
+            if g.degree == host_size and classes[g.units[0] // host_size]
+            == "slow"
+        )
+
+        def factory(host_id, n_devices):
+            return FakeHostTransport(
+                host_id, n_devices, real_time=True,
+                iter_scale=base_s * ratios[classes[host_id]],
+            )
+
+        with HostDispatcher(
+            [host_size] * n_hosts, transport_factory=factory,
+            host_classes=list(classes), tracer=tracer,
+        ) as disp:
+            t0 = time.perf_counter()
+            result = disp.run(segs, cfgs, total, None, None, seq=SEQ)
+            elapsed = time.perf_counter() - t0
+        assert len(result.records) == len(jobs)
+        out[mode] = elapsed
+        rows.append({
+            "bench": "elastic",
+            "mode": mode,
+            "jobs": len(jobs),
+            "steps_narrow": s,
+            "steps_wide": 3 * s,
+            "slow_ratio": ratios["slow"],
+            "wide_on_slow": wide_on_slow,
+            "makespan_s": round(elapsed, 3),
+        })
+    rows.append({
+        "bench": "elastic",
+        "mode": "class_speedup",
+        "jobs": len(jobs),
+        "speedup_class_aware": round(
+            out["class_blind"] / out["class_aware"], 3
+        ),
+    })
+    return rows
+
+
+def run(fast: bool = False, trace_out: str = None) -> List[Dict]:
+    from repro.obs import NULL_TRACER, Tracer
+
+    # the traced suites run over the dispatcher, so the exported trace
+    # carries host-tier worker spans plus membership-transition instants —
+    # CI gates on `check_trace.py --require-cat host`
+    tracer = Tracer() if trace_out else NULL_TRACER
+    rows = _run_hang(tracer)
+    rows += _run_join(tracer)
+    rows += _run_class(fast, tracer)
+    rows += _run_drain(fast)
+    if trace_out:
+        tracer.export(trace_out)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="also dump rows to this JSON file")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace of the emulated-fleet suites")
+    args = ap.parse_args()
+    rows = run(args.fast, trace_out=args.trace_out)
+    for r in rows:
+        if r["mode"] == "hang":
+            print(
+                f"elastic,hang: detected in {r['detect_s']:.2f}s "
+                f"(heartbeat {r['heartbeat_interval_s']}s), recovered in "
+                f"{r['recover_s']:.2f}s with {r['restarts']} restart "
+                f"(ok: {r['recovered']})"
+            )
+        elif r["mode"] == "join_check":
+            print(
+                f"elastic,join: mid-run add_host x{r['speedup_join']:.2f} "
+                f"vs the static 1-host fleet"
+            )
+        elif r["mode"] in ("join_static", "join"):
+            print(f"elastic,{r['mode']}: {r['makespan_s']:.2f}s makespan")
+        elif r["mode"] == "class_speedup":
+            print(
+                f"elastic,class: class-aware x{r['speedup_class_aware']:.2f} "
+                f"vs class-blind on 2-fast+1-slow"
+            )
+        elif r["mode"] == "drain_check":
+            print(
+                f"elastic,drain: {r['steps_lost']} step(s) lost, losses "
+                f"bit-exact: {r['losses_bitexact']}, residual migrated: "
+                f"{r['migrated']}, host1 {r['host1_state']}, retired "
+                f"{r['units_retired']}"
+            )
+        elif r["mode"] in ("class_aware", "class_blind"):
+            print(
+                f"elastic,{r['mode']}: {r['makespan_s']:.2f}s makespan, "
+                f"{r['wide_on_slow']} wide job(s) on the slow host"
+            )
+        else:
+            print(
+                f"elastic,{r['mode']}: {r['elapsed_s']:.2f}s, "
+                f"{r['executed_steps']} steps executed"
+            )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "elastic", "rows": rows}, f, indent=1)
+    if args.trace_out:
+        print(f"saved Chrome trace to {args.trace_out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -100,6 +100,7 @@ def main(argv=None):
         bench_adaptive,
         bench_breakdown,
         bench_cluster,
+        bench_elastic,
         bench_job_throughput,
         bench_kernels,
         bench_makespan,
@@ -120,6 +121,7 @@ def main(argv=None):
         "cluster": ("Cluster executor: concurrent mesh slices vs sequential", bench_cluster.run),
         "adaptive": ("Profile feedback loop: adaptive re-planning vs mis-calibrated prior", bench_adaptive.run),
         "multihost": ("Multi-host dispatch tier: 2x4 hosts vs 1x4 on one workload", bench_multihost.run),
+        "elastic": ("Elastic membership: drain / heartbeat recovery / class-aware placement", bench_elastic.run),
         "serve": ("Serve tier: continuous multi-LoRA batching vs sequential decode", bench_serve.run),
         "job_throughput": ("Fig. 5: packed-job throughput", bench_job_throughput.run),
         "job_throughput_a10": ("Fig. 7 / §7.5: A10 + QLoRA", lambda fast: bench_job_throughput.run_a10(fast)),
@@ -180,6 +182,23 @@ def main(argv=None):
             if sp:
                 checks.append(("multi-host 2x4 vs 1x4 makespan (>=1.1x)", f"{sp[0]['speedup_multihost']:.2f}x"))
                 checks.append(("multi-host per-adapter losses bit-exact vs 1-host", str(all(r["losses_bitexact"] for r in sp))))
+        if name == "elastic" and rows:
+            dc = [r for r in rows if r["mode"] == "drain_check"]
+            if dc:
+                checks.append(("graceful drain: training steps lost (must be 0)", str(dc[0]["steps_lost"])))
+                checks.append(("drained-run losses bit-exact vs static run", str(dc[0]["losses_bitexact"])))
+            hg = [r for r in rows if r["mode"] == "hang"]
+            if hg:
+                checks.append(
+                    ("hung worker: heartbeat-detected + recovered without hanging run()",
+                     f"{hg[0]['recovered']} (detect {hg[0]['detect_s']:.2f}s, "
+                     f"{hg[0]['restarts']} restart)"))
+            jn = [r for r in rows if r["mode"] == "join_check"]
+            if jn:
+                checks.append(("mid-run host join shortens makespan (>=1.1x)", f"{jn[0]['speedup_join']:.2f}x"))
+            sp = [r for r in rows if r["mode"] == "class_speedup"]
+            if sp:
+                checks.append(("class-aware vs class-blind makespan, 2-fast+1-slow (>=1.2x)", f"{sp[0]['speedup_class_aware']:.2f}x"))
         if name == "serve" and rows:
             sp = [r for r in rows if r["mode"] == "speedup"]
             if sp:

@@ -22,6 +22,11 @@ def main() -> int:
                          "serve/autotune)")
     ap.add_argument("--min-spans", type=int, default=1,
                     help="require at least this many complete (ph=X) spans")
+    ap.add_argument("--require-cat", action="append", default=[],
+                    metavar="CAT",
+                    help="require this tier (span cat) to be present; "
+                         "repeatable — e.g. --require-cat host asserts the "
+                         "membership/heartbeat instrumentation survived")
     args = ap.parse_args()
 
     from repro.obs import validate_chrome_trace, trace_tiers
@@ -53,6 +58,11 @@ def main() -> int:
     if len(tiers) < args.min_tiers:
         print(f"check_trace: expected spans from >= {args.min_tiers} tiers, "
               f"got {len(tiers)}: {tiers}")
+        return 1
+    missing = [c for c in args.require_cat if c not in tiers]
+    if missing:
+        print(f"check_trace: required tier(s) absent: {missing} "
+              f"(present: {tiers})")
         return 1
     return 0
 

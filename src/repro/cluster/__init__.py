@@ -9,8 +9,14 @@ scheduled on different device groups actually overlap in wall-clock time.
 from repro.cluster.api import Runner
 from repro.cluster.executor import NO_BUDGET, PackResult, SliceExecutor
 from repro.cluster.multihost import (
+    HOST_ALIVE,
+    HOST_DEAD,
+    HOST_DRAINING,
+    HOST_SUSPECT,
     CheckpointWrite,
     DispatchExecutor,
+    HealthReply,
+    HeartbeatMsg,
     HostDispatcher,
     HostUnit,
     HostWorker,
@@ -27,6 +33,7 @@ from repro.cluster.pool import (
     DevicePool,
     MeshSlice,
     assign_units,
+    pick_class_units,
     pick_host_units,
 )
 from repro.cluster.runner import (
@@ -45,7 +52,14 @@ __all__ = [
     "DevicePool",
     "MeshSlice",
     "assign_units",
+    "pick_class_units",
     "pick_host_units",
+    "HOST_ALIVE",
+    "HOST_DEAD",
+    "HOST_DRAINING",
+    "HOST_SUSPECT",
+    "HeartbeatMsg",
+    "HealthReply",
     "ClusterResult",
     "ClusterRunner",
     "SegmentTiming",

@@ -142,6 +142,36 @@ class CheckpointWrite:
 
 
 @dataclass(frozen=True)
+class HeartbeatMsg:
+    """Dispatcher -> worker health ping. ``t_send`` is the dispatcher's
+    monotonic clock at send time; the worker echoes it untouched so the RTT
+    is computed on one clock (worker clocks aren't comparable)."""
+
+    seq: int
+    t_send: float
+
+
+@dataclass(frozen=True)
+class HealthReply:
+    """Worker -> dispatcher pong: answered *inline* by the worker's message
+    loop (segments run on a thread pool), so a missing reply means the loop
+    itself is wedged or the process is gone — hung and crashed workers look
+    identical to the watchdog, which is the point."""
+
+    host: int
+    seq: int
+    t_send: float
+    in_flight: int
+
+
+# membership states of one host, as seen by the dispatcher's watchdog
+HOST_ALIVE = "ALIVE"        # answering heartbeats (or heartbeats disabled)
+HOST_SUSPECT = "SUSPECT"    # missed a heartbeat deadline; backoff running
+HOST_DEAD = "DEAD"          # declared dead (backoff exhausted / drained out)
+HOST_DRAINING = "DRAINING"  # graceful retirement in progress
+
+
+@dataclass(frozen=True)
 class KernelPolicy:
     """The kernel policy a segment must run under (``--impl`` / ``--remat``).
 
@@ -344,6 +374,14 @@ def _worker_main(host_id: int, n_devices: int, inbox, outbox) -> None:
             )
 
     tpe = ThreadPoolExecutor(max_workers=max(n_devices, 1))
+    n_running = [0]
+
+    def counted_run(payload):
+        try:
+            do_run(payload)
+        finally:
+            n_running[0] -= 1
+
     try:
         while True:
             kind, payload = inbox.get()
@@ -352,7 +390,15 @@ def _worker_main(host_id: int, n_devices: int, inbox, outbox) -> None:
             if kind == "init":
                 state = dict(payload)
             elif kind == "run":
-                tpe.submit(do_run, payload)
+                n_running[0] += 1
+                tpe.submit(counted_run, payload)
+            elif kind == "ping":
+                # answered inline, never queued behind segments: a worker
+                # that stops ponging has a wedged loop, not a busy one
+                outbox.put(("pong", HealthReply(
+                    host=host_id, seq=payload.seq, t_send=payload.t_send,
+                    in_flight=n_running[0],
+                )))
     finally:
         tpe.shutdown(wait=True)
 
@@ -436,6 +482,28 @@ class HostUnit:
     local: int
 
 
+def _send_with_retry(
+    transport, msg, *, deadline: float = 30.0, retries: int = 2
+) -> None:
+    """Wire send with a per-message deadline and bounded retry: transient
+    transport hiccups back off and retry; a send still failing at the
+    deadline (or out of attempts) raises :class:`TransportError`."""
+    t0 = time.perf_counter()
+    last: Optional[BaseException] = None
+    for attempt in range(retries + 1):
+        try:
+            transport.send(msg)
+            return
+        except Exception as e:  # noqa: BLE001 — retried, then re-raised
+            last = e
+            if time.perf_counter() - t0 >= deadline or attempt >= retries:
+                break
+            time.sleep(min(0.05 * (2 ** attempt), 0.5))
+    raise TransportError(
+        f"send failed after {attempt + 1} attempt(s): {last!r}"
+    ) from last
+
+
 class _Reply:
     """Future for one in-flight segment request."""
 
@@ -453,8 +521,11 @@ class _Reply:
         self._err = err
         self._evt.set()
 
-    def wait(self) -> Dict[str, Any]:
-        self._evt.wait()
+    def wait(self, timeout: Optional[float] = None) -> Dict[str, Any]:
+        if not self._evt.wait(timeout):
+            raise TransportError(
+                f"no reply within the {timeout:.0f}s request deadline"
+            )
         if self._err is not None:
             raise self._err
         if self._kind == "err":
@@ -472,14 +543,24 @@ class HostWorker:
     :class:`WorkerDied`; the dispatcher then spawns a *new* ``HostWorker``
     for the host (the handle itself is never resurrected)."""
 
-    def __init__(self, host_id: int, n_devices: int, transport):
+    def __init__(
+        self, host_id: int, n_devices: int, transport,
+        *, on_pong: Optional[Callable] = None,
+        send_deadline: float = 30.0, send_retries: int = 2,
+    ):
         self.host_id = host_id
         self.n_devices = n_devices
         self.transport = transport
+        self.on_pong = on_pong
+        self.send_deadline = send_deadline
+        self.send_retries = send_retries
         self.ready = threading.Event()
         self.fatal: Optional[Dict[str, Any]] = None
         self.init_version = -1
         self.dead = False
+        # did this worker die with requests in flight? Idle deaths (e.g. a
+        # spot reclaim between segments) don't burn a restart credit.
+        self.died_in_flight = False
         self._lock = threading.Lock()
         self._pending: Dict[int, _Reply] = {}
         self._pump = threading.Thread(
@@ -489,6 +570,13 @@ class HostWorker:
 
     # -- request lifecycle --------------------------------------------------
 
+    def send(self, msg) -> None:
+        """Deadline-bounded wire send (shared by requests / init / pings)."""
+        _send_with_retry(
+            self.transport, msg,
+            deadline=self.send_deadline, retries=self.send_retries,
+        )
+
     def request(self, rid: int, msg) -> _Reply:
         reply = _Reply()
         with self._lock:
@@ -496,7 +584,7 @@ class HostWorker:
                 raise WorkerDied(f"host {self.host_id} worker is dead")
             self._pending[rid] = reply
         try:
-            self.transport.send(msg)
+            self.send(msg)
         except Exception as e:  # queue to a dead process
             with self._lock:
                 self._pending.pop(rid, None)
@@ -534,6 +622,8 @@ class HostWorker:
             self.dead = True
             pending = list(self._pending.values())
             self._pending.clear()
+            if pending:
+                self.died_in_flight = True
         err = WorkerDied(f"host {self.host_id} worker died")
         for reply in pending:
             reply.fail(err)
@@ -554,6 +644,9 @@ class HostWorker:
             kind, payload = msg
             if kind == "ready":
                 self.ready.set()
+            elif kind == "pong":
+                if self.on_pong is not None:
+                    self.on_pong(self.host_id, payload)
             elif kind == "fatal":
                 self.fatal = payload
                 self._fail_all()
@@ -723,12 +816,25 @@ class HostDispatcher:
         max_restarts: int = 2,
         start_timeout: float = 300.0,
         tracer=None,
+        host_classes: Optional[Sequence[str]] = None,
+        heartbeat_interval: float = 0.0,
+        heartbeat_timeout: Optional[float] = None,
+        heartbeat_dead_after: int = 3,
+        send_deadline: float = 30.0,
+        send_retries: int = 2,
     ):
         if isinstance(hosts, int):
             hosts = [devices_per_host] * hosts
         self.hosts: Tuple[int, ...] = tuple(int(n) for n in hosts)
         if not self.hosts or any(n <= 0 for n in self.hosts):
             raise ValueError(f"bad host layout {self.hosts}")
+        if host_classes is None:
+            host_classes = [""] * len(self.hosts)
+        if len(host_classes) != len(self.hosts):
+            raise ValueError(
+                f"{len(host_classes)} host classes for {len(self.hosts)} hosts"
+            )
+        self.host_classes: Tuple[str, ...] = tuple(str(c) for c in host_classes)
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.max_restarts = max_restarts
         self.start_timeout = start_timeout
@@ -742,6 +848,8 @@ class HostDispatcher:
         self._payload_refs: Tuple = ()  # pins id()s used in the memo token
         self._payload_version = 0
         self._prep_lock = threading.Lock()
+        self.send_deadline = send_deadline
+        self.send_retries = send_retries
 
         from repro.cluster.pool import DevicePool
 
@@ -751,9 +859,38 @@ class HostDispatcher:
             for i in range(n)
         ]
         self.device_pool = DevicePool(devices=units)
+        # global unit ids per host (stable: add_host only appends)
+        self._host_units: List[Tuple[int, ...]] = []
+        off = 0
+        for n in self.hosts:
+            self._host_units.append(tuple(range(off, off + n)))
+            off += n
         self.executor = DispatchExecutor(self)
         self.concurrent = True
         self.last_result = None
+
+        # -- membership / health ------------------------------------------
+        self._membership_lock = threading.Lock()
+        self._membership_subs: List[Callable] = []
+        self._host_state: List[str] = [HOST_ALIVE] * len(self.hosts)
+        self._last_pong: List[float] = [0.0] * len(self.hosts)
+        self._hb_misses: List[int] = [0] * len(self.hosts)
+        self.heartbeat_interval = float(heartbeat_interval)
+        self.heartbeat_timeout = (
+            float(heartbeat_timeout)
+            if heartbeat_timeout is not None
+            else 3.0 * self.heartbeat_interval
+        )
+        self.heartbeat_dead_after = int(heartbeat_dead_after)
+        self._hb_seq = itertools.count()
+        self._closing = threading.Event()
+        self._watchdog: Optional[threading.Thread] = None
+        self._hosts_alive_gauge()
+        if self.heartbeat_interval > 0:
+            self._watchdog = threading.Thread(
+                target=self._watchdog_loop, name="plora-watchdog", daemon=True
+            )
+            self._watchdog.start()
 
     # -- topology -----------------------------------------------------------
 
@@ -767,9 +904,203 @@ class HostDispatcher:
         wants), or None when hosts are heterogeneous."""
         return self.hosts[0] if len(set(self.hosts)) == 1 else None
 
+    def units_of_host(self, host: int) -> Tuple[int, ...]:
+        """Global pool unit ids backing one host."""
+        return self._host_units[host]
+
+    def host_of_unit(self, unit: int) -> int:
+        return self.device_pool.devices[unit].host
+
     def in_flight(self, host: int) -> int:
         w = self._workers[host]
         return 0 if w is None else w.in_flight()
+
+    # -- membership / health ------------------------------------------------
+
+    def host_state(self, host: int) -> str:
+        return self._host_state[host]
+
+    @property
+    def hosts_alive(self) -> int:
+        return sum(
+            1 for s in self._host_state if s in (HOST_ALIVE, HOST_SUSPECT)
+        )
+
+    def _hosts_alive_gauge(self) -> None:
+        self.tracer.metrics.gauge("cluster.hosts_alive").set(self.hosts_alive)
+
+    def _set_host_state(self, host: int, state: str, **why) -> None:
+        prev = self._host_state[host]
+        if prev == state:
+            return
+        self._host_state[host] = state
+        self.tracer.instant(
+            f"host{host}.{state}", cat="host", track="membership",
+            host=host, state=state, prev=prev, **why,
+        )
+        self._hosts_alive_gauge()
+
+    def membership_subscribe(self, cb: Callable) -> Callable:
+        """Register ``cb(event_dict)`` for join/drain notifications (called
+        from the announcing thread). Returns an unsubscribe callable. The
+        engine's adaptive loop uses this to replan onto joining hosts and
+        off draining ones."""
+        with self._membership_lock:
+            self._membership_subs.append(cb)
+
+        def unsubscribe():
+            with self._membership_lock:
+                if cb in self._membership_subs:
+                    self._membership_subs.remove(cb)
+
+        return unsubscribe
+
+    def _announce(self, event: Dict[str, Any]) -> None:
+        with self._membership_lock:
+            subs = list(self._membership_subs)
+        for cb in subs:
+            cb(dict(event))
+
+    def add_host(
+        self, n_devices: Optional[int] = None, *, host_class: str = "",
+    ) -> int:
+        """Admit a new host mid-run: extend the layout, register its units
+        with the device pool (free immediately — blocked acquires wake), and
+        announce a ``join`` event so the engine replans onto it. The worker
+        itself spawns lazily on first dispatch, like every other host.
+        Returns the new host id."""
+        n = int(n_devices) if n_devices is not None else self.hosts[0]
+        if n <= 0:
+            raise ValueError(f"bad device count {n}")
+        host = len(self.hosts)
+        self.hosts = self.hosts + (n,)
+        self.host_classes = self.host_classes + (str(host_class),)
+        self._workers.append(None)
+        self._host_locks.append(threading.Lock())
+        self._host_state.append(HOST_ALIVE)
+        self._last_pong.append(0.0)
+        self._hb_misses.append(0)
+        units = self.device_pool.add_devices(
+            [HostUnit(host, i) for i in range(n)]
+        )
+        self._host_units.append(units)
+        self.tracer.instant(
+            f"host{host}.{HOST_ALIVE}", cat="host", track="membership",
+            host=host, state=HOST_ALIVE, reason="join",
+            host_class=host_class, units=list(units),
+        )
+        self._hosts_alive_gauge()
+        self._announce({
+            "action": "join", "host": host, "units": units,
+            "host_class": str(host_class), "n_devices": n,
+        })
+        return host
+
+    def drain_host(self, host: int, *, timeout: float = 120.0) -> None:
+        """Gracefully retire one host: announce ``drain`` (the engine stops
+        assigning and force-replans residuals off the host), let in-flight
+        segments finish — their checkpoint writes land through the normal
+        success-atomic path, so no step is lost — then retire the units from
+        the pool and stop the worker. The graceful sibling of
+        :meth:`kill_host`."""
+        if self._host_state[host] in (HOST_DRAINING, HOST_DEAD):
+            return
+        self._set_host_state(host, HOST_DRAINING, reason="drain")
+        self._announce({
+            "action": "drain", "host": host,
+            "units": self.units_of_host(host),
+            "host_class": self.host_classes[host],
+        })
+        deadline = time.perf_counter() + timeout
+        while True:
+            # re-read each pass: a mid-drain death respawns the worker (the
+            # retry path re-runs the killed segment from its last checkpoint)
+            # and the drain must wait out the *current* worker's in-flight.
+            w = self._workers[host]
+            if w is None or w.dead or w.in_flight() == 0:
+                break
+            if time.perf_counter() > deadline:
+                raise TimeoutError(
+                    f"host {host} still has {w.in_flight()} segment(s) in "
+                    f"flight after {timeout:.0f}s drain window"
+                )
+            time.sleep(0.01)
+        # in-flight work done; now the units must come home to the pool
+        # (the engine releases each slice as its segment completes)
+        self.device_pool.retire_units(
+            self.units_of_host(host),
+            timeout=max(deadline - time.perf_counter(), 0.01),
+        )
+        w = self._workers[host]
+        if w is not None:
+            try:
+                if w.transport.alive():
+                    w.send(("stop", {}))
+                    w.transport.join(timeout=10)
+            except Exception:
+                pass
+            try:
+                w.transport.kill()
+            except Exception:
+                pass
+        self._set_host_state(host, HOST_DEAD, reason="drained")
+
+    # -- heartbeat watchdog -------------------------------------------------
+
+    def _on_pong(self, host: int, payload) -> None:
+        rtt = time.perf_counter() - payload.t_send
+        self.tracer.metrics.histogram("cluster.heartbeat_rtt").record(rtt)
+        self._last_pong[host] = time.perf_counter()
+        self._hb_misses[host] = 0
+        if self._host_state[host] == HOST_SUSPECT:
+            self._set_host_state(host, HOST_ALIVE, reason="pong")
+
+    def _watchdog_loop(self) -> None:
+        """Ping every live worker each interval; a host missing its deadline
+        goes SUSPECT, each further miss doubles the grace (exponential
+        backoff — a paused/hung worker can still come back), and after
+        ``heartbeat_dead_after`` misses the host is declared DEAD: its
+        in-flight replies fail with :class:`WorkerDied` (so ``run()`` never
+        hangs on a hung-but-alive process) and the existing restart path
+        respawns it on the next dispatch."""
+        while not self._closing.wait(self.heartbeat_interval):
+            now = time.perf_counter()
+            for host in range(len(self.hosts)):
+                w = self._workers[host]
+                if w is None or w.dead or not w.ready.is_set():
+                    continue
+                if self._host_state[host] == HOST_DEAD:
+                    continue
+                if self._last_pong[host] == 0.0:
+                    self._last_pong[host] = now  # first ping epoch
+                try:
+                    w.send(("ping", HeartbeatMsg(
+                        seq=next(self._hb_seq), t_send=time.perf_counter(),
+                    )))
+                except Exception:
+                    pass  # counted as a miss below
+                misses = self._hb_misses[host]
+                due = self._last_pong[host] + (
+                    self.heartbeat_timeout * (2 ** misses)
+                )
+                if now <= due:
+                    continue
+                self._hb_misses[host] = misses + 1
+                if self._host_state[host] == HOST_ALIVE:
+                    self._set_host_state(
+                        host, HOST_SUSPECT, reason="heartbeat_timeout",
+                        misses=misses + 1,
+                    )
+                if self._hb_misses[host] >= self.heartbeat_dead_after:
+                    self._set_host_state(
+                        host, HOST_DEAD, reason="heartbeat_expired",
+                        misses=self._hb_misses[host],
+                    )
+                    w._fail_all()
+                    try:
+                        w.transport.kill()
+                    except Exception:
+                        pass
 
     # -- worker lifecycle ---------------------------------------------------
 
@@ -824,11 +1155,15 @@ class HostDispatcher:
                 if self._payload is not None and (
                     w.init_version != self._payload_version
                 ):
-                    w.transport.send(("init", self._payload))
+                    w.send(("init", self._payload))
                     w.init_version = self._payload_version
                 return w
             if w is not None:
-                self.n_restarts += 1
+                # restart credits are for failures that cost work: a worker
+                # that died *idle* (no request in flight) lost nothing, so
+                # its respawn is free — see test_multihost.py regression pair
+                if w.died_in_flight:
+                    self.n_restarts += 1
                 try:
                     w.transport.kill()
                 except Exception:
@@ -836,11 +1171,18 @@ class HostDispatcher:
             w = HostWorker(
                 host, self.hosts[host],
                 self._transport_factory(host, self.hosts[host]),
+                on_pong=self._on_pong,
+                send_deadline=self.send_deadline,
+                send_retries=self.send_retries,
             )
             self._workers[host] = w
             w.wait_ready(self.start_timeout)
+            self._last_pong[host] = time.perf_counter()
+            self._hb_misses[host] = 0
+            if self._host_state[host] in (HOST_SUSPECT, HOST_DEAD):
+                self._set_host_state(host, HOST_ALIVE, reason="respawn")
             if self._payload is not None:
-                w.transport.send(("init", self._payload))
+                w.send(("init", self._payload))
                 w.init_version = self._payload_version
             return w
 
@@ -854,6 +1196,9 @@ class HostDispatcher:
 
     def close(self) -> None:
         """Graceful stop of every worker (kill as fallback)."""
+        self._closing.set()
+        if self._watchdog is not None:
+            self._watchdog.join(timeout=5)
         for w in self._workers:
             if w is None:
                 continue

@@ -18,7 +18,7 @@ from __future__ import annotations
 import threading
 from contextlib import contextmanager
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 
 @dataclass(frozen=True)
@@ -56,6 +56,7 @@ class DevicePool:
         self.devices = list(devices)
         self._lock = threading.Condition()
         self._free = set(range(len(self.devices)))
+        self._retired: set = set()
 
     @property
     def total(self) -> int:
@@ -65,6 +66,51 @@ class DevicePool:
     def free(self) -> int:
         with self._lock:
             return len(self._free)
+
+    # ---------------- elastic membership ----------------
+
+    def add_devices(self, devices: Sequence) -> Tuple[int, ...]:
+        """Grow the pool mid-run: append ``devices`` as new (free) units and
+        wake any waiter blocked in ``acquire``/``acquire_units``. Returns the
+        new unit ids (contiguous, after the existing ones — existing unit ids
+        never shift, so in-flight slices stay valid)."""
+        if not devices:
+            raise ValueError("add_devices needs at least one device")
+        with self._lock:
+            first = len(self.devices)
+            self.devices.extend(devices)
+            new = tuple(range(first, len(self.devices)))
+            self._free |= set(new)
+            self._lock.notify_all()
+            return new
+
+    def retire_units(
+        self, units: Sequence[int], timeout: Optional[float] = None
+    ) -> None:
+        """Remove ``units`` from circulation (graceful drain): blocks until
+        each is free, then marks it retired — it can never be acquired or
+        released again. Unit ids stay stable (the device list keeps its
+        slot), so other units' addressing is untouched."""
+        want = tuple(sorted(set(units)))
+        for u in want:
+            if not 0 <= u < self.total:
+                raise ValueError(f"unit {u} outside pool of {self.total}")
+        with self._lock:
+            if not self._lock.wait_for(
+                lambda: all(u in self._free or u in self._retired
+                            for u in want),
+                timeout=timeout,
+            ):
+                busy = [u for u in want
+                        if u not in self._free and u not in self._retired]
+                raise TimeoutError(f"timed out draining busy units {busy}")
+            self._free -= set(want)
+            self._retired |= set(want)
+
+    @property
+    def retired(self) -> Tuple[int, ...]:
+        with self._lock:
+            return tuple(sorted(self._retired))
 
     def _make_slice(self, units: Tuple[int, ...]) -> MeshSlice:
         devs = tuple(self.devices[u] for u in units)
@@ -116,6 +162,9 @@ class DevicePool:
             if not 0 <= u < self.total:
                 raise ValueError(f"unit {u} outside pool of {self.total}")
         with self._lock:
+            gone = [u for u in want if u in self._retired]
+            if gone:
+                raise RuntimeError(f"units {gone} are retired (drained host)")
             if not self._lock.wait_for(
                 lambda: all(u in self._free for u in want), timeout=timeout
             ):
@@ -170,6 +219,9 @@ class DevicePool:
             bad = [u for u in s.units if not 0 <= u < self.total]
             if bad:
                 raise RuntimeError(f"release of foreign units {bad}")
+            gone = [u for u in s.units if u in self._retired]
+            if gone:
+                raise RuntimeError(f"release of retired units {gone}")
             self._free |= set(s.units)
             self._lock.notify_all()
 
@@ -205,6 +257,50 @@ def pick_host_units(
     if not fitting:
         return None
     _, h = min(fitting)
+    return tuple(sorted(by_host[h])[:degree])
+
+
+def pick_class_units(
+    free: Sequence[int],
+    degree: int,
+    host_size: int,
+    *,
+    class_of_host: Callable[[int], str],
+    ratio_of_class: Callable[[str], float],
+    avoid_host: Optional[Callable[[int], bool]] = None,
+) -> Optional[Tuple[int, ...]]:
+    """Class-aware variant of :func:`pick_host_units` for heterogeneous
+    fleets: hosts carry a class tag and ``ratio_of_class`` prices each class
+    (measured slowdown vs the prior; 1.0 = unknown/baseline, larger =
+    slower). Placement policy:
+
+      * *wide* jobs (``degree == host_size``, occupying a whole host) go to
+        the **fastest** feasible class — they dominate the makespan tail;
+      * *narrow* jobs go to the **slowest** feasible class — they keep slow
+        hosts busy with work whose serial fraction is small, leaving fast
+        hosts whole for wide jobs (straggler-aware placement);
+      * within a class, best-fit (fewest free units) then lowest host id —
+        the same fragmentation-avoidance as the homogeneous picker;
+      * hosts flagged by ``avoid_host`` (e.g. heartbeat-SUSPECT) are used
+        only when no healthy host fits.
+
+    Returns None when no single host has ``degree`` free units."""
+    if len(free) < degree:
+        return None
+    by_host: Dict[int, List[int]] = {}
+    for u in free:
+        by_host.setdefault(u // host_size, []).append(u)
+    fitting = [h for h, us in by_host.items() if len(us) >= degree]
+    if not fitting:
+        return None
+    wide = degree >= host_size
+
+    def rank(h: int):
+        r = float(ratio_of_class(class_of_host(h)))
+        suspect = bool(avoid_host(h)) if avoid_host is not None else False
+        return (suspect, r if wide else -r, len(by_host[h]), h)
+
+    h = min(fitting, key=rank)
     return tuple(sorted(by_host[h])[:degree])
 
 

@@ -106,16 +106,33 @@ def _run_multihost(args, cfg, configs, tracer):
     ``--devices-per-host`` CPU devices, so this runs on any machine without
     touching the parent's XLA_FLAGS. The plan caps per-job parallelism at
     the host width and keeps every job's device units on one host; the
-    dispatch tier then overlaps jobs across hosts for real."""
+    dispatch tier then overlaps jobs across hosts for real.
+
+    Elastic knobs: ``--host-classes`` tags each host (the adaptive engine
+    then places wide jobs on fast classes and narrow ones on slow),
+    ``--heartbeat`` arms the liveness watchdog, and ``--drain-after`` /
+    ``--join-after`` exercise membership mid-run (drain the last host /
+    admit a new one after N seconds). Drain/join need replanning, so they
+    switch execution to the adaptive online path (``run_online_local``)."""
+    import threading
     import time
 
     from repro.cluster import HostDispatcher
-    from repro.sched.engine import ExecutionEngine
+    from repro.sched.engine import Arrival, ExecutionEngine
     from repro.sched.planner import plan
 
     per = args.devices_per_host
     g = args.hosts * per
+    classes = None
+    if args.host_classes:
+        classes = [c.strip() for c in args.host_classes.split(",")]
+        if len(classes) != args.hosts:
+            raise SystemExit(
+                f"--host-classes names {len(classes)} classes for "
+                f"{args.hosts} hosts"
+            )
     est, store = _estimator(args, cfg)
+    elastic = args.drain_after is not None or args.join_after is not None
     sched = plan(est, configs, g, args.seq, args.steps, max_degree=per)
     print(f"multi-host plan: {len(sched.jobs)} job(s) on {args.hosts} hosts "
           f"x {per} device(s), virtual makespan {sched.makespan:.1f}s")
@@ -128,21 +145,61 @@ def _run_multihost(args, cfg, configs, tracer):
               f"(projection weights -> codes+scales dicts)")
     pool = CheckpointPool(args.pool) if args.pool else None
     eng = ExecutionEngine(est, g, host_size=per, tracer=tracer)
-    with HostDispatcher(args.hosts, per, tracer=tracer) as disp:
+    timers = []
+    with HostDispatcher(
+        args.hosts, per, tracer=tracer, host_classes=classes,
+        heartbeat_interval=args.heartbeat,
+    ) as disp:
+        if args.drain_after is not None:
+            target = len(disp.hosts) - 1
+            timers.append(threading.Timer(
+                args.drain_after, lambda: disp.drain_host(target)
+            ))
+        if args.join_after is not None:
+            join_class = classes[-1] if classes else ""
+            timers.append(threading.Timer(
+                args.join_after,
+                lambda: disp.add_host(per, host_class=join_class),
+            ))
+        for t in timers:
+            t.daemon = True
+            t.start()
         t0 = time.perf_counter()
-        # --impl/--remat ride the wire as a KernelPolicy with every
-        # segment, so each host worker runs the tier selected here
-        records, makespan = eng.run_local(
-            sched, configs, cfg, base, n_steps=args.steps, seq=args.seq,
-            pool=pool, runner=disp, impl=args.impl, remat=args.remat,
-            base_dtype=quant,
-        )
+        if elastic:
+            # membership changes need replanning: run the same workload as
+            # an online trace through the adaptive loop, which subscribes
+            # to the dispatcher's join/drain feed
+            arrivals = [Arrival(0.0, c, args.steps) for c in configs]
+            records, osched = eng.run_online_local(
+                arrivals, cfg, base, n_steps=args.steps, seq=args.seq,
+                pool=pool, runner=disp,
+                probe_steps=min(4, args.steps),
+            )
+            makespan = osched.makespan
+        else:
+            # --impl/--remat ride the wire as a KernelPolicy with every
+            # segment, so each host worker runs the tier selected here
+            records, makespan = eng.run_local(
+                sched, configs, cfg, base, n_steps=args.steps, seq=args.seq,
+                pool=pool, runner=disp, impl=args.impl, remat=args.remat,
+                base_dtype=quant,
+            )
         elapsed = time.perf_counter() - t0
+        for t in timers:
+            t.cancel()
     result = disp.last_result
+    overlap = result.max_overlap() if result is not None else "n/a"
     print(f"{len(records)} job(s) in {elapsed:.1f}s wall "
           f"(makespan {makespan:.1f}s, peak overlap "
-          f"{result.max_overlap()}, {disp.n_restarts} worker restart(s))")
-    _drift_table(records, result.timings, args.seq)
+          f"{overlap}, {disp.n_restarts} worker restart(s))")
+    if elastic or args.heartbeat:
+        states = ", ".join(
+            f"host{h}={disp.host_state(h)}"
+            for h in range(len(disp.hosts))
+        )
+        print(f"membership: {states}")
+    if result is not None:
+        _drift_table(records, result.timings, args.seq)
     if args.profile_out:
         store.save(args.profile_out)
         print(f"saved profile to {args.profile_out}")
@@ -196,6 +253,23 @@ def main():
                     help="device units per simulated host; values > 1 route "
                          "through the dispatch tier even with --hosts 1 "
                          "(one subprocess host of that width)")
+    ap.add_argument("--host-classes", default=None,
+                    help="comma list tagging each host's hardware class "
+                         "(e.g. 'fast,fast,slow'); the adaptive engine "
+                         "learns per-class step-time ratios and places "
+                         "wide jobs on fast classes, narrow jobs on slow")
+    ap.add_argument("--heartbeat", type=float, default=0.0,
+                    help="heartbeat interval in seconds (0 = off): the "
+                         "dispatcher pings every worker, marks silent hosts "
+                         "SUSPECT then DEAD, and re-runs their segments")
+    ap.add_argument("--drain-after", type=float, default=None,
+                    help="gracefully drain the last host N seconds into the "
+                         "run (elastic demo; switches to the adaptive "
+                         "online execution path)")
+    ap.add_argument("--join-after", type=float, default=None,
+                    help="admit one extra host N seconds into the run "
+                         "(elastic demo; switches to the adaptive online "
+                         "execution path)")
     ap.add_argument("--fsdp", action="store_true")
     ap.add_argument("--seq-parallel", action="store_true")
     ap.add_argument("--pool", default=None, help="checkpoint pool dir")
@@ -266,6 +340,11 @@ def main():
                      "--devices-per-host for host width)")
         _run_multihost(args, cfg, configs, tracer)
         return
+    if (args.host_classes or args.heartbeat
+            or args.drain_after is not None or args.join_after is not None):
+        ap.error("--host-classes/--heartbeat/--drain-after/--join-after "
+                 "need the dispatch tier: pass --hosts N (or "
+                 "--devices-per-host > 1)")
 
     mesh_shape = None
     width = 1

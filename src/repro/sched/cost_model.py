@@ -115,6 +115,19 @@ class CostEstimator:
         """Whether this exact (pack shape, degree, seq) has been measured."""
         return False
 
+    # ---------------- heterogeneous fleets (class-blind by default) ---------
+
+    #: estimators that price per host class (extra ``host_class=`` kwarg on
+    #: iter_time/observe/observed/drift) advertise True; the engine only
+    #: passes class tags when this is set
+    class_aware = False
+
+    def class_ratio(self, host_class: str, d: Optional[int] = None) -> float:
+        """Measured slowdown of a host class vs this estimator's baseline
+        (1.0 = unknown/identical) — placement ranking for heterogeneous
+        fleets. Pure priors have no measurements: always 1.0."""
+        return 1.0
+
     # ---------------- simulation contract ----------------
 
     @property

@@ -46,7 +46,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.cluster.pool import pick_host_units
+from repro.cluster.pool import pick_class_units, pick_host_units
 from repro.configs.base import LoraConfig, ModelConfig
 from repro.sched.cost_model import CostEstimator
 from repro.sched.planner import Schedule, ScheduledJob, replan
@@ -955,6 +955,37 @@ class ExecutionEngine:
         est = self.cm
         runner = runner or ClusterRunner(tracer=self.tracer)
         executor, dpool = runner.executor, runner.device_pool
+        # -- heterogeneous / elastic fleet wiring (all optional) ------------
+        # A multihost runner advertises per-host class tags, live membership
+        # (join/drain events) and heartbeat states; local runners have none
+        # of these and every hook below degrades to the homogeneous loop.
+        class_aware = bool(getattr(est, "class_aware", False))
+        host_classes: Dict[int, str] = {}
+        for h, c in enumerate(getattr(runner, "host_classes", ()) or ()):
+            host_classes[h] = str(c)
+        host_state_fn = getattr(runner, "host_state", None)
+        hs = self.host_size
+
+        def unit_host(u: int) -> Optional[int]:
+            return u // hs if hs else None
+
+        def cls_of_units(units) -> str:
+            h = unit_host(units[0]) if units else None
+            return host_classes.get(h, "") if h is not None else ""
+
+        def est_kw(units) -> dict:
+            c = cls_of_units(units)
+            return {"host_class": c} if (class_aware and c) else {}
+
+        def host_suspect(h: Optional[int]) -> bool:
+            if h is None or host_state_fn is None:
+                return False
+            try:
+                return host_state_fn(h) == "SUSPECT"
+            except Exception:
+                return False
+
+        drained_units: set = set()
         # kernel policy: capture the CALLER's context-local default here —
         # the submit() workers below run on executor threads that never see
         # this context's vars, so the impl must cross as an explicit
@@ -985,7 +1016,9 @@ class ExecutionEngine:
         n_repacks = n_probes = n_reassign = n_f = 0
         next_job = itertools.count()
         tpe = (
-            ThreadPoolExecutor(max_workers=max(g, 1))
+            # 2x headroom: hosts admitted mid-run (add_host) raise the
+            # number of concurrently running segments beyond the initial g
+            ThreadPoolExecutor(max_workers=2 * max(g, 1))
             if runner.concurrent
             else None
         )
@@ -1008,7 +1041,7 @@ class ExecutionEngine:
             probe = (
                 pool is not None
                 and 0 < probe_steps < run_steps
-                and not est.observed(sel, degree, seq)
+                and not est.observed(sel, degree, seq, **est_kw(units))
             )
             steps_this = probe_steps if probe else run_steps
             seg = JobSegment(
@@ -1025,7 +1058,7 @@ class ExecutionEngine:
                 preempted=steps_this < run_steps,
                 units=units,
             )
-            pred = est.iter_time(sel, degree, seq)
+            pred = est.iter_time(sel, degree, seq, **est_kw(units))
             running[seg.job_id] = (seg, entries, pred, probe)
             if probe:
                 n_probes += 1
@@ -1100,13 +1133,65 @@ class ExecutionEngine:
                 picked.sort(key=lambda pe: -pe[0].degree)
             launched = set()
             for jp, entries in picked:
-                units = self._take_units(free_units, jp.degree)
+                units = take_units(jp.degree)
                 if units is None:
                     continue  # fragmented across hosts: retry on next event
                 submit(entries, jp.degree, units)
                 launched |= {e.cid for e in entries}
             pending[:] = [e for e in pending if e.cid not in launched]
             return bool(launched)
+
+        def take_units(degree: int) -> Optional[Tuple[int, ...]]:
+            """Class- and health-aware unit claim: wide jobs to the fastest
+            measured class, narrow jobs to the slowest, SUSPECT hosts last
+            (see ``pick_class_units``); plain ``_take_units`` when the fleet
+            is homogeneous/healthy-only."""
+            if hs is not None and (host_classes or host_state_fn is not None):
+                units = pick_class_units(
+                    sorted(free_units), degree, hs,
+                    class_of_host=lambda h: host_classes.get(h, ""),
+                    ratio_of_class=lambda c: est.class_ratio(c, degree),
+                    avoid_host=host_suspect,
+                )
+                if units is None:
+                    return None
+                for u in units:
+                    free_units.remove(u)
+                return units
+            return self._take_units(free_units, degree)
+
+        def on_membership(ev: dict) -> None:
+            # called from the dispatcher's announcing thread: queue it into
+            # the loop thread like any other real event
+            events.put((None, ev, None))
+
+        def handle_membership(ev: dict) -> None:
+            action, host = ev.get("action"), ev.get("host")
+            units = tuple(ev.get("units", ()))
+            if action == "join":
+                if hs is not None and len(units) != hs:
+                    raise ValueError(
+                        f"joining host {host} has {len(units)} units; this "
+                        f"engine plans uniform {hs}-unit hosts"
+                    )
+                host_classes[host] = str(ev.get("host_class", ""))
+                fresh = [
+                    u for u in units
+                    if u not in free_units and u not in drained_units
+                ]
+                free_units.extend(fresh)
+                free_units.sort()
+                tracer.instant(
+                    "engine.host_join", cat="engine", host=host,
+                    units=list(units), host_class=host_classes[host],
+                )
+            elif action == "drain":
+                drained_units.update(units)
+                free_units[:] = [u for u in free_units if u not in drained_units]
+                tracer.instant(
+                    "engine.host_drain", cat="engine", host=host,
+                    units=list(units),
+                )
 
         def on_completion(jid: int, rec):
             nonlocal n_reassign
@@ -1124,7 +1209,8 @@ class ExecutionEngine:
                 else float("nan")
             )
             if seg.run_steps > 0:
-                est.observe(sel, seg.degree, seq, measured)
+                est.observe(sel, seg.degree, seq, measured,
+                            **est_kw(seg.units))
             timing = SegmentTiming(
                 job_id=seg.job_id,
                 config_ids=seg.config_ids,
@@ -1148,21 +1234,47 @@ class ExecutionEngine:
             if drift != drift:
                 drift = 0.0
             if resumed:
-                if abs(drift) <= drift_threshold:
+                # straggler detection: a SUSPECT host (missing heartbeat
+                # deadlines) gets half the drift tolerance — work drifting
+                # there re-enters the replan path before the host dies
+                eff_threshold = drift_threshold * (
+                    0.5 if host_suspect(unit_host(seg.units[0])) else 1.0
+                )
+                on_drained = any(u in drained_units for u in seg.units)
+                if abs(drift) <= eff_threshold and not on_drained:
                     # plan confirmed within threshold: continue in place on
                     # the same units — no re-assignment, no planner churn
                     submit(resumed, seg.degree, seg.units)
                     return
-                # drifted beyond threshold: the residual goes back to the
-                # planner, which — now calibrated by this very measurement —
-                # re-assigns device units on the next replan
+                # drifted beyond threshold (or the host is draining): the
+                # residual goes back to the planner, which — now calibrated
+                # by this very measurement — re-assigns device units on the
+                # next replan
                 n_reassign += 1
                 pending.extend(resumed)
-            free_units.extend(seg.units)
+            free_units.extend(
+                u for u in seg.units if u not in drained_units
+            )
             free_units.sort()
 
+        subscribe = getattr(runner, "membership_subscribe", None)
+        unsubscribe = subscribe(on_membership) if callable(subscribe) else None
         try:
             while next_arr < len(order) or pending or running:
+                # membership (and any already-finished completion) events
+                # queued while this thread was elsewhere: apply them before
+                # replanning so the plan sees the current fleet
+                while True:
+                    try:
+                        jid, rec, err = events.get_nowait()
+                    except queue.Empty:
+                        break
+                    if err is not None:
+                        raise err
+                    if jid is None:
+                        handle_membership(rec)
+                    else:
+                        on_completion(jid, rec)
                 while (
                     next_arr < len(order)
                     and trace[order[next_arr]].time <= now() + _EPS
@@ -1194,7 +1306,10 @@ class ExecutionEngine:
                         continue  # the next arrival is due — admit it
                     if err is not None:
                         raise err
-                    on_completion(jid, rec)
+                    if jid is None:
+                        handle_membership(rec)
+                    else:
+                        on_completion(jid, rec)
                 elif pending and not launched:
                     raise self._unschedulable(len(pending))
                 elif not pending and next_arr < len(order):
@@ -1202,6 +1317,8 @@ class ExecutionEngine:
                         max(trace[order[next_arr]].time - now(), 0.0)
                     )
         finally:
+            if unsubscribe is not None:
+                unsubscribe()
             if tpe is not None:
                 tpe.shutdown(wait=True)
             root_cm.__exit__(None, None, None)

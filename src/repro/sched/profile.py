@@ -57,7 +57,7 @@ DEFAULT_ALPHA = 0.5
 # ExecutionEngine._run_adaptive and ROADMAP "Profile feedback loop")
 DEFAULT_DRIFT_THRESHOLD = 0.5
 
-_SCHEMA = 1
+_SCHEMA = 2  # 2: obs keys carry a host-class tag (schema-1 loads as "")
 
 
 @dataclass
@@ -73,11 +73,19 @@ class Observation:
 
 
 def obs_key(
-    model_name: str, configs: Sequence[LoraConfig], d: int, seq: int
-) -> Tuple[str, int, int, int, int, int]:
+    model_name: str,
+    configs: Sequence[LoraConfig],
+    d: int,
+    seq: int,
+    host_class: str = "",
+) -> Tuple[str, int, int, int, int, int, str]:
     """Observation key of one packed job: iteration time depends on the pack's
     *shape* — width, bucket rank, total batch — not on which adapters fill it
-    (hyperparameters are runtime args; same-shape packs share executables)."""
+    (hyperparameters are runtime args; same-shape packs share executables).
+    ``host_class`` is the hardware class tag of the host the pack ran on
+    ("" = unclassed / homogeneous fleet): the same shape on a different
+    hardware generation is a different measurement. The degree stays at
+    index 4 — :meth:`ObservationStore.update` keys its ratio ladder on it."""
     return (
         model_name,
         len(configs),
@@ -85,6 +93,7 @@ def obs_key(
         sum(c.batch_size for c in configs),
         d,
         seq,
+        host_class,
     )
 
 
@@ -100,8 +109,22 @@ class ObservationStore:
         self.alpha = alpha
         self._obs: Dict[Tuple, Observation] = {}
         self._ratio_by_degree: Dict[int, Observation] = {}
+        # heterogeneous fleets: calibration per host class, most-specific
+        # first — (class, degree) then class-wide. The class-blind ratios
+        # above still see every observation, so a homogeneous run ("" class
+        # everywhere) behaves exactly as before.
+        self._ratio_by_class: Dict[Tuple[str, int], Observation] = {}
+        self._ratio_class_any: Dict[str, Observation] = {}
         self._ratio: Optional[Observation] = None
         self._lock = threading.Lock()
+
+    @staticmethod
+    def _bump(table: Dict, key, r: float, alpha: float) -> None:
+        hit = table.get(key)
+        if hit is None:
+            table[key] = Observation(r)
+        else:
+            hit.update(r, alpha)
 
     # ---------------- updates / queries ----------------
 
@@ -115,11 +138,11 @@ class ObservationStore:
             if predicted_prior > 0.0:
                 r = measured / predicted_prior
                 d = int(key[4])
-                rd = self._ratio_by_degree.get(d)
-                if rd is None:
-                    self._ratio_by_degree[d] = Observation(r)
-                else:
-                    rd.update(r, self.alpha)
+                self._bump(self._ratio_by_degree, d, r, self.alpha)
+                cls = str(key[6]) if len(key) > 6 else ""
+                if cls:
+                    self._bump(self._ratio_by_class, (cls, d), r, self.alpha)
+                    self._bump(self._ratio_class_any, cls, r, self.alpha)
                 if self._ratio is None:
                     self._ratio = Observation(r)
                 else:
@@ -139,6 +162,20 @@ class ObservationStore:
                 rd = self._ratio_by_degree.get(d)
                 return rd.ewma if rd is not None else None
             return self._ratio.ewma if self._ratio is not None else None
+
+    def class_ratio(
+        self, host_class: str, d: Optional[int] = None
+    ) -> Optional[float]:
+        """Measured slowdown of ``host_class`` vs the prior: the
+        per-(class, degree) EWMA when ``d`` was observed on that class, else
+        the class-wide EWMA, else None (class never measured)."""
+        with self._lock:
+            if d is not None:
+                rc = self._ratio_by_class.get((host_class, d))
+                if rc is not None:
+                    return rc.ewma
+            ra = self._ratio_class_any.get(host_class)
+            return ra.ewma if ra is not None else None
 
     def __len__(self) -> int:
         with self._lock:
@@ -164,6 +201,14 @@ class ObservationStore:
                     str(d): {"ewma": o.ewma, "n": o.n}
                     for d, o in sorted(self._ratio_by_degree.items())
                 },
+                "ratio_by_class": [
+                    {"class": c, "degree": d, "ewma": o.ewma, "n": o.n}
+                    for (c, d), o in sorted(self._ratio_by_class.items())
+                ],
+                "ratio_class_any": {
+                    c: {"ewma": o.ewma, "n": o.n}
+                    for c, o in sorted(self._ratio_class_any.items())
+                },
                 "ratio": (
                     {"ewma": self._ratio.ewma, "n": self._ratio.n}
                     if self._ratio is not None
@@ -177,15 +222,25 @@ class ObservationStore:
 
     @classmethod
     def from_json(cls, blob: Dict) -> "ObservationStore":
-        if blob.get("schema") != _SCHEMA:
-            raise ValueError(f"unknown profile schema {blob.get('schema')!r}")
+        schema = blob.get("schema")
+        if schema not in (1, _SCHEMA):
+            raise ValueError(f"unknown profile schema {schema!r}")
         store = cls(alpha=float(blob.get("alpha", DEFAULT_ALPHA)))
         for row in blob.get("observations", []):
-            store._obs[tuple(row["key"])] = Observation(
-                float(row["ewma"]), int(row["n"])
-            )
+            key = tuple(row["key"])
+            if schema == 1:  # pre-class keys: tag as unclassed
+                key = key + ("",)
+            store._obs[key] = Observation(float(row["ewma"]), int(row["n"]))
         for d, row in blob.get("ratio_by_degree", {}).items():
             store._ratio_by_degree[int(d)] = Observation(
+                float(row["ewma"]), int(row["n"])
+            )
+        for row in blob.get("ratio_by_class", []):
+            store._ratio_by_class[(str(row["class"]), int(row["degree"]))] = (
+                Observation(float(row["ewma"]), int(row["n"]))
+            )
+        for c, row in blob.get("ratio_class_any", {}).items():
+            store._ratio_class_any[str(c)] = Observation(
                 float(row["ewma"]), int(row["n"])
             )
         if blob.get("ratio") is not None:
@@ -228,18 +283,43 @@ class ProfiledCostModel(CostEstimator):
             raise AttributeError(name)
         return getattr(self.prior, name)
 
-    def key(self, configs: Sequence[LoraConfig], d: int, seq: int) -> Tuple:
-        return obs_key(self.prior.cfg.name, configs, d, seq)
+    # the engine passes host_class= to time/feedback queries only when the
+    # estimator advertises it (plain CostModels stay class-blind)
+    class_aware = True
+
+    def key(
+        self, configs: Sequence[LoraConfig], d: int, seq: int,
+        host_class: str = "",
+    ) -> Tuple:
+        return obs_key(self.prior.cfg.name, configs, d, seq, host_class)
 
     # ---------------- time ----------------
 
-    def iter_time(self, configs: Sequence[LoraConfig], d: int, seq: int) -> float:
-        obs = self.store.get(self.key(configs, d, seq))
+    def iter_time(
+        self, configs: Sequence[LoraConfig], d: int, seq: int,
+        host_class: str = "",
+    ) -> float:
+        """Fallback ladder (module docstring), extended per host class:
+        exact key (with class) -> that class's measured ratio (per-degree,
+        then class-wide) -> the class-blind per-degree ratio -> prior."""
+        obs = self.store.get(self.key(configs, d, seq, host_class))
         if obs is not None:
             return obs.ewma
         prior_t = self.prior.iter_time(configs, d, seq)
+        if host_class:
+            cr = self.store.class_ratio(host_class, d)
+            if cr is not None:
+                return prior_t * cr
         ratio = self.store.ratio(d)
         return prior_t if ratio is None else prior_t * ratio
+
+    def class_ratio(self, host_class: str, d: Optional[int] = None) -> float:
+        """Measured slowdown of a host class vs the prior (1.0 when the
+        class is unmeasured or unclassed) — the engine's placement ranking."""
+        if not host_class:
+            return 1.0
+        r = self.store.class_ratio(host_class, d)
+        return 1.0 if r is None else r
 
     # ---------------- memory (always the prior) ----------------
 
@@ -257,15 +337,19 @@ class ProfiledCostModel(CostEstimator):
         d: int,
         seq: int,
         measured_iter_time: float,
+        host_class: str = "",
     ) -> None:
         self.store.update(
-            self.key(configs, d, seq),
+            self.key(configs, d, seq, host_class),
             measured_iter_time,
             self.prior.iter_time(configs, d, seq),
         )
 
-    def observed(self, configs: Sequence[LoraConfig], d: int, seq: int) -> bool:
-        return self.store.get(self.key(configs, d, seq)) is not None
+    def observed(
+        self, configs: Sequence[LoraConfig], d: int, seq: int,
+        host_class: str = "",
+    ) -> bool:
+        return self.store.get(self.key(configs, d, seq, host_class)) is not None
 
     def drift(
         self,
@@ -273,12 +357,13 @@ class ProfiledCostModel(CostEstimator):
         d: int,
         seq: int,
         measured_iter_time: float,
+        host_class: str = "",
     ) -> float:
         """Signed relative error of the *current* prediction against a fresh
         measurement: ``measured / predicted - 1``. Positive = the job runs
         slower than planned (starved / oversubscribed); negative = faster
         (over-provisioned)."""
-        pred = self.iter_time(configs, d, seq)
+        pred = self.iter_time(configs, d, seq, host_class)
         if pred <= 0.0:
             return 0.0
         return measured_iter_time / pred - 1.0

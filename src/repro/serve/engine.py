@@ -85,7 +85,13 @@ class ServeRequest:
     (the default) is greedy argmax — the engine's bit-exactness baseline —
     and any positive temperature switches that row to top-k/temperature
     sampling. Both are *runtime* values of the jitted sample step, so mixing
-    greedy and sampled rows in one batch never recompiles."""
+    greedy and sampled rows in one batch never recompiles.
+
+    ``deadline_ms`` is a wall-clock SLO measured from the moment the request
+    entered the engine's queue: a queued request already past it is rejected
+    before any prefill work (``error="deadline"``, zero tokens), and an
+    in-flight row that goes overdue retires as a *partial* result — tokens
+    emitted so far, pins released — with the same ``error`` marker."""
 
     request_id: int
     adapter_id: str
@@ -97,6 +103,7 @@ class ServeRequest:
     extra: Optional[dict] = None  # extra prefill batch fields (VLM frames..)
     temperature: float = 0.0  # 0.0 = greedy (bit-exactness baseline)
     top_k: int = 0  # 0 = full vocabulary (no top-k truncation)
+    deadline_ms: Optional[float] = None  # wall SLO from enqueue; None = none
 
 
 @dataclass
@@ -109,7 +116,9 @@ class ServeResult:
     point — the drain keeps serving every other request instead of raising
     mid-flight with active rows abandoned. ``tokens`` may also be shorter
     than ``max_new_tokens`` (with ``error`` None) when a ``max_steps`` bound
-    retired the row early — a partial result, not a failure."""
+    retired the row early — a partial result, not a failure. A blown
+    ``deadline_ms`` marks the result ``error="deadline"``: zero tokens if it
+    expired in the queue, the partial tokens if it expired in flight."""
 
     request_id: int
     adapter_id: str
@@ -699,6 +708,16 @@ class ServeEngine:
         self._enq_abs[req.request_id] = time.perf_counter()
         self.queue.append(req)
 
+    def _deadline_blown(self, req: ServeRequest) -> bool:
+        """Is ``req`` past its wall-clock SLO, measured from the instant it
+        entered the engine's queue (``submit()`` or trace arrival)?"""
+        if req.deadline_ms is None:
+            return False
+        enq = self._enq_abs.get(req.request_id)
+        if enq is None:
+            return False
+        return (time.perf_counter() - enq) * 1e3 > req.deadline_ms
+
     def _scale_for(self, req: ServeRequest, meta: dict) -> float:
         rank = req.rank if req.rank is not None else meta.get("rank")
         alpha = req.alpha if req.alpha is not None else meta.get("alpha")
@@ -897,7 +916,10 @@ class ServeEngine:
         a.prefill = None
         return True
 
-    def _retire(self, row: int, step: int, wall: float) -> ServeResult:
+    def _retire(
+        self, row: int, step: int, wall: float,
+        error: Optional[str] = None,
+    ) -> ServeResult:
         active = self._rows[row]
         assert active is not None
         self._rows[row] = None
@@ -927,6 +949,7 @@ class ServeEngine:
             finished_step=step,
             admitted_wall=active.admitted_wall,
             finished_wall=wall,
+            error=error,
         )
 
     # ---------------- the decode loop ---------------------------------------
@@ -982,6 +1005,23 @@ class ServeEngine:
             for row in range(self.rows):
                 while self._rows[row] is None and self.queue:
                     req = self.queue.popleft()
+                    if self._deadline_blown(req):
+                        # already overdue in the queue: no prefill is ever
+                        # spent on it — reject crisply, try the next one
+                        self._enq_abs.pop(req.request_id, None)
+                        stats.results.append(ServeResult(
+                            request_id=req.request_id,
+                            adapter_id=req.adapter_id,
+                            tokens=np.zeros((0,), np.int32),
+                            n_prompt=int(np.asarray(req.prompt).shape[0]),
+                            arrival=req.arrival,
+                            admitted_step=step,
+                            finished_step=step,
+                            admitted_wall=wall,
+                            finished_wall=wall,
+                            error="deadline",
+                        ))
+                        continue
                     rejected = self._admit(req, row, step, wall, stats)
                     if rejected is not None:
                         # row is still free — surface the rejection and try
@@ -1008,6 +1048,19 @@ class ServeEngine:
                         wall = time.perf_counter() - t0
                         stats.tokens_emitted += len(a.emitted)
                         stats.results.append(self._retire(row, step, wall))
+            # deadline SLO: an overdue in-flight row retires as a *partial*
+            # result — tokens emitted so far kept, pins released — exactly
+            # the bounded-drain (max_steps) early-exit contract; its row
+            # refills from the queue on the next pass
+            for row in range(self.rows):
+                a = self._rows[row]
+                if a is None or not self._deadline_blown(a.request):
+                    continue
+                wall = time.perf_counter() - t0
+                stats.tokens_emitted += len(a.emitted)
+                stats.results.append(
+                    self._retire(row, step, wall, error="deadline")
+                )
             active = [r for r in range(self.rows) if self._rows[r] is not None]
             if not active:
                 if self.queue:

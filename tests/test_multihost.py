@@ -325,6 +325,351 @@ def test_adaptive_engine_runs_over_dispatch_tier():
 
 
 # ---------------------------------------------------------------------------
+# Heartbeats, elastic membership, graceful drain (ISSUE 10). CI's chaos smoke
+# runs exactly this section: pytest -k "elastic or drain or heartbeat".
+# ---------------------------------------------------------------------------
+
+
+def _state_spy(disp):
+    """Record every membership transition deterministically (a sampler thread
+    could miss a short-lived state)."""
+    seen = []
+    orig = disp._set_host_state
+
+    def spy(host, state, **why):
+        seen.append((host, state, why.get("reason")))
+        orig(host, state, **why)
+
+    disp._set_host_state = spy
+    return seen
+
+
+def test_heartbeat_pongs_keep_host_alive():
+    from repro.obs import Tracer
+
+    made = []
+    tracer = Tracer()
+    with HostDispatcher(
+        [1], transport_factory=_fake_factory(made), tracer=tracer,
+        heartbeat_interval=0.02,
+    ) as disp:
+        disp.run(
+            [_seg(units=(0,))], {0: _cfg()}, {0: 3}, None, None,
+            seq=SEQ, pool=DictPool(),
+        )
+        deadline = time.perf_counter() + 2.0
+        while made[0].pings < 3 and time.perf_counter() < deadline:
+            time.sleep(0.01)
+    assert made[0].pings >= 3
+    assert disp.host_state(0) == "ALIVE"
+    assert disp.hosts_alive == 1
+    assert disp.n_restarts == 0
+    rtt = tracer.metrics.histogram("cluster.heartbeat_rtt").summary()
+    assert rtt["count"] >= 3 and rtt["max"] < 2.0
+
+
+def test_heartbeat_detects_hung_worker_and_recovers():
+    """A worker that wedges mid-segment (silent, but the process stays alive
+    — only silence distinguishes it) must not hang run(): the watchdog walks
+    it ALIVE -> SUSPECT -> DEAD, fails the in-flight segment, and the normal
+    restart path re-runs it on a fresh worker."""
+    made = []
+    factory = _fake_factory(
+        made, {0: {"hang_on": lambda idx, payload: idx == 0}}
+    )
+    with HostDispatcher(
+        [1], transport_factory=factory,
+        heartbeat_interval=0.02, heartbeat_timeout=0.04,
+        heartbeat_dead_after=2,
+    ) as disp:
+        seen = _state_spy(disp)
+        result = disp.run(
+            [_seg(units=(0,))], {0: _cfg()}, {0: 3}, None, None,
+            seq=SEQ, pool=DictPool(),
+        )
+    assert len(result.records) == 1
+    assert len(made) == 2  # hung original + respawn
+    assert made[0].error is None  # it wedged; it did not crash
+    assert disp.n_restarts == 1  # died with a segment in flight
+    # the *heartbeat* made the call (the pump alone cannot: the process
+    # stayed alive until the watchdog killed it)
+    reasons = {r for _, _, r in seen}
+    assert {"heartbeat_timeout", "heartbeat_expired"} <= reasons
+    states = [(h, s) for h, s, _ in seen]
+    assert (0, "SUSPECT") in states and (0, "DEAD") in states
+    assert states.index((0, "SUSPECT")) < states.index((0, "DEAD"))
+    assert disp.host_state(0) == "ALIVE"  # respawn rejoined the fleet
+
+
+def test_heartbeat_pong_recovers_suspect_host():
+    """One late pong un-suspects a host (misses reset; no restart burned)."""
+    from repro.cluster.multihost import HealthReply
+
+    made = []
+    with HostDispatcher(
+        [1], transport_factory=_fake_factory(made)
+    ) as disp:
+        disp.run(
+            [_seg(units=(0,))], {0: _cfg()}, {0: 3}, None, None,
+            seq=SEQ, pool=DictPool(),
+        )
+        disp._set_host_state(0, "SUSPECT", reason="test")
+        disp._hb_misses[0] = 2
+        disp._on_pong(0, HealthReply(
+            host=0, seq=7, t_send=time.perf_counter(), in_flight=0,
+        ))
+        assert disp.host_state(0) == "ALIVE"
+        assert disp._hb_misses[0] == 0
+    assert disp.n_restarts == 0
+
+
+def test_heartbeat_idle_death_burns_no_restart_credit():
+    """Regression (the idle-death accounting bug): a worker dying *between*
+    segments — spot reclaim while idle — must not burn a ``max_restarts``
+    credit; only in-flight deaths do (see
+    test_killed_worker_requeues_residual_through_preempt_path, which pins
+    the in-flight counterpart at n_restarts == 1)."""
+    made = []
+    with HostDispatcher(
+        [1], transport_factory=_fake_factory(made), max_restarts=0
+    ) as disp:
+        disp.run(
+            [_seg(units=(0,))], {0: _cfg()}, {0: 3}, None, None,
+            seq=SEQ, pool=DictPool(),
+        )
+        disp.kill_host(0)  # idle: nothing in flight
+        deadline = time.perf_counter() + 5.0
+        while not disp._workers[0].dead and time.perf_counter() < deadline:
+            time.sleep(0.01)
+        assert disp._workers[0].dead
+        # with max_restarts=0 an (incorrectly) burned credit would raise
+        # WorkerDied here instead of respawning
+        result = disp.run(
+            [_seg(job_id=1, units=(0,), start=1.0)], {0: _cfg()}, {0: 3},
+            None, None, seq=SEQ, pool=DictPool(),
+        )
+    assert disp.n_restarts == 0
+    assert len(made) == 2  # respawned, just not *charged*
+    assert len(result.records) == 1
+
+
+def _adaptive_over(disp, arrivals, *, pool=None, probe_steps=4):
+    from repro.sched.cost_model import A100_40G, CostModel
+    from repro.sched.engine import ExecutionEngine
+    from repro.sched.profile import ProfiledCostModel
+
+    prior = CostModel(get_config("qwen25-7b"), A100_40G)
+    prior.setup_time = 0.0
+    est = ProfiledCostModel(prior, drift_threshold=0.5)
+    eng = ExecutionEngine(est, disp.total_units, host_size=1)
+    return eng.run_online_local(
+        arrivals,
+        reduced(get_config("qwen25-7b")),
+        None,
+        n_steps=max(a.steps for a in arrivals),
+        seq=SEQ,
+        pool=pool if pool is not None else DictPool(),
+        runner=disp,
+        probe_steps=probe_steps,
+    )
+
+
+def _executed_steps(sched):
+    return sum(
+        min(sched.total_steps[cid] - s.start_steps[i], s.run_steps)
+        for s in sched.segments
+        for i, cid in enumerate(s.config_ids)
+    )
+
+
+def test_elastic_join_mid_run_engine_replans_onto_new_host():
+    """add_host() mid-run: the engine learns of the join through the
+    membership feed and replans onto the new host's units — both jobs
+    finish their exact budgets, and the joiner really ran work."""
+    from repro.sched.engine import Arrival
+
+    made = []
+    box = {}
+    joined = []
+
+    def on_run(idx, payload):
+        if idx == 0 and not joined:  # first segment lands -> a host joins
+            joined.append(box["disp"].add_host(1, host_class="fast"))
+
+    def factory(host_id, n_devices):
+        tr = FakeHostTransport(
+            host_id, n_devices, real_time=True, iter_scale=0.02,
+            on_run=on_run if host_id == 0 else None,
+        )
+        made.append(tr)
+        return tr
+
+    with HostDispatcher([1], transport_factory=factory) as disp:
+        box["disp"] = disp
+        # staggered so the jobs can't pack into one segment: the second
+        # arrives while the first trains, after the join — with host 0 busy
+        # the only place for it is the joiner
+        arrivals = [Arrival(0.0, _cfg(), 12),
+                    Arrival(0.05, _cfg(alpha=16.0), 12)]
+        records, sched = _adaptive_over(disp, arrivals)
+    assert joined == [1]
+    assert disp.total_units == 2
+    assert disp.host_classes == ("", "fast")
+    assert sorted(sched.completed) == [0, 1]
+    assert _executed_steps(sched) == 24
+    by_host = {tr.host_id for tr in made if tr.runs}
+    assert by_host == {0, 1}  # the joiner actually executed segments
+
+
+def test_graceful_drain_loses_zero_steps():
+    """drain_host() mid-run: in-flight work finishes (checkpoints land
+    through the normal success-atomic path), the residual migrates to the
+    surviving host at the exact step count, and the drained host's units
+    retire from the pool — zero steps lost, zero double-run."""
+    from repro.sched.engine import Arrival
+
+    made = []
+    box = {}
+    threads = []
+
+    def on_run(idx, payload):
+        if idx == 0 and not threads:  # host 1's first segment is in flight
+            t = threading.Thread(
+                target=lambda: box["disp"].drain_host(1, timeout=30)
+            )
+            t.start()
+            threads.append(t)
+
+    def factory(host_id, n_devices):
+        tr = FakeHostTransport(
+            host_id, n_devices, real_time=True, iter_scale=0.02,
+            on_run=on_run if host_id == 1 else None,
+        )
+        made.append(tr)
+        return tr
+
+    pool = DictPool()
+    with HostDispatcher([1, 1], transport_factory=factory) as disp:
+        box["disp"] = disp
+        # staggered so the jobs can't pack into one segment: the second
+        # lands on host 1 (host 0 is busy) and is the one drained mid-run
+        arrivals = [Arrival(0.0, _cfg(), 12),
+                    Arrival(0.05, _cfg(alpha=16.0), 12)]
+        records, sched = _adaptive_over(disp, arrivals, pool=pool)
+        for t in threads:
+            t.join(timeout=30)
+    assert threads and not threads[0].is_alive()  # drain completed
+    assert disp.host_state(1) == "DEAD"
+    assert disp.device_pool.retired == (1,)
+    assert sorted(sched.completed) == [0, 1]
+    assert _executed_steps(sched) == 24  # nothing lost, nothing doubled
+    tr1 = next(tr for tr in made if tr.host_id == 1)
+    assert len(tr1.runs) == 1  # nothing dispatched after the drain announce
+    # the drained host's job resumed elsewhere from its checkpointed steps
+    resumed_on_0 = [
+        aid for tr in made if tr.host_id == 0 for _, aid in tr.resumed
+    ]
+    assert "0001" in resumed_on_0
+    assert sorted(pool.adapters) == ["adapter_0000", "adapter_0001"]
+
+
+def test_drain_mid_death_checkpoint_writes_atomic():
+    """Satellite: a host killed *mid-drain* (segment in flight) must leave
+    the pool atomic — the killed attempt's writes never half-apply, and the
+    residual re-enters at the pre-drain step count (the respawned worker's
+    shipped state is asserted by the fake)."""
+    from repro.sched.engine import Arrival
+
+    made = []
+    box = {}
+
+    def die1(idx, payload):
+        if idx != 1:
+            return False
+        # the resumed continuation (start_steps=4) is in flight: start the
+        # drain, let the announce land, then die silently (SIGKILL)
+        t = threading.Thread(
+            target=lambda: box["disp"].drain_host(0, timeout=60)
+        )
+        t.start()
+        box["drain"] = t
+        time.sleep(0.05)
+        return True
+
+    def factory(host_id, n_devices):
+        tr = FakeHostTransport(host_id, n_devices, die_on=die1)
+        made.append(tr)
+        return tr
+
+    pool = DictPool()
+    with HostDispatcher([1], transport_factory=factory) as disp:
+        box["disp"] = disp
+        records, sched = _adaptive_over(
+            disp, [Arrival(0.0, _cfg(), 12)], pool=pool
+        )
+        box["drain"].join(timeout=60)
+    assert not box["drain"].is_alive()
+    assert disp.host_state(0) == "DEAD"
+    assert disp.n_restarts == 1  # the mid-drain kill was in flight
+    assert len(made) == 2
+    # atomicity: the killed attempt applied nothing — the retry resumed
+    # from the probe checkpoint (steps_done == 4), not a torn write
+    assert pool.states["0000"][1]["steps_done"] == 4
+    retry = made[1].runs[0]
+    assert retry["seg"].start_steps == (4,)
+    assert made[1].resumed == [(0, "0000")]
+    assert _executed_steps(sched) == 12
+    assert sorted(pool.adapters) == ["adapter_0000"]
+
+
+def test_elastic_pool_add_and_retire_units():
+    from repro.cluster.pool import DevicePool
+
+    p = DevicePool(devices=["d0", "d1"])
+    assert p.add_devices(["d2", "d3"]) == (2, 3)
+    assert p.total == 4 and p.free == 4
+    s = p.acquire_units([1])
+    # retire blocks until the unit is free, then removes it for good
+    done = threading.Event()
+
+    def retire():
+        p.retire_units([1], timeout=5.0)
+        done.set()
+
+    t = threading.Thread(target=retire)
+    t.start()
+    time.sleep(0.05)
+    assert not done.is_set()  # still busy -> retire waits
+    p.release(s)
+    t.join(timeout=5)
+    assert done.is_set() and p.retired == (1,)
+    with pytest.raises(RuntimeError, match="retired"):
+        p.acquire_units([1])
+    assert p.acquire_units([0, 2, 3]).units == (0, 2, 3)
+
+
+def test_elastic_class_aware_unit_pick():
+    """pick_class_units: wide jobs go to the fastest class, narrow jobs to
+    the slowest (keeping fast hosts open), SUSPECT hosts are last resort."""
+    from repro.cluster.pool import pick_class_units
+
+    classes = {0: "fast", 1: "fast", 2: "slow"}
+    ratios = {"fast": 1.0, "slow": 4.0}
+    kw = dict(
+        class_of_host=lambda h: classes[h],
+        ratio_of_class=lambda c: ratios[c],
+    )
+    free = [0, 1, 2, 3, 4, 5]  # hosts 0..2, 2 units each
+    assert pick_class_units(free, 2, 2, **kw) == (0, 1)  # wide -> fast
+    assert pick_class_units(free, 1, 2, **kw) == (4,)    # narrow -> slow
+    # suspect fast host: wide work flees to the healthy fast host
+    assert pick_class_units(
+        free, 2, 2, avoid_host=lambda h: h == 0, **kw
+    ) == (2, 3)
+    assert pick_class_units([0], 2, 2, **kw) is None  # nothing fits
+
+
+# ---------------------------------------------------------------------------
 # Real subprocesses (CPU-forced workers; CI's multihost matrix entry)
 # ---------------------------------------------------------------------------
 

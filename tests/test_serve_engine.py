@@ -431,3 +431,51 @@ def test_max_steps_retires_inflight_rows(world):
     stats2 = eng.serve()
     assert [r.request_id for r in stats2.results] == [2]
     assert len(stats2.results[0].tokens) == 10
+
+
+def test_deadline_rejects_overdue_queued_request(world):
+    """A queued request already past its deadline_ms is rejected before any
+    prefill is spent on it; everything else keeps serving."""
+    base, _, adapters = world
+    eng = _engine(base, adapters, rows=1)
+    eng.submit(ServeRequest(0, "ad0", _prompts(1)[0], max_new_tokens=3,
+                            deadline_ms=30.0))
+    time.sleep(0.06)  # the queued request expires before the drain starts
+    live = ServeRequest(1, "ad1", _prompts(1, seed=2)[0], max_new_tokens=3)
+    stats = eng.serve([live])
+    by_id = {r.request_id: r for r in stats.results}
+    assert by_id[0].error == "deadline"
+    assert len(by_id[0].tokens) == 0
+    assert by_id[1].error is None and len(by_id[1].tokens) == 3
+    # the reject happened at admission: no queue-wait/TTFT sample, no pin
+    assert stats.queue_wait.count == 1 and stats.ttft.count == 1
+    assert eng.slot_cache._pins == {}
+    assert 0 not in eng._enq_abs
+
+
+def test_deadline_retires_inflight_row_as_partial(world):
+    """A row that blows its deadline mid-flight retires as a partial result
+    (tokens so far, error="deadline") with its pins released — the same
+    contract as the max_steps bounded drain — and the row refills."""
+    base, _, adapters = world
+    eng = _engine(base, adapters, rows=2)
+    prompts = _prompts(3, seed=31)
+    reqs = [
+        # 1ms: survives the admission check (enqueue -> admit is the same
+        # drain pass) but is certainly overdue by the first in-flight check
+        ServeRequest(0, "ad0", prompts[0], max_new_tokens=10,
+                     deadline_ms=1.0),
+        ServeRequest(1, "ad1", prompts[1], max_new_tokens=3),
+        ServeRequest(2, "ad2", prompts[2], max_new_tokens=3),
+    ]
+    stats = eng.serve(reqs)
+    by_id = {r.request_id: r for r in stats.results}
+    assert by_id[0].error == "deadline"
+    assert 1 <= len(by_id[0].tokens) < 10  # partial, not dropped
+    for rid in (1, 2):
+        assert by_id[rid].error is None and len(by_id[rid].tokens) == 3
+    assert stats.tokens_emitted == sum(len(r.tokens) for r in stats.results)
+    # rows freed (request 2 reused the expired row), pins all released
+    assert all(r is None for r in eng._rows)
+    assert eng.slot_cache._pins == {}
+    assert eng._enq_abs == {}
